@@ -1,0 +1,19 @@
+"""Paper Fig. 8: execution time + area vs number of parallel KV blocks."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.analysis import hw_model as H
+
+
+def run():
+    for r in H.exec_time_model():
+        emit(f"fig8/blocks{r['blocks']}", 0.0,
+             f"cycles={r['cycles']:.0f};time_norm={r['time_norm']:.3f};"
+             f"speedup={r['speedup']:.2f}x;area_norm={r['area_norm']:.2f}x")
+    s8 = [r for r in H.exec_time_model() if r["blocks"] == 8][0]
+    emit("fig8/summary", 0.0,
+         f"speedup_at_8_blocks={s8['speedup']:.2f}x(paper ~6x)")
+
+
+if __name__ == "__main__":
+    run()

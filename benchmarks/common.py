@@ -1,0 +1,25 @@
+"""Benchmark harness helpers: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timeit(fn, *args, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall time per call in microseconds (CPU; jit-compiled fns)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,34 @@
+"""Paper Figs. 6/7 + Table IV: 28nm area/power model FA-2 vs H-FA."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.analysis import hw_model as H
+
+
+def run():
+    rows = H.savings_table()
+    for r in rows:
+        emit(f"fig7/area_power/d{r['d']}", 0.0,
+             f"fa2={r['fa2_area_mm2']:.2f}mm2;hfa={r['hfa_area_mm2']:.2f}mm2;"
+             f"area_saving={r['area_saving_%']:.1f}%;"
+             f"power_saving={r['power_saving_%']:.1f}%")
+    a = np.mean([r["area_saving_%"] for r in rows])
+    p = np.mean([r["power_saving_%"] for r in rows])
+    emit("fig7/average", 0.0,
+         f"area_saving={a:.1f}%(paper 26.5%);power_saving={p:.1f}%"
+         f"(paper 23.4%)")
+    dp = H.savings_table(ds=(32,))[0]["dp_area_saving_%"]
+    emit("fig6/datapath_only_d32", 0.0,
+         f"datapath_saving={dp:.1f}%(paper 36.1%)")
+    for r in H.throughput_table():
+        emit(f"tableIV/{r['config']}", 0.0,
+             f"area={r['area_mm2']:.2f}mm2(paper 1.14/3.34);"
+             f"power={r['power_w']:.2f}W(paper 0.22/0.62);"
+             f"bf16={r['bf16_tflops']:.3f}TFLOPs(paper 0.256/1.64);"
+             f"fix16={r['fix16_tops']:.2f}TOPs(paper 0.91/5.84)")
+
+
+if __name__ == "__main__":
+    run()

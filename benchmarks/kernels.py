@@ -1,0 +1,49 @@
+"""Kernel microbenchmarks: wall time of each attention implementation.
+
+CPU wall times (interpret-mode Pallas) are NOT TPU predictions - the
+roofline artifacts carry the performance story - but they verify the jnp
+paths are usable and give a relative-cost sanity signal.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.kernels import ops
+
+
+def run():
+    rng = np.random.default_rng(0)
+    b, lq, lkv, h, d = 1, 256, 512, 4, 64
+    q = jnp.asarray(rng.standard_normal((b, lq, h, d)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((b, lkv, h, d)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((b, lkv, h, d)), jnp.bfloat16)
+    gold = None
+    for impl in ("exact", "fa2", "fa2_pallas", "hfa_pallas"):
+        fn = jax.jit(functools.partial(ops.multihead_attention, impl=impl))
+        us = timeit(fn, q, k, v)
+        out = np.asarray(fn(q, k, v).astype(jnp.float32))
+        if gold is None:
+            gold = out
+            err = 0.0
+        else:
+            err = float(np.abs(out - gold).max())
+        emit(f"kernels/prefill/{impl}", us,
+             f"shape=({b}x{lq}x{lkv}x{h}x{d});max_err_vs_exact={err:.4f}")
+
+    qd = jnp.asarray(rng.standard_normal((4, 1, 8, 64)), jnp.bfloat16)
+    kc = jnp.asarray(rng.standard_normal((4, 2048, 2, 64)), jnp.bfloat16)
+    vc = jnp.asarray(rng.standard_normal((4, 2048, 2, 64)), jnp.bfloat16)
+    for impl in ("fa2", "fa2_pallas", "hfa_pallas"):
+        fn = jax.jit(functools.partial(ops.decode_attention, impl=impl,
+                                       kv_len=2000))
+        us = timeit(fn, qd, kc, vc)
+        emit(f"kernels/decode/{impl}", us, "cache=4x2048x2x64")
+
+
+if __name__ == "__main__":
+    run()

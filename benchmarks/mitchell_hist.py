@@ -1,0 +1,66 @@
+"""Paper Fig. 5: distribution of Mitchell-approximation inputs + error bound.
+
+Instruments a realistic H-FA attention run and records every input x on
+which Mitchell's log2(1 +- x) ~= +-x is applied: (a) 2^{-|A-B|} inside the
+LNS adds, (b) the BF16 mantissae of the V conversion (Eq. 18).  The paper
+observes the vast majority below 0.1 where E(x) < 0.02, with the hard
+bound max E(x) = 0.086 (paper rounds to 0.08).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import lns
+from repro.core.numerics import FRAC_ONE, LOG_ZERO, bf16_bits
+
+
+def collect_inputs(seed=0, b=2, h=2, lq=8, lkv=1024, d=64, scale=0.5):
+    """Re-run the streaming update capturing |A-B| per step."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((b, h, lq, d)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((b, h, lkv, d)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((b, h, lkv, d)), jnp.bfloat16)
+
+    # Mantissa inputs of the Blinn conversion:
+    mant = (np.asarray(bf16_bits(v)) & 0x7F) / 128.0
+
+    # |A-B| stream: patch lns_add to record (host-side replay, small sizes).
+    xs = []
+    orig = lns.lns_add
+
+    def spy(sa, ra, sb, rb, cfg=lns.DEFAULT):
+        d_raw = np.asarray(jnp.abs(ra - rb))
+        live = (np.asarray(ra) > LOG_ZERO) & (np.asarray(rb) > LOG_ZERO)
+        xs.append(2.0 ** (-(d_raw[live] / FRAC_ONE)))
+        return orig(sa, ra, sb, rb, cfg)
+
+    lns.lns_add = spy
+    try:
+        from repro.core import hfa
+        with jax.disable_jit():
+            hfa.hfa_attention(q[:1, :1, :2], k[:1, :1, :256],
+                              v[:1, :1, :256], scale=scale)
+    finally:
+        lns.lns_add = orig
+    adds = np.concatenate(xs) if xs else np.zeros(1)
+    return mant.ravel(), adds
+
+
+def run():
+    mant, adds = collect_inputs()
+    err_a = np.abs(np.log2(1 + adds) - adds)
+    err_m = np.abs(np.log2(1 + mant) - mant)
+    emit("fig5/mitchell_inputs/lns_adds", 0.0,
+         f"n={adds.size};frac_below_0.1={float((adds < 0.1).mean()):.3f};"
+         f"mean_E={err_a.mean():.4f};max_E={err_a.max():.4f};bound=0.0861")
+    emit("fig5/mitchell_inputs/v_mantissa", 0.0,
+         f"n={mant.size};frac_below_0.1={float((mant < 0.1).mean()):.3f};"
+         f"mean_E={err_m.mean():.4f};max_E={err_m.max():.4f};"
+         f"paper=majority<0.1,maxE~0.08")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,24 @@
+"""Roofline summary from the dry-run artifacts (EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.analysis import roofline
+
+
+def run():
+    rows = roofline.analyze()
+    ok = [r for r in rows if r["status"] == "ok"]
+    skipped = [r for r in rows if r["status"] == "skipped"]
+    errors = [r for r in rows if r["status"] not in ("ok", "skipped")]
+    emit("dryrun/summary", 0.0,
+         f"ok={len(ok)};skipped={len(skipped)};errors={len(errors)}")
+    for r in ok:
+        emit(f"roofline/{r['arch']}/{r['shape']}", 0.0,
+             f"dominant={r['dominant']};compute_s={r['compute_s']:.3f};"
+             f"memory_s={r['memory_s']:.3f};collective_s={r['collective_s']:.3f};"
+             f"useful_ratio={r['useful_ratio']:.2f};"
+             f"roofline_frac={r['roofline_fraction']*100:.1f}%")
+
+
+if __name__ == "__main__":
+    run()

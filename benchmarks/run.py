@@ -1,0 +1,45 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Mapping to the paper:
+
+  tableI_II/*   - LLM fidelity proxy (logit divergence FA-2 vs H-FA)
+  tableIII/*    - error-source decomposition (quant / Mitchell / PWL)
+  fig5/*        - Mitchell input distribution + error bound
+  fig6,fig7/*   - 28nm area/power savings model
+  fig8/*        - KV-block scaling (time/area)
+  tableIV/*     - accelerator throughput configs
+  kernels/*     - attention implementation microbenches
+  roofline/*    - dry-run derived roofline per (arch x shape)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import (accuracy, block_scaling, error_sources, hw_cost,
+                            kernels, mitchell_hist, roofline_bench)
+    modules = [
+        ("tableI_II", accuracy),
+        ("tableIII", error_sources),
+        ("fig5", mitchell_hist),
+        ("fig7+tableIV", hw_cost),
+        ("fig8", block_scaling),
+        ("kernels", kernels),
+        ("roofline", roofline_bench),
+    ]
+    failed = []
+    for name, mod in modules:
+        try:
+            mod.run()
+        except Exception:
+            failed.append(name)
+            print(f"{name}/ERROR,0.0,{traceback.format_exc().splitlines()[-1]}")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Roofline derivation + 28nm hardware cost models."""

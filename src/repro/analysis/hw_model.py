@@ -1,0 +1,206 @@
+"""28nm op-inventory cost model of the FA-2 vs H-FA accelerator datapaths.
+
+Offline reproduction of the paper's hardware evaluation (Figs. 6-8,
+Table IV): no synthesis tools are available, so we model each datapath as
+an inventory of arithmetic blocks with per-block 28nm area/energy
+constants.  The inventory follows the paper's architecture exactly:
+
+  FAU (Fig. 1/3): dot-product unit (BF16, shared by both designs), the
+  running-max/score-diff float logic (shared), then either
+    FA-2: 2 exp units + (2d+1) BF16 mult + (d+1) BF16 add + BF16 dividers
+    H-FA: 2 quant units + Blinn bias-subtract + per-lane FIX16 LNS adder
+          (2 adds, |A-B|, PWL mult+LUT+shift, final add) + LogDiv
+          (fixed-point subtract + bit-pack)
+  ACC (Fig. 2/4): the cross-block merge, same split.
+
+Constants are calibrated once against the paper's reported d=64 design
+point (Fig. 7: ~1.1 mm^2 with KV SRAM, 26.5%/23.4% average savings;
+Table IV throughput 0.256 BF16-TFLOPs / 0.91 FIX16-TOPs for H-FA-1-4 at
+500 MHz) and then *validated* at d=32 and d=128 - the cross-d trend is a
+model output, not an input.  SRAM (KV buffers, N=1024 rows) is identical
+for both designs, per the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# ---- 28nm per-op area (um^2) and energy (pJ/op) -------------------------
+# Calibrated once at the paper's d=64 design point (see module docstring).
+AREA = {
+    "bf16_mult": 450.0,
+    "bf16_add": 520.0,     # alignment + normalization dominate
+    "bf16_div": 2800.0,
+    "bf16_cmp": 180.0,
+    "exp_unit": 1500.0,    # range-reduce + PWL + shift, bf16
+    "int16_add": 70.0,
+    "int16_mult8": 240.0,  # 16x8 PWL slope multiplier
+    "barrel16": 95.0,
+    "lut_pwl": 95.0,       # 8-entry x 2 x 16b coefficients
+    "quant": 190.0,        # mult-by-log2e (const) + clamp + round
+    "bitpack": 20.0,
+    "reg_bit": 3.2,
+}
+ENERGY = {  # pJ per operation at 0.9V 28nm
+    "bf16_mult": 1.10,
+    "bf16_add": 0.95,
+    "bf16_div": 6.0,
+    "bf16_cmp": 0.25,
+    "exp_unit": 2.4,
+    "int16_add": 0.13,
+    "int16_mult8": 0.40,
+    "barrel16": 0.11,
+    "lut_pwl": 0.15,
+    "quant": 0.22,
+    "bitpack": 0.03,
+    "reg_bit": 0.0022,
+}
+SRAM_AREA_PER_KB = 1600.0      # um^2 (CACTI 22nm scaled to 28nm, paper flow)
+SRAM_PJ_PER_BIT = 0.055        # read energy
+FREQ = 500e6
+LEAKAGE_W_PER_MM2 = 0.018
+
+
+@dataclasses.dataclass
+class Inventory:
+    """counts of each op per FAU cycle (steady state, one key/cycle)."""
+    counts: dict[str, float]
+    reg_bits: float
+
+    def area_um2(self) -> float:
+        a = sum(AREA[k] * v for k, v in self.counts.items())
+        return a + AREA["reg_bit"] * self.reg_bits
+
+    def energy_pj_per_cycle(self, activity: float = 1.0) -> float:
+        e = sum(ENERGY[k] * v for k, v in self.counts.items())
+        return activity * (e + ENERGY["reg_bit"] * self.reg_bits)
+
+
+def shared_float_ops(d: int) -> dict[str, float]:
+    """Dot product + max/score-diff logic - identical in both designs."""
+    return {"bf16_mult": d, "bf16_add": d - 1 + 2, "bf16_cmp": 1}
+
+
+def fau_fa2(d: int) -> Inventory:
+    c = shared_float_ops(d)
+    c["exp_unit"] = c.get("exp_unit", 0) + 2
+    c["bf16_mult"] += 2 * (d + 1)      # o*alpha, v*beta (+ l lane)
+    c["bf16_add"] += (d + 1)
+    # Division happens once per query (d+1 divides over an N-cycle epoch):
+    # two time-multiplexed divider pipelines suffice physically.
+    c["bf16_div"] = 2
+    r = (d + 2) * 16 + 32              # o, l, m registers
+    return Inventory(c, r)
+
+
+def fau_hfa(d: int) -> Inventory:
+    c = shared_float_ops(d)
+    lanes = d + 1
+    c["quant"] = 2
+    c["int16_add"] = lanes * (1 + 2 + 2 + 1 + 1)  # blinn sub, A/B, |A-B|, corr, final
+    c["int16_mult8"] = lanes
+    c["barrel16"] = lanes + 2          # PWL shift + 2 const shifters
+    c["lut_pwl"] = lanes
+    c["bitpack"] = lanes * 2           # to/from LNS (V in, attn out)
+    r = lanes * 17 + 32
+    return Inventory(c, r)
+
+
+def acc_fa2(d: int) -> Inventory:
+    return Inventory({"exp_unit": 2, "bf16_mult": 2 * (d + 1),
+                      "bf16_add": (d + 1), "bf16_cmp": 1}, (d + 2) * 16)
+
+
+def acc_hfa(d: int) -> Inventory:
+    lanes = d + 1
+    return Inventory({"quant": 2, "int16_add": lanes * 6,
+                      "int16_mult8": lanes, "barrel16": lanes,
+                      "lut_pwl": lanes, "bf16_cmp": 1}, lanes * 17 + 16)
+
+
+def logdiv_hfa(d: int) -> Inventory:
+    return Inventory({"int16_add": d, "bitpack": d}, 0)
+
+
+def div_fa2(d: int) -> Inventory:
+    return Inventory({"bf16_div": d}, 0)
+
+
+def sram_kb(d: int, n_tokens: int = 1024) -> float:
+    return n_tokens * d * 2 * 2 / 1024.0   # K+V, bf16
+
+
+def accelerator(design: str, d: int, p_blocks: int = 4, n_q: int = 1):
+    """Total area (mm^2) / power (W) for p parallel KV blocks, n_q queries."""
+    if design == "fa2":
+        fau, acc, fin = fau_fa2(d), acc_fa2(d), div_fa2(d)
+    else:
+        fau, acc, fin = fau_hfa(d), acc_hfa(d), logdiv_hfa(d)
+    datapath = (fau.area_um2() * p_blocks + acc.area_um2() * p_blocks
+                + fin.area_um2()) * n_q
+    sram = sram_kb(d) * SRAM_AREA_PER_KB
+    area_mm2 = (datapath + sram) / 1e6
+
+    # Power: FAUs busy every cycle; ACC/div amortized over N/p-cycle epochs.
+    epoch = 1024 / p_blocks
+    dyn_pj = (fau.energy_pj_per_cycle() * p_blocks
+              + acc.energy_pj_per_cycle() * p_blocks / epoch * 4
+              + fin.energy_pj_per_cycle() / epoch) * n_q
+    sram_pj = d * 2 * 16 * SRAM_PJ_PER_BIT * p_blocks * n_q  # K+V rows/cycle
+    power_w = (dyn_pj + sram_pj) * 1e-12 * FREQ \
+        + LEAKAGE_W_PER_MM2 * area_mm2
+    return {"area_mm2": area_mm2, "power_w": power_w,
+            "datapath_mm2": datapath / 1e6, "sram_mm2": sram / 1e6}
+
+
+def savings_table(ds=(32, 64, 128), p_blocks: int = 4) -> list[dict]:
+    rows = []
+    for d in ds:
+        fa = accelerator("fa2", d, p_blocks)
+        hf = accelerator("hfa", d, p_blocks)
+        rows.append({
+            "d": d,
+            "fa2_area_mm2": fa["area_mm2"], "hfa_area_mm2": hf["area_mm2"],
+            "area_saving_%": 100 * (1 - hf["area_mm2"] / fa["area_mm2"]),
+            "dp_area_saving_%": 100 * (1 - hf["datapath_mm2"]
+                                       / fa["datapath_mm2"]),
+            "fa2_power_w": fa["power_w"], "hfa_power_w": hf["power_w"],
+            "power_saving_%": 100 * (1 - hf["power_w"] / fa["power_w"]),
+        })
+    return rows
+
+
+def exec_time_model(n_tokens: int = 1024, d: int = 64,
+                    blocks=(1, 2, 4, 8)) -> list[dict]:
+    """Fig. 8: normalized execution time + area vs parallel KV blocks."""
+    lat = {32: 19, 64: 20, 128: 21}.get(d, 20)
+    base = None
+    rows = []
+    for p in blocks:
+        cycles = n_tokens / p + lat + 5 * (p - 1)   # ACC pipeline merge
+        area = accelerator("hfa", d, p)["area_mm2"]
+        if base is None:
+            base = (cycles, area)
+        rows.append({"blocks": p, "cycles": cycles,
+                     "time_norm": cycles / base[0],
+                     "speedup": base[0] / cycles,
+                     "area_mm2": area, "area_norm": area / base[1]})
+    return rows
+
+
+def throughput_table() -> list[dict]:
+    """Table IV: H-FA-1-4 and H-FA-4-4 configs."""
+    rows = []
+    for name, n_q, p in (("H-FA-1-4", 1, 4), ("H-FA-4-4", 4, 4)):
+        d = 64
+        acc = accelerator("hfa", d, p, n_q)
+        bf16_ops = (2 * d + 3) * p * n_q * FREQ            # dot + max/diffs
+        fix_ops = (7 * (d + 1)) * p * n_q * FREQ            # LNS lanes
+        rows.append({
+            "config": name, "area_mm2": acc["area_mm2"],
+            "power_w": acc["power_w"],
+            "bf16_tflops": bf16_ops / 1e12,
+            "fix16_tops": fix_ops / 1e12,
+            "energy_eff_tops_w": (bf16_ops + fix_ops) / 1e12 / acc["power_w"],
+            "area_eff_tops_mm2": (bf16_ops + fix_ops) / 1e12 / acc["area_mm2"],
+        })
+    return rows

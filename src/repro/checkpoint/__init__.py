@@ -1,0 +1,3 @@
+"""Fault-tolerant checkpointing: atomic, async, elastic-reshard on restore."""
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    CheckpointManager, restore, save)

@@ -1,0 +1,26 @@
+"""internvl2-76b: VLM = InternViT frontend (STUB) + LLM backbone
+[arXiv:2404.16821; unverified].
+
+Per the task spec only the transformer BACKBONE is modeled; the vision
+frontend is a stub - ``input_specs()`` supplies precomputed patch
+embeddings of shape (batch, n_patches, d_model) that are concatenated in
+front of the token embeddings.
+"""
+from repro.configs.base import ModelConfig, register
+
+INTERNVL2_76B = register(ModelConfig(
+    name="internvl2-76b",
+    family="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=28672,
+    vocab_size=128256,
+    n_patches=256,
+    attn_impl="fa2",
+    param_dtype="bfloat16",
+    optimizer="adafactor",
+    microbatches=4,
+))

@@ -1,0 +1,32 @@
+"""jamba-1.5-large-398b: hybrid Mamba+attention 1:7, MoE 16e top-2
+[arXiv:2403.19887; hf].
+
+72 layers = 9 periods of 8; the attention layer sits at offset 4 of each
+period (Jamba places one attention layer per 8-layer block); MoE FFN every
+second layer.
+"""
+from repro.configs.base import ModelConfig, register
+
+JAMBA_1_5_LARGE_398B = register(ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=24576,
+    vocab_size=65536,
+    n_experts=16,
+    moe_top_k=2,
+    moe_every=2,
+    attn_every=8,
+    attn_offset=4,
+    m_expand=2,
+    m_headdim=64,
+    m_dstate=128,
+    attn_impl="fa2",
+    param_dtype="bfloat16",
+    optimizer="adafactor",   # ~400B params
+    microbatches=4,
+))

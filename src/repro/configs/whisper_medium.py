@@ -1,0 +1,29 @@
+"""whisper-medium: encoder-decoder audio transformer [arXiv:2212.04356;
+unverified].
+
+The conv frontend is a STUB per the task spec: ``input_specs()`` provides
+precomputed frame embeddings (batch, enc_seq, d_model).  24 encoder + 24
+decoder layers, LayerNorm + GELU, learned positions in the decoder,
+sinusoidal in the encoder.  Decode shapes exercise the decoder with a
+self-attention KV cache plus cross-attention to the encoder output.
+"""
+from repro.configs.base import ModelConfig, register
+
+WHISPER_MEDIUM = register(ModelConfig(
+    name="whisper-medium",
+    family="encdec",
+    n_layers=24,
+    n_enc_layers=24,
+    enc_seq=1500,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_head=64,
+    d_ff=4096,
+    vocab_size=51865,
+    pos_emb="learned",
+    norm_type="layernorm",
+    mlp_type="gelu",
+    attn_impl="fa2",
+    param_dtype="bfloat16",
+))

@@ -1,0 +1,2 @@
+"""Core H-FA contribution: LNS datapath + hybrid float/log FlashAttention."""
+from repro.core import hfa, lns, numerics, reference  # noqa: F401

@@ -1,0 +1,212 @@
+"""Bit-accurate H-FA attention emulation (paper Sec. IV-V).
+
+This is the datapath-faithful model of the proposed hardware: attention
+scores, running maxima and score differences in BFloat16 floating point;
+the fused (l, o) accumulation, cross-block ACC merging and the final
+normalization entirely in the FIX16 logarithmic domain of
+:mod:`repro.core.lns`.
+
+Public entry points:
+
+  * ``hfa_attention``            - full H-FA attention for a KV span
+                                   (streaming FAU, Alg. 2 + Eq. 14).
+  * ``hfa_partial``              - FAU partial triplet (m, sign, rawlog)
+                                   without the final LogDiv.
+  * ``acc_merge``                - log-domain ACC block merge (Eq. 16).
+  * ``hfa_blockparallel``        - Fig. 2: p parallel FAU blocks + cascaded
+                                   ACC merge + LogDiv.
+  * ``logdiv``                   - Eq. (15) + (22): o/l via fixed-point
+                                   subtraction, then back to BFloat16.
+
+The streaming state follows Eq. (12): O_i = [l_i, o_i] with V_i = [1, v_i],
+kept as (sign, raw) LNS tensors of width d+1.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lns
+from repro.core.numerics import LOG_ZERO, to_bf16
+
+NEG_INF = -1e30
+
+
+class HFAPartial(NamedTuple):
+    """Partial FAU state: float max + LNS fused accumulator O = [l, o]."""
+
+    m: jax.Array        # (..., Lq)       float32 (carries BF16 values)
+    sign: jax.Array     # (..., Lq, d+1)  int32 {0,1}
+    raw: jax.Array      # (..., Lq, d+1)  FIX16 rail (float32, integer-valued)
+
+
+def _empty_state(batch_shape: tuple[int, ...], d: int) -> HFAPartial:
+    return HFAPartial(
+        m=jnp.full(batch_shape, NEG_INF, jnp.float32),
+        sign=jnp.zeros(batch_shape + (d + 1,), jnp.int32),
+        raw=jnp.full(batch_shape + (d + 1,), float(LOG_ZERO), jnp.float32),
+    )
+
+
+def hfa_partial(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    scale: float | None = None,
+    mask: jax.Array | None = None,
+    cfg: lns.LNSConfig = lns.DEFAULT,
+    init: HFAPartial | None = None,
+    kv_offset: int = 0,
+) -> HFAPartial:
+    """Stream one KV span through the FAU (Alg. 2 with Eq. 14 updates).
+
+    Args:
+      q: (..., Lq, d) queries. k, v: (..., Lkv, d).
+      mask: optional (..., Lq, Lkv) boolean; masked keys are skipped exactly
+        (the hardware simply does not clock them in).
+      init: carry in a previous partial state (used by the streaming server).
+      kv_offset: global index of k[...,0,:] (for causal masks built here).
+    """
+    d = q.shape[-1]
+    scale_v = (1.0 / d ** 0.5) if scale is None else scale
+    lkv = k.shape[-2]
+    batch_shape = q.shape[:-2] + (q.shape[-2],)
+
+    state = init if init is not None else _empty_state(batch_shape, d)
+
+    # Scores for the whole span in BF16 (the FP half of the hybrid datapath).
+    s_all = jnp.einsum("...qd,...kd->...qk", q.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale_v
+    s_all = to_bf16(s_all).astype(jnp.float32)  # (..., Lq, Lkv)
+
+    if mask is None:
+        valid_all = jnp.ones(s_all.shape, bool)
+    else:
+        valid_all = jnp.broadcast_to(mask, s_all.shape)
+
+    # Move the key axis first for the streaming scan.
+    s_seq = jnp.moveaxis(s_all, -1, 0)            # (Lkv, ..., Lq)
+    valid_seq = jnp.moveaxis(valid_all, -1, 0)    # (Lkv, ..., Lq)
+    v_seq = jnp.moveaxis(v.astype(jnp.bfloat16), -2, 0)  # (Lkv, ..., d)
+
+    def body(carry: HFAPartial, inputs):
+        s_i, valid_i, v_i = inputs
+        m_prev, sgn_prev, raw_prev = carry
+
+        m_new = jnp.maximum(m_prev, s_i)
+        live = valid_i & (m_new > NEG_INF / 2)
+
+        dm = m_prev - m_new                     # <= 0, -inf on first hit
+        ds = s_i - m_new                        # <= 0
+        q_dm = lns.quant_scorediff(dm, cfg)     # Eq. (14b)
+        q_ds = lns.quant_scorediff(ds, cfg)     # Eq. (14c)
+
+        # A: rescaled previous accumulator.
+        a_raw = lns.clamp_rail(raw_prev + q_dm[..., None])
+        # Rescaling zero stays zero.
+        a_raw = jnp.where(raw_prev <= LOG_ZERO, float(LOG_ZERO), a_raw)
+
+        # B: incoming V_i = [1, v_i] in LNS plus the exp term (Eq. 14c).
+        ones = jnp.ones(v_i.shape[:-1] + (1,), v_i.dtype)
+        v_ext = jnp.concatenate([ones, v_i], axis=-1)      # (..., d+1)
+        sgn_v, raw_v = lns.lns_from_bf16(v_ext, cfg)
+        # Broadcast over the query axis: v_ext is (..., d+1) -> (..., 1, d+1)
+        sgn_v = sgn_v[..., None, :]
+        raw_v = raw_v[..., None, :]
+        b_raw = lns.clamp_rail(raw_v + q_ds[..., None])
+        b_raw = jnp.where(raw_v <= LOG_ZERO, float(LOG_ZERO), b_raw)
+        sgn_b = jnp.broadcast_to(sgn_v, sgn_prev.shape)
+        b_raw = jnp.broadcast_to(b_raw, raw_prev.shape)
+
+        sgn_new, raw_new = lns.lns_add(sgn_prev, a_raw, sgn_b, b_raw, cfg)
+
+        keep = ~live
+        m_out = jnp.where(keep, m_prev, m_new)
+        sgn_out = jnp.where(keep[..., None], sgn_prev, sgn_new)
+        raw_out = jnp.where(keep[..., None], raw_prev, raw_new)
+        return HFAPartial(m_out, sgn_out, raw_out), None
+
+    state, _ = jax.lax.scan(body, state, (s_seq, valid_seq, v_seq))
+    return state
+
+
+def logdiv(state: HFAPartial, cfg: lns.LNSConfig = lns.DEFAULT) -> jax.Array:
+    """Eq. (15)+(22): attention = o_N / l_N as LNS subtraction -> BFloat16."""
+    raw_l = state.raw[..., :1]
+    sgn_l = state.sign[..., :1]
+    raw_o = state.raw[..., 1:]
+    sgn_o = state.sign[..., 1:]
+    raw_attn = lns.clamp_rail(raw_o - raw_l)
+    sgn_attn = jnp.bitwise_xor(sgn_o, sgn_l)
+    empty = (raw_l <= LOG_ZERO) | (raw_o <= LOG_ZERO)
+    raw_attn = jnp.where(empty, float(LOG_ZERO), raw_attn)
+    return lns.lns_to_bf16(sgn_attn, raw_attn, cfg)
+
+
+def acc_merge(a: HFAPartial, b: HFAPartial,
+              cfg: lns.LNSConfig = lns.DEFAULT) -> HFAPartial:
+    """Eq. (16): log-domain ACC merge of two partial FAU triplets."""
+    m_n = jnp.maximum(a.m, b.m)
+    q_da = lns.quant_scorediff(a.m - m_n, cfg)
+    q_db = lns.quant_scorediff(b.m - m_n, cfg)
+    a_raw = lns.clamp_rail(a.raw + q_da[..., None])
+    a_raw = jnp.where(a.raw <= LOG_ZERO, float(LOG_ZERO), a_raw)
+    b_raw = lns.clamp_rail(b.raw + q_db[..., None])
+    b_raw = jnp.where(b.raw <= LOG_ZERO, float(LOG_ZERO), b_raw)
+    sgn, raw = lns.lns_add(a.sign, a_raw, b.sign, b_raw, cfg)
+    # If one side never saw a key its m is -inf; max() recovers the other.
+    return HFAPartial(m_n, sgn, raw)
+
+
+def hfa_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = False,
+    scale: float | None = None,
+    cfg: lns.LNSConfig = lns.DEFAULT,
+) -> jax.Array:
+    """Full H-FA attention for one KV span (single FAU)."""
+    mask = None
+    if causal:
+        lq, lkv = q.shape[-2], k.shape[-2]
+        qi = jnp.arange(lq)[:, None]
+        kj = jnp.arange(lkv)[None, :]
+        mask = kj <= qi + (lkv - lq)
+    state = hfa_partial(q, k, v, scale=scale, mask=mask, cfg=cfg)
+    return logdiv(state, cfg)
+
+
+def hfa_blockparallel(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    num_blocks: int,
+    causal: bool = False,
+    scale: float | None = None,
+    cfg: lns.LNSConfig = lns.DEFAULT,
+) -> jax.Array:
+    """Fig. 2: p parallel FAU blocks + cascaded log-domain ACC merge."""
+    lkv = k.shape[-2]
+    assert lkv % num_blocks == 0, (lkv, num_blocks)
+    span = lkv // num_blocks
+    lq = q.shape[-2]
+    parts = []
+    for i in range(num_blocks):
+        sl = slice(i * span, (i + 1) * span)
+        mask = None
+        if causal:
+            qi = jnp.arange(lq)[:, None]
+            kj = jnp.arange(i * span, (i + 1) * span)[None, :]
+            mask = kj <= qi + (lkv - lq)
+        parts.append(hfa_partial(q, k[..., sl, :], v[..., sl, :],
+                                 scale=scale, mask=mask, cfg=cfg))
+    acc = parts[0]
+    for p in parts[1:]:
+        acc = acc_merge(acc, p, cfg)
+    return logdiv(acc, cfg)

@@ -1,0 +1,303 @@
+"""FIX16 logarithmic-number-system datapath from the H-FA paper (Sec. IV-V).
+
+Implements, bit-accurately and jit-safely:
+
+  * ``quant_scorediff``  - Eq. (14b/c): clamp natural-domain score
+    differences to [-15, 0], multiply by log2(e), quantize to FIX16 (9.7).
+  * ``blinn_log2``       - Eq. (18): float -> fixed-point log2 magnitude by
+    reinterpreting the BFloat16 exponent/mantissa bits (Blinn's trick),
+    i.e. log2|v| ~= E.M - bias.
+  * ``exp2_neg``         - Eq. (19): 2^{-D} = (2^{-f}) >> p via an 8-segment
+    piecewise-linear LUT (coefficients fitted offline, quantized Q1.15).
+  * ``lns_add``          - Eq. (10)+(17): sum of two signed log-domain
+    numbers using max + Mitchell's approximation
+    log2(1 +- 2^{-|A-B|}) ~= +- 2^{-|A-B|}.
+  * ``lns_to_bf16``      - Eq. (22): fixed-point log back to BFloat16,
+    |x| = 2^I * (1+F) (inverse Blinn / bit packing).
+
+LNS numbers are (sign, raw) pairs: ``sign`` in {0,1}, ``raw`` holds
+log2|x| * 2^7 on a float32 *rail*.  In the default configuration every
+value on the rail is integer-valued, so the emulation is bit-identical to a
+two's-complement int16 datapath (float32 is exact for |x| < 2^24); the
+Pallas datapath kernel implements the same spec in int32 and is tested for
+exact equality.  The float rail exists so the Table-III ablations
+(``LNSConfig``) can selectively disable each approximation:
+
+  exact_quant    - keep score diffs / corrections at full precision
+  exact_mitchell - true log2(1 +- x) instead of Mitchell's +-x, and true
+                   log2 instead of Blinn's bit trick
+  exact_pwl      - true 2^{-f} instead of the 8-segment PWL
+
+``raw <= LOG_ZERO`` encodes x == 0.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.numerics import (
+    BF16_BIAS,
+    FIX_MAX,
+    FIX_MIN,
+    FRAC_BITS,
+    FRAC_ONE,
+    LOG_ZERO,
+    bf16_bits,
+)
+
+LOG2E = float(np.log2(np.e))
+# Natural-domain score differences below -15 contribute e^-15 ~ 3e-7 and are
+# clamped (paper Sec. IV-B).
+DIFF_CLAMP_NAT = -15.0
+
+_NUM_SEGMENTS = 8
+_COEF_FRAC_BITS = 15  # Q1.15 LUT coefficients
+
+
+def _fit_pwl_exp2() -> tuple[np.ndarray, np.ndarray]:
+    """Least-squares fit of 2^{-f} on 8 uniform segments of [0, 1).
+
+    Mirrors the pwlf-style fitting used in the paper; coefficients are
+    quantized to Q1.15 so the hardware LUT stays pure fixed point.
+    """
+    slopes = np.zeros(_NUM_SEGMENTS)
+    intercepts = np.zeros(_NUM_SEGMENTS)
+    for seg in range(_NUM_SEGMENTS):
+        f = np.linspace(seg / _NUM_SEGMENTS, (seg + 1) / _NUM_SEGMENTS, 257)
+        y = 2.0 ** (-f)
+        a, b = np.polyfit(f, y, 1)
+        slopes[seg] = a
+        intercepts[seg] = b
+    scale = 1 << _COEF_FRAC_BITS
+    return (
+        np.round(slopes * scale).astype(np.float32),
+        np.round(intercepts * scale).astype(np.float32),
+    )
+
+
+_PWL_A, _PWL_B = _fit_pwl_exp2()
+PWL_SLOPES_Q15 = tuple(float(x) for x in _PWL_A)
+PWL_INTERCEPTS_Q15 = tuple(float(x) for x in _PWL_B)
+
+
+def _lut8(seg: jax.Array, table: tuple[float, ...]) -> jax.Array:
+    """8-way select chain with literal coefficients (the hardware LUT mux).
+
+    Uses scalar constants only, so it traces inside Pallas kernel bodies
+    without captured-array constants.
+    """
+    segf = seg.astype(jnp.float32)
+    out = jnp.full_like(segf, table[0])
+    for i in range(1, _NUM_SEGMENTS):
+        out = jnp.where(segf >= i, table[i], out)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class LNSConfig:
+    """Ablation switches for the three approximation sources (Table III)."""
+
+    exact_quant: bool = False
+    exact_mitchell: bool = False
+    exact_pwl: bool = False
+
+    @property
+    def tag(self) -> str:
+        parts = []
+        if self.exact_quant:
+            parts.append("exact-quant")
+        if self.exact_mitchell:
+            parts.append("exact-mitchell")
+        if self.exact_pwl:
+            parts.append("exact-pwl")
+        return "+".join(parts) if parts else "full"
+
+
+DEFAULT = LNSConfig()
+EXACT = LNSConfig(exact_quant=True, exact_mitchell=True, exact_pwl=True)
+
+
+def _round_rail(x: jax.Array, cfg: LNSConfig) -> jax.Array:
+    """Round a rail value to the 7-fraction-bit grid unless quant is ablated."""
+    if cfg.exact_quant:
+        return x
+    return jnp.round(x)
+
+
+def clamp_rail(raw: jax.Array) -> jax.Array:
+    """Saturate to the FIX16 range (works for float rail too)."""
+    return jnp.clip(raw, FIX_MIN, FIX_MAX)
+
+
+def quant_scorediff(diff_nat: jax.Array, cfg: LNSConfig = DEFAULT) -> jax.Array:
+    """Eq. (14b/c): quantize a non-positive natural-domain score diff.
+
+    Returns the rail value of ``diff * log2(e)``; handles -inf via the clamp.
+    """
+    diff = jnp.clip(diff_nat.astype(jnp.float32), DIFF_CLAMP_NAT, 0.0)
+    return _round_rail(diff * LOG2E * FRAC_ONE, cfg)
+
+
+def blinn_log2(v: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Eq. (18): BF16 -> (sign, rail log2 magnitude) via bit reinterpretation.
+
+    raw = (bits & 0x7FFF) - (bias << 7); v == 0 maps to LOG_ZERO.
+    """
+    bits = bf16_bits(v)
+    sign = jnp.right_shift(bits, 15) & 1
+    mag = jnp.bitwise_and(bits, 0x7FFF)
+    raw = (mag - (BF16_BIAS << FRAC_BITS)).astype(jnp.float32)
+    raw = jnp.where(mag == 0, float(LOG_ZERO), raw)
+    return sign.astype(jnp.int32), clamp_rail(raw)
+
+
+def exact_log2(v: jax.Array, cfg: LNSConfig = DEFAULT) -> tuple[jax.Array, jax.Array]:
+    """Ablation counterpart of blinn_log2 (true log2, then rail rounding)."""
+    vf = v.astype(jnp.float32)
+    sign = (vf < 0).astype(jnp.int32)
+    mag = jnp.abs(vf)
+    raw = _round_rail(jnp.log2(jnp.maximum(mag, 1e-38)) * FRAC_ONE, cfg)
+    raw = jnp.where(mag == 0, float(LOG_ZERO), raw)
+    return sign, clamp_rail(raw)
+
+
+def lns_from_bf16(v: jax.Array, cfg: LNSConfig = DEFAULT) -> tuple[jax.Array, jax.Array]:
+    """Float -> LNS. Blinn's trick *is* a Mitchell approximation (Eq. 18)."""
+    if cfg.exact_mitchell:
+        return exact_log2(v, cfg)
+    return blinn_log2(v)
+
+
+def pwl_exp2_frac(f_rail: jax.Array, cfg: LNSConfig = DEFAULT) -> jax.Array:
+    """2^{-f} for f = f_rail/128 in [0,1), on the fraction rail ([64,128]).
+
+    8-segment PWL LUT indexed by the top 3 fraction bits (Eq. 19).
+    """
+    if cfg.exact_pwl:
+        g = 2.0 ** (-(f_rail / FRAC_ONE)) * FRAC_ONE
+        return _round_rail(g, cfg)
+    seg = jnp.clip(jnp.floor(f_rail / (FRAC_ONE / _NUM_SEGMENTS)), 0,
+                   _NUM_SEGMENTS - 1)
+    a = _lut8(seg, PWL_SLOPES_Q15)
+    b = _lut8(seg, PWL_INTERCEPTS_Q15)
+    # g_q15 = a*f + b with f = f_rail/128; hardware: (a*f7 >> 7) + b.
+    g_q15 = jnp.floor(a * f_rail / FRAC_ONE) + b
+    # Round from Q1.15 down to the 7-bit fraction rail (round-half-up, as a
+    # truncating adder-with-carry-in would).
+    down = 1 << (_COEF_FRAC_BITS - FRAC_BITS)
+    g7 = jnp.floor((g_q15 + down // 2) / down)
+    if cfg.exact_quant:
+        return g_q15 / down
+    return g7
+
+
+def exp2_neg(raw_d: jax.Array, cfg: LNSConfig = DEFAULT) -> jax.Array:
+    """2^{-D} for non-negative rail D, result on the fraction rail.
+
+    Split D = p + f (integer/fraction): 2^{-D} = 2^{-f} >> p  (Eq. 19).
+    """
+    p = jnp.floor(raw_d / FRAC_ONE)
+    f = raw_d - p * FRAC_ONE
+    g = pwl_exp2_frac(f, cfg)
+    shifted = g * (2.0 ** (-jnp.minimum(p, 60.0)))
+    if cfg.exact_quant:
+        return shifted
+    # Hardware right shift truncates.
+    return jnp.floor(shifted)
+
+
+def lns_add(
+    sign_a: jax.Array,
+    raw_a: jax.Array,
+    sign_b: jax.Array,
+    raw_b: jax.Array,
+    cfg: LNSConfig = DEFAULT,
+) -> tuple[jax.Array, jax.Array]:
+    """Eq. (10) + (17): signed LNS addition c = a + b.
+
+    a = (-1)^{sign_a} 2^{raw_a/128}, likewise b. Returns (sign_c, raw_c).
+    """
+    a_is_zero = raw_a <= LOG_ZERO
+    b_is_zero = raw_b <= LOG_ZERO
+
+    big = jnp.maximum(raw_a, raw_b)
+    d = jnp.abs(raw_a - raw_b)
+    same_sign = sign_a == sign_b
+
+    if cfg.exact_mitchell:
+        x = 2.0 ** (-(d / FRAC_ONE))
+        corr_pos = _round_rail(jnp.log2(1.0 + x) * FRAC_ONE, cfg)
+        xm = jnp.minimum(x, 1.0 - 2.0 ** -24)
+        corr_neg = _round_rail(-jnp.log2(1.0 - xm) * FRAC_ONE, cfg)
+    else:
+        corr = exp2_neg(d, cfg)  # Mitchell: log2(1 +- 2^{-D}) ~= +- 2^{-D}
+        corr_pos = corr
+        corr_neg = corr
+
+    raw_c = jnp.where(same_sign, big + corr_pos, big - corr_neg)
+    # Sign follows the larger-magnitude operand; ties (B >= A) take B (14d).
+    sign_c = jnp.where(raw_a > raw_b, sign_a, sign_b)
+
+    # Zero-operand bypasses.
+    raw_c = jnp.where(a_is_zero, raw_b, raw_c)
+    sign_c = jnp.where(a_is_zero, sign_b, sign_c)
+    raw_c = jnp.where(b_is_zero, jnp.where(a_is_zero, float(LOG_ZERO), raw_a), raw_c)
+    sign_c = jnp.where(b_is_zero, jnp.where(a_is_zero, 0, sign_a), sign_c)
+
+    # Exact cancellation (same magnitude, opposite sign) -> zero.
+    cancel = (~same_sign) & (d == 0) & ~a_is_zero & ~b_is_zero
+    raw_c = jnp.where(cancel, float(LOG_ZERO), raw_c)
+    sign_c = jnp.where(cancel, 0, sign_c)
+
+    return sign_c.astype(jnp.int32), clamp_rail(raw_c)
+
+
+def lns_to_bf16(sign: jax.Array, raw: jax.Array,
+                cfg: LNSConfig = DEFAULT) -> jax.Array:
+    """Eq. (22): (sign, rail log2 magnitude) -> BFloat16.
+
+    |x| = 2^I * (1+F), the inverse Mitchell/Blinn reconstruction.  For
+    integer rail values this equals the hardware bit-packing
+    (sign | (I+bias)<<7 | F*128) exactly, including saturation semantics:
+    underflow flushes to zero, overflow saturates to the max finite BF16.
+    With ``exact_mitchell`` the true 2^{raw/128} is used instead (ablation).
+    """
+    i_part = jnp.floor(raw / FRAC_ONE)
+    f_part = raw / FRAC_ONE - i_part
+    is_zero = raw <= LOG_ZERO
+    underflow = (i_part + BF16_BIAS) <= 0
+    overflow = (i_part + BF16_BIAS) >= 255
+    i_safe = jnp.clip(i_part, 1 - BF16_BIAS, 254 - BF16_BIAS)
+    if cfg.exact_mitchell:
+        mag = jnp.exp2(i_safe + f_part)
+    else:
+        mag = jnp.exp2(i_safe) * (1.0 + f_part)
+    mag = jnp.where(underflow | is_zero, 0.0, mag)
+    max_finite = 2.0 ** 127 * (1.0 + 127.0 / 128.0)
+    mag = jnp.where(overflow & ~is_zero, max_finite, mag)
+    out = jnp.where(sign == 1, -mag, mag)
+    return out.astype(jnp.bfloat16)
+
+
+def lns_value_f32(sign: jax.Array, raw: jax.Array) -> jax.Array:
+    """Debug helper: value under *true* log semantics, 2^{raw/128}."""
+    mag = jnp.where(raw <= LOG_ZERO, 0.0, jnp.exp2(raw / FRAC_ONE))
+    return jnp.where(sign == 1, -mag, mag)
+
+
+def lns_value_hw(sign: jax.Array, raw: jax.Array) -> jax.Array:
+    """Value under *hardware* semantics, 2^I * (1+F) in float32.
+
+    This is the consistent way to read the rail: Blinn's forward conversion
+    (Eq. 18) and this inverse cancel exactly, so pure products/quotients are
+    exact in the datapath and only the LNS-add correction term carries
+    Mitchell error.
+    """
+    i_part = jnp.floor(raw / FRAC_ONE)
+    f_part = raw / FRAC_ONE - i_part
+    mag = jnp.exp2(i_part) * (1.0 + f_part)
+    mag = jnp.where(raw <= LOG_ZERO, 0.0, mag)
+    return jnp.where(sign == 1, -mag, mag)

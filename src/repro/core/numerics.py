@@ -1,0 +1,44 @@
+"""Shared float<->bit helpers used by the LNS datapath emulation.
+
+Everything here operates on jnp arrays and is jit-safe. The bit layouts
+follow IEEE BFloat16: 1 sign | 8 exponent (bias 127) | 7 mantissa bits.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BF16_BIAS = 127
+BF16_MANT_BITS = 7
+BF16_EXP_BITS = 8
+
+# FIX16 log-domain format from the paper: 9 integer bits, 7 fraction bits,
+# two's complement.  We carry the *raw* integer (value * 2^7) in int32 for
+# headroom and clamp to the int16 range at every datapath boundary.
+FRAC_BITS = 7
+FRAC_ONE = 1 << FRAC_BITS  # 128
+FIX_MAX = (1 << 15) - 1    # 32767
+FIX_MIN = -(1 << 15)       # -32768
+LOG_ZERO = FIX_MIN         # encoding of log2(0) = -inf in the datapath
+
+
+def bf16_bits(x: jax.Array) -> jax.Array:
+    """Bitcast a bfloat16 array to uint16 bit patterns (returned as int32)."""
+    x = x.astype(jnp.bfloat16)
+    return jax.lax.bitcast_convert_type(x, jnp.uint16).astype(jnp.int32)
+
+
+def bits_bf16(bits: jax.Array) -> jax.Array:
+    """Bitcast uint16 patterns (given as int32) back to bfloat16."""
+    b = jnp.bitwise_and(bits, 0xFFFF).astype(jnp.uint16)
+    return jax.lax.bitcast_convert_type(b, jnp.bfloat16)
+
+
+def to_bf16(x: jax.Array) -> jax.Array:
+    """Round to bfloat16 (round-to-nearest-even, what the HW datapath sees)."""
+    return x.astype(jnp.bfloat16)
+
+
+def clamp_fix16(raw: jax.Array) -> jax.Array:
+    """Saturate a raw fixed-point int32 value to the FIX16 range."""
+    return jnp.clip(raw, FIX_MIN, FIX_MAX)

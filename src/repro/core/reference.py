@@ -1,0 +1,235 @@
+"""Pure-jnp reference attention algorithms (paper Sec. II).
+
+These are the float oracles every other implementation is tested against:
+
+  * ``exact_attention``  - softmax(QK^T * scale) V in float32.
+  * ``lazy_attention``   - Alg. 1: two-pass lazy-softmax-division.
+  * ``fa2_attention``    - Alg. 2: FlashAttention-2 single-pass streaming
+    with delayed division (the paper's baseline 'FA-2' semantics).
+  * ``merge_blocks``     - Eq. (1): combine partial (m, l, o) triplets from
+    disjoint KV blocks.
+
+All take Q (..., Lq, d), K/V (..., Lkv, d) with any leading batch/head dims,
+and support an optional causal mask and explicit score scale.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+class PartialAttn(NamedTuple):
+    """Per-query partial attention state (m, l, o) for one KV block."""
+
+    m: jax.Array  # (..., Lq)        running max score
+    l: jax.Array  # (..., Lq)        running sum of exponentials
+    o: jax.Array  # (..., Lq, d)     unnormalized output accumulator
+
+
+def _scores(q: jax.Array, k: jax.Array, scale: float) -> jax.Array:
+    return jnp.einsum("...qd,...kd->...qk", q.astype(jnp.float32),
+                      k.astype(jnp.float32)) * scale
+
+
+def _causal_mask(lq: int, lkv: int, offset: int | None = None) -> jax.Array:
+    """Causal mask where query i attends to keys j <= i + offset."""
+    if offset is None:
+        offset = lkv - lq
+    qi = jnp.arange(lq)[:, None]
+    kj = jnp.arange(lkv)[None, :]
+    return kj <= qi + offset
+
+
+def exact_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = False,
+    scale: float | None = None,
+) -> jax.Array:
+    """Dense softmax attention in float32 (the gold reference)."""
+    d = q.shape[-1]
+    scale = (1.0 / d ** 0.5) if scale is None else scale
+    s = _scores(q, k, scale)
+    if causal:
+        mask = _causal_mask(q.shape[-2], k.shape[-2])
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("...qk,...kd->...qd", p, v.astype(jnp.float32))
+
+
+def lazy_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = False,
+    scale: float | None = None,
+) -> jax.Array:
+    """Alg. 1: two-pass attention with lazy softmax division."""
+    d = q.shape[-1]
+    scale = (1.0 / d ** 0.5) if scale is None else scale
+    s = _scores(q, k, scale)
+    if causal:
+        mask = _causal_mask(q.shape[-2], k.shape[-2])
+        s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)          # pass 1: global max
+    f = jnp.exp(s - m)                              # pass 2: accumulate
+    o = jnp.einsum("...qk,...kd->...qd", f, v.astype(jnp.float32))
+    ell = jnp.sum(f, axis=-1, keepdims=True)
+    return o / ell
+
+
+def fa2_partial(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    scale: float | None = None,
+    mask: jax.Array | None = None,
+    causal: bool = False,
+    kv_offset: int = 0,
+    q_offset: int | None = None,
+    block: int = 128,
+) -> PartialAttn:
+    """Alg. 2 inner loop over one KV span, returning the (m, l, o) triplet.
+
+    Streams KV in blocks of ``block`` with the online max/rescale updates
+    (lines 4-6 of Alg. 2).  Causality is applied per block from iota (never
+    materializing an Lq x Lkv mask - required for the 32k/500k shapes);
+    ``kv_offset`` is the global index of k[...,0,:].  ``mask``
+    ((..., Lq, Lkv) boolean) remains available for irregular patterns in
+    tests.
+    """
+    d = q.shape[-1]
+    scale = (1.0 / d ** 0.5) if scale is None else scale
+    lq, lkv = q.shape[-2], k.shape[-2]
+    qf = q.astype(jnp.float32)
+    batch_shape = q.shape[:-2] + (lq,)
+
+    nblk = (lkv + block - 1) // block
+    pad = nblk * block - lkv
+    if pad:
+        kp = jnp.pad(k, [(0, 0)] * (k.ndim - 2) + [(0, pad), (0, 0)])
+        vp = jnp.pad(v, [(0, 0)] * (v.ndim - 2) + [(0, pad), (0, 0)])
+        if mask is not None:
+            mask = jnp.pad(mask, [(0, 0)] * (mask.ndim - 1) + [(0, pad)])
+    else:
+        kp, vp = k, v
+    kv_valid_len = lkv
+
+    q_ids = None
+    if causal:
+        # Global query rows: default = suffix alignment within this span.
+        if q_offset is None:
+            q_offset = kv_offset + lkv - lq
+        q_ids = q_offset + jnp.arange(lq)
+
+    def body(carry, blk):
+        m_prev, l_prev, o_prev = carry
+        ib, kb, vb, maskb = blk
+        s = jnp.einsum("...qd,...kd->...qk", qf, kb.astype(jnp.float32)) * scale
+        kv_ids = kv_offset + ib * block + jnp.arange(block)
+        valid = kv_ids < (kv_offset + kv_valid_len)
+        if causal:
+            valid = valid[None, :] & (kv_ids[None, :] <= q_ids[:, None])
+        if maskb is not None:
+            valid = valid & maskb
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        # Guard fully-masked blocks: m stays NEG_INF, nothing accumulates.
+        alpha = jnp.exp(jnp.minimum(m_prev - m_new, 0.0))    # e^{m_{i-1}-m_i}
+        p = jnp.exp(s - m_new[..., None])                    # e^{s_i - m_i}
+        p = jnp.where(valid & (m_new != NEG_INF)[..., None], p, 0.0)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        o_new = (o_prev * alpha[..., None]
+                 + jnp.einsum("...qk,...kd->...qd", p, vb.astype(jnp.float32)))
+        return (m_new, l_new, o_new), None
+
+    def to_blocks(x):
+        shp = x.shape[:-2] + (nblk, block, x.shape[-1])
+        return jnp.moveaxis(x.reshape(shp), -3, 0)
+
+    kb = to_blocks(kp)
+    vb = to_blocks(vp)
+    if mask is not None:
+        mshp = mask.shape[:-1] + (nblk, block)
+        mb = jnp.moveaxis(mask.reshape(mshp), -2, 0)
+    else:
+        mb = None
+
+    init = (
+        jnp.full(batch_shape, NEG_INF, jnp.float32),
+        jnp.zeros(batch_shape, jnp.float32),
+        jnp.zeros(batch_shape + (d,), jnp.float32),
+    )
+    xs = (jnp.arange(nblk), kb, vb, mb) if mb is not None else \
+         (jnp.arange(nblk), kb, vb)
+    if mb is None:
+        (m, l, o), _ = jax.lax.scan(
+            lambda c, b: body(c, (b[0], b[1], b[2], None)), init, xs)
+    else:
+        (m, l, o), _ = jax.lax.scan(body, init, xs)
+    return PartialAttn(m, l, o)
+
+
+def fa2_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = False,
+    scale: float | None = None,
+    block: int = 128,
+) -> jax.Array:
+    """Alg. 2: FlashAttention-2 with delayed softmax division."""
+    part = fa2_partial(q, k, v, scale=scale, causal=causal, block=block)
+    return part.o / part.l[..., None]
+
+
+def merge_blocks(a: PartialAttn, b: PartialAttn) -> PartialAttn:
+    """Eq. (1): merge two partial triplets from disjoint KV blocks."""
+    m = jnp.maximum(a.m, b.m)
+    ea = jnp.exp(a.m - m)
+    eb = jnp.exp(b.m - m)
+    l = a.l * ea + b.l * eb
+    o = a.o * ea[..., None] + b.o * eb[..., None]
+    return PartialAttn(m, l, o)
+
+
+def merge_many(parts: list[PartialAttn]) -> PartialAttn:
+    """Cascaded ACC merge (Fig. 2 vertical pipeline)."""
+    acc = parts[0]
+    for p in parts[1:]:
+        acc = merge_blocks(acc, p)
+    return acc
+
+
+def blockparallel_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    num_blocks: int,
+    causal: bool = False,
+    scale: float | None = None,
+) -> jax.Array:
+    """Fig. 2: split KV into ``num_blocks`` FAU blocks, merge with ACC units."""
+    lkv = k.shape[-2]
+    assert lkv % num_blocks == 0, (lkv, num_blocks)
+    span = lkv // num_blocks
+    parts = []
+    for i in range(num_blocks):
+        sl = slice(i * span, (i + 1) * span)
+        # Global-row causality: queries are the suffix of the FULL span.
+        parts.append(fa2_partial(
+            q, k[..., sl, :], v[..., sl, :], scale=scale, causal=causal,
+            kv_offset=i * span, q_offset=lkv - q.shape[-2]))
+    merged = merge_many(parts)
+    return merged.o / merged.l[..., None]

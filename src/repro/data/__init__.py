@@ -1,0 +1,2 @@
+"""Data pipeline: deterministic, shardable, resumable synthetic LM data."""
+from repro.data.pipeline import DataPipeline  # noqa: F401

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the H-FA hot spots + jnp oracles.
+
+fa2.py           baseline FlashAttention-2 (float datapath, 'FA-2')
+hfa.py           hybrid float/log H-FA kernel (MXU-compatible adaptation)
+hfa_datapath.py  per-element FIX16 LNS FAU (datapath-faithful validation)
+decode.py        grouped flash-decode partials + log-domain ACC merge
+bitmath.py       bit-trick exp2/log2/PWL shared helpers
+ops.py           public jit'd wrappers (impl dispatch, GQA, padding)
+ref.py           pure-jnp oracles
+"""

@@ -1,0 +1,110 @@
+"""Bit-trick float math shared by the TPU H-FA kernels.
+
+These are the TPU-native adaptations of the paper's hardware blocks: on an
+ASIC they are wire reinterpretations + small adders; on a TPU VPU they are
+an integer bitcast + add/shift - still far cheaper than transcendental
+``exp``/``log`` or a vector divide.
+
+All functions are pure jnp and trace inside Pallas kernel bodies.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lns
+from repro.core.numerics import FRAC_BITS, FRAC_ONE
+
+F32_BIAS = 127
+F32_MANT = 23
+
+
+def exp2_int(p: jax.Array) -> jax.Array:
+    """Exact 2^p for integer-valued float/int p via exponent-field packing."""
+    pi = jnp.clip(p.astype(jnp.int32), -126, 127)
+    bits = jnp.left_shift(pi + F32_BIAS, F32_MANT)
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def log2_mitchell_f32(x: jax.Array) -> jax.Array:
+    """Blinn/Mitchell log2 of |x| for positive float32 x (Eq. 18 on f32 bits).
+
+    log2(x) ~= E + M (pseudo-log): one bitcast, one int subtract, one scale.
+    """
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+    mag = jnp.bitwise_and(bits, 0x7FFFFFFF)
+    return (mag - (F32_BIAS << F32_MANT)).astype(jnp.float32) * (2.0 ** -F32_MANT)
+
+
+def exp2_mitchell_f32(y: jax.Array) -> jax.Array:
+    """Inverse Mitchell 2^y ~= bit-pack of (I+bias, F) for float32 y."""
+    yi = jnp.floor(y)
+    f = y - yi
+    pi = jnp.clip(yi.astype(jnp.int32), -126, 127)
+    bits = jnp.left_shift(pi + F32_BIAS, F32_MANT) + jnp.round(
+        f * (1 << F32_MANT)).astype(jnp.int32)
+    out = jax.lax.bitcast_convert_type(bits, jnp.float32)
+    return jnp.where(y < -126.0, 0.0, out)
+
+
+def pwl_exp2_frac_f32(f: jax.Array) -> jax.Array:
+    """The paper's 8-segment PWL 2^{-f}, f in [0,1), on float values.
+
+    Uses the same Q1.15 LUT coefficients as the FIX16 datapath
+    (:mod:`repro.core.lns`); the select chain uses literal constants only
+    (cheap on the VPU - no gather needed).
+    """
+    seg = jnp.clip(jnp.floor(f * 8.0), 0, 7)
+    av = lns._lut8(seg, lns.PWL_SLOPES_Q15)
+    bv = lns._lut8(seg, lns.PWL_INTERCEPTS_Q15)
+    return (av * f + bv) * (2.0 ** -15)
+
+
+def _ste(hw: jax.Array, smooth: jax.Array) -> jax.Array:
+    """Straight-through estimator: forward = hw (bit-exact), grad = smooth.
+
+    The quantize/PWL/floor chain has zero derivative almost everywhere;
+    training through the H-FA numerics uses the standard QAT surrogate.
+    Inside a Pallas kernel body stop_gradient is a no-op, so the kernels
+    keep their exact forward semantics.
+    """
+    return smooth + jax.lax.stop_gradient(hw - smooth)
+
+
+def exp2_hfa_rail(rail: jax.Array) -> jax.Array:
+    """H-FA hardware 2^{rail/128} for a non-positive FIX16 rail value.
+
+    Splits into integer/fraction, PWL for the fractional 2^{-f}, exponent
+    packing for the 2^{-p} shift.  Quantizes the PWL output to the 7-bit
+    rail exactly like the FIX16 datapath, so this matches
+    ``lns.exp2_neg`` bit-for-bit on integer rails.  STE backward.
+    """
+    d = -rail  # non-negative
+    p = jnp.floor(d / FRAC_ONE)
+    f7 = d - p * FRAC_ONE
+    g7 = lns.pwl_exp2_frac(f7)          # fraction rail in [64, 128]
+    hw = (g7 * (1.0 / FRAC_ONE)) * exp2_int(-p)
+    return _ste(hw, jnp.exp2(rail * (1.0 / FRAC_ONE)))
+
+
+def quant_rail(diff_nat: jax.Array) -> jax.Array:
+    """quant[(.)*log2 e] to the FIX16 rail (Eq. 14b/c). STE backward."""
+    diff = jnp.clip(diff_nat, lns.DIFF_CLAMP_NAT, 0.0)
+    return _ste(jnp.round(diff * lns.LOG2E * FRAC_ONE),
+                diff * lns.LOG2E * FRAC_ONE)
+
+
+def recip_logdiv(ell: jax.Array) -> jax.Array:
+    """1/ell without a divider: Blinn log2, rail negate, inverse bit-pack.
+
+    This is the LogDiv unit's division-free normalization adapted to a
+    float accumulator: |1/ell| = 2^{-log2 ell}.  Uses the FIX16 rail
+    quantization so the error sources match the paper's LogDiv.
+    """
+    # Blinn forward on f32 bits, quantized to the 7-bit fraction rail.
+    rail = jnp.round(log2_mitchell_f32(ell) * FRAC_ONE)
+    neg = -rail
+    i_part = jnp.floor(neg / FRAC_ONE)
+    f_part = neg / FRAC_ONE - i_part
+    hw = exp2_int(i_part) * (1.0 + f_part)
+    return _ste(hw, 1.0 / ell)

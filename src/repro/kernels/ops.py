@@ -1,0 +1,237 @@
+"""Public jit'd attention ops: impl dispatch, GQA plumbing, padding.
+
+``multihead_attention`` is what the model layer calls.  It accepts
+(B, Lq, H, d) queries and (B, Lkv, Hkv, d) keys/values (Hkv | H), handles
+GQA head grouping, pads sequence lengths up to block multiples, dispatches
+to the chosen implementation and unpads.
+
+Implementations:
+  exact          dense softmax reference (f32)
+  fa2            blocked jnp FlashAttention-2 (Alg. 2)
+  hfa            bit-accurate H-FA emulation (slow; tests/small models)
+  fa2_pallas     baseline Pallas TPU kernel
+  hfa_pallas     hybrid float/log Pallas TPU kernel (the paper's H-FA)
+  hfa_datapath   per-element LNS Pallas kernel (validation only)
+
+On CPU the Pallas kernels run in interpret mode automatically.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hfa as core_hfa
+from repro.core import reference
+from repro.kernels import decode as decode_k
+from repro.kernels import fa2 as fa2_k
+from repro.kernels import hfa as hfa_k
+from repro.kernels import hfa_datapath as dp_k
+
+IMPLS = ("exact", "fa2", "hfa", "fa2_pallas", "hfa_pallas", "hfa_datapath")
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> tuple[jax.Array, int]:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+def _gqa_expand(k: jax.Array, hq: int) -> jax.Array:
+    """Repeat KV heads to match H query heads: (B, L, Hkv, d) -> (B, L, H, d)."""
+    hkv = k.shape[2]
+    if hkv == hq:
+        return k
+    assert hq % hkv == 0, (hq, hkv)
+    return jnp.repeat(k, hq // hkv, axis=2)
+
+
+# ---- differentiable Pallas attention ------------------------------------
+# The forward runs the Pallas kernel.  For fa2 the backward is the
+# handwritten Pallas FA-2 backward (kernels/fa2_bwd.py, using the saved
+# logsumexp residual).  For hfa the backward differentiates the
+# op-matched jnp oracle (ref.py) - the cotangent then follows the same
+# quantized numerics the kernel computed (STE, see bitmath).
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _pallas_attention(q3, k3, v3, impl, causal, block_q, block_kv,
+                      kv_len, q_offset):
+    from repro.kernels import fa2 as fa2_k
+    from repro.kernels import hfa as hfa_k
+    interpret = not _on_tpu()
+    fn = fa2_k.fa2_pallas if impl == "fa2_pallas" else hfa_k.hfa_pallas
+    return fn(q3, k3, v3, causal=causal, block_q=block_q, block_kv=block_kv,
+              kv_len=kv_len, q_offset=q_offset, interpret=interpret)
+
+
+def _oracle(q3, k3, v3, impl, causal, block_kv, kv_len, q_offset):
+    from repro.core import reference
+    from repro.kernels import ref as kref
+    km = k3[:, :kv_len]
+    vm = v3[:, :kv_len]
+    if impl == "fa2_pallas":
+        part = reference.fa2_partial(q3, km, vm, causal=causal,
+                                     q_offset=q_offset if causal else None,
+                                     block=block_kv)
+        return part.o / part.l[..., None]
+    return kref.ref_hfa_mxu_padded(q3, km, vm, causal=causal,
+                                   block_kv=block_kv, q_offset=q_offset)
+
+
+def _pallas_attention_fwd(q3, k3, v3, impl, causal, block_q, block_kv,
+                          kv_len, q_offset):
+    from repro.kernels import fa2 as fa2_k
+    interpret = not _on_tpu()
+    if impl == "fa2_pallas":
+        out, lse = fa2_k.fa2_pallas(
+            q3, k3, v3, causal=causal, block_q=block_q, block_kv=block_kv,
+            kv_len=kv_len, q_offset=q_offset, interpret=interpret,
+            return_lse=True)
+        return out, (q3, k3, v3, out, lse)
+    out = _pallas_attention(q3, k3, v3, impl, causal, block_q, block_kv,
+                            kv_len, q_offset)
+    return out, (q3, k3, v3, None, None)
+
+
+def _pallas_attention_bwd(impl, causal, block_q, block_kv, kv_len, q_offset,
+                          res, g):
+    q3, k3, v3, o3, lse = res
+    if impl == "fa2_pallas":
+        from repro.kernels import fa2_bwd
+        dq, dk, dv = fa2_bwd.fa2_backward(
+            q3, k3, v3, o3, g, lse, causal=causal,
+            block_q=block_q, block_kv=block_kv, kv_len=kv_len,
+            q_offset=q_offset, interpret=not _on_tpu())
+        return dq, dk, dv
+    _, vjp = jax.vjp(
+        lambda q, k, v: _oracle(q, k, v, impl, causal, block_kv, kv_len,
+                                q_offset), q3, k3, v3)
+    dq, dk, dv = vjp(g.astype(jnp.float32))
+    return (dq.astype(q3.dtype), dk.astype(k3.dtype), dv.astype(v3.dtype))
+
+
+_pallas_attention.defvjp(_pallas_attention_fwd, _pallas_attention_bwd)
+
+
+def multihead_attention(
+    q: jax.Array,   # (B, Lq, H, d)
+    k: jax.Array,   # (B, Lkv, Hkv, d)
+    v: jax.Array,   # (B, Lkv, Hkv, d)
+    *,
+    impl: str = "fa2",
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+) -> jax.Array:
+    """Multi-head attention returning (B, Lq, H, d) in q.dtype."""
+    assert impl in IMPLS, impl
+    b, lq, h, d = q.shape
+    _, lkv, hkv, _ = k.shape
+
+    k = _gqa_expand(k, h)
+    v = _gqa_expand(v, h)
+
+    # (B, H, L, d) layout for the core/batched refs.
+    qh = jnp.swapaxes(q, 1, 2)
+    kh = jnp.swapaxes(k, 1, 2)
+    vh = jnp.swapaxes(v, 1, 2)
+
+    if impl == "exact":
+        out = reference.exact_attention(qh, kh, vh, causal=causal, scale=scale)
+    elif impl == "fa2":
+        out = reference.fa2_attention(qh, kh, vh, causal=causal, scale=scale,
+                                      block=min(block_kv, lkv))
+    elif impl == "hfa":
+        out = core_hfa.hfa_attention(qh, kh, vh, causal=causal, scale=scale)
+    else:
+        interpret = not _on_tpu()
+        q3 = qh.reshape(b * h, lq, d)
+        k3 = kh.reshape(b * h, lkv, d)
+        v3 = vh.reshape(b * h, lkv, d)
+        if impl == "hfa_datapath":
+            out = dp_k.hfa_datapath_pallas(q3, k3, v3, causal=causal,
+                                           scale=scale, interpret=interpret)
+        else:
+            assert scale is None, "pallas impls use the default 1/sqrt(d)"
+            q3, lq0 = _pad_to(q3, 1, block_q)
+            k3, lkv0 = _pad_to(k3, 1, block_kv)
+            v3, _ = _pad_to(v3, 1, block_kv)
+            out = _pallas_attention(q3, k3, v3, impl, causal,
+                                    block_q, block_kv, lkv0, lkv0 - lq0)
+            out = out[:, :lq0]
+        out = out.reshape(b, h, lq, d)
+
+    return jnp.swapaxes(out, 1, 2).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,        # (B, 1, H, d) single new token
+    k_cache: jax.Array,  # (B, S, Hkv, d)
+    v_cache: jax.Array,  # (B, S, Hkv, d)
+    *,
+    impl: str = "fa2",
+    scale: float | None = None,
+    kv_len: jax.Array | int | None = None,
+    block_kv: int = 128,
+) -> jax.Array:
+    """Single-token decode attention against a KV cache.
+
+    Uses the grouped-GQA partial kernel + merge/LogDiv for Pallas impls;
+    jnp streaming otherwise.  ``kv_len`` masks unwritten cache slots (may
+    be a traced scalar for the jnp paths).
+    """
+    b, one, h, d = q.shape
+    assert one == 1
+    _, s_len, hkv, _ = k_cache.shape
+    g = h // hkv
+    use_hfa = impl.startswith("hfa")
+
+    if impl in ("fa2_pallas", "hfa_pallas") and isinstance(kv_len, (int, type(None))):
+        interpret = not _on_tpu()
+        kvl = s_len if kv_len is None else int(kv_len)
+        qg = q.reshape(b, h, d).reshape(b, hkv, g, d).reshape(b * hkv, g, d)
+        k3 = jnp.swapaxes(k_cache, 1, 2).reshape(b * hkv, s_len, d)
+        v3 = jnp.swapaxes(v_cache, 1, 2).reshape(b * hkv, s_len, d)
+        k3, _ = _pad_to(k3, 1, block_kv)
+        v3, _ = _pad_to(v3, 1, block_kv)
+        o, m, l = decode_k.decode_partial_pallas(
+            qg, k3, v3, scale=scale, block_kv=block_kv, kv_len=kvl,
+            use_hfa=use_hfa, interpret=interpret)
+        out = decode_k.finalize_decode(o, l, use_hfa=use_hfa)
+        return out.reshape(b, hkv, g, d).reshape(b, 1, h, d).astype(q.dtype)
+
+    # jnp path (supports traced kv_len): grouped-GQA masked attention.
+    # No head repeat and no f32 cache copy: the score/PV einsums read the
+    # bf16 ring directly with f32 accumulation - essential for the
+    # 32k/500k sequence-sharded caches.
+    scale_v = (1.0 / d ** 0.5) if scale is None else scale
+    qg = q.reshape(b, hkv, g, d)                        # (B, Hkv, G, d)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale_v
+    if kv_len is not None:
+        mask = jnp.arange(s_len) < kv_len
+        s = jnp.where(mask[None, None, None, :], s, -1e30)
+    if use_hfa:
+        from repro.kernels import bitmath
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = bitmath.exp2_hfa_rail(bitmath.quant_rail(s - m))
+        if kv_len is not None:
+            p = jnp.where(mask[None, None, None, :], p, 0.0)
+        l = jnp.sum(p, axis=-1)
+        o = jnp.einsum("bhgs,bshd->bhgd", p.astype(q.dtype), v_cache,
+                       preferred_element_type=jnp.float32)
+        out = decode_k.finalize_decode(o, l, use_hfa=True)
+    else:
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhgs,bshd->bhgd", p.astype(q.dtype), v_cache,
+                         preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)

@@ -1,0 +1,120 @@
+"""Pure-jnp oracles for every Pallas kernel (tested with assert_allclose).
+
+  * ``ref_fa2``          - float FlashAttention-2 == exact attention.
+  * ``ref_hfa_mxu``      - tile-level H-FA with identical op order /
+                           quantization to kernels/hfa.py (bit-matched).
+  * ``ref_decode_partial`` - partial (o~, m, l) triplet for one KV span.
+  * ``ref_hfa_datapath`` - the core.hfa bit-accurate emulation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hfa as core_hfa
+from repro.core import reference
+from repro.kernels import bitmath
+
+NEG_INF = -1e30
+
+
+def ref_fa2(q, k, v, *, causal=False, scale=None):
+    """Oracle for fa2.py: exact attention in f32."""
+    return reference.exact_attention(q, k, v, causal=causal, scale=scale)
+
+
+def ref_hfa_mxu(q, k, v, *, causal=False, scale=None, block_kv=128,
+                q_offset=None):
+    """Oracle for hfa.py: same tile walk, same quant/PWL/bit-pack ops.
+
+    Processes KV in blocks of ``block_kv`` sequentially (the kernel's
+    'arbitrary' grid axis), queries all at once (grid-parallel axes
+    commute).  KV length may be a non-multiple of ``block_kv`` (padded and
+    masked internally); ``q_offset`` overrides the causal row of query 0.
+    """
+    d = q.shape[-1]
+    scale_v = (1.0 / d ** 0.5) if scale is None else scale
+    lq, lkv = q.shape[-2], k.shape[-2]
+    nblk = (lkv + block_kv - 1) // block_kv
+    pad = nblk * block_kv - lkv
+    if pad:
+        widths = [(0, 0)] * (k.ndim - 2) + [(0, pad), (0, 0)]
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
+    if q_offset is None:
+        q_offset = lkv - lq
+
+    qf = q.astype(jnp.float32)
+    batch = q.shape[:-2]
+    m = jnp.full(batch + (lq,), NEG_INF, jnp.float32)
+    l = jnp.zeros(batch + (lq,), jnp.float32)
+    acc = jnp.zeros(batch + (lq, d), jnp.float32)
+
+    for ik in range(nblk):
+        sl = slice(ik * block_kv, (ik + 1) * block_kv)
+        kb = k[..., sl, :].astype(jnp.float32)
+        vb = v[..., sl, :].astype(jnp.float32)
+        s = jnp.einsum("...qd,...kd->...qk", qf, kb) * scale_v
+        s = s.astype(jnp.bfloat16).astype(jnp.float32)
+        kv_ids = ik * block_kv + jnp.arange(block_kv)[None, :]
+        mask = jnp.broadcast_to(kv_ids < lkv, s.shape)
+        if causal:
+            q_ids = q_offset + jnp.arange(lq)[:, None]
+            mask = mask & jnp.broadcast_to(kv_ids <= q_ids, s.shape)
+            if (ik * block_kv) > q_offset + lq - 1:
+                continue  # kernel skips blocks above the diagonal
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = bitmath.exp2_hfa_rail(
+            bitmath.quant_rail(jnp.minimum(m - m_new, 0.0)))
+        p = bitmath.exp2_hfa_rail(bitmath.quant_rail(s - m_new[..., None]))
+        p = jnp.where(mask & (m_new != NEG_INF)[..., None], p, 0.0)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("...qk,...kd->...qd", p, vb)
+        m = m_new
+
+    safe = jnp.where(l <= 0.0, 1.0, l)
+    recip = bitmath.recip_logdiv(safe)
+    recip = jnp.where(l <= 0.0, 0.0, recip)
+    return acc * recip[..., None]
+
+
+# alias used by the custom_vjp backward in ops.py
+ref_hfa_mxu_padded = ref_hfa_mxu
+
+
+def ref_decode_partial(q, k, v, *, scale=None, use_hfa=False, block_kv=128):
+    """Oracle for decode.py: streamed partial triplet over one KV span."""
+    d = q.shape[-1]
+    scale_v = (1.0 / d ** 0.5) if scale is None else scale
+    lkv = k.shape[-2]
+    nblk = lkv // block_kv
+    qf = q.astype(jnp.float32)
+    batch = q.shape[:-1]  # (..., G)
+    m = jnp.full(batch[:-1] + (q.shape[-2],), NEG_INF, jnp.float32)
+    l = jnp.zeros_like(m)
+    acc = jnp.zeros(m.shape + (d,), jnp.float32)
+    for ik in range(nblk):
+        sl = slice(ik * block_kv, (ik + 1) * block_kv)
+        kb = k[..., sl, :].astype(jnp.float32)
+        vb = v[..., sl, :].astype(jnp.float32)
+        s = jnp.einsum("...gd,...kd->...gk", qf, kb) * scale_v
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        if use_hfa:
+            alpha = bitmath.exp2_hfa_rail(
+                bitmath.quant_rail(jnp.minimum(m - m_new, 0.0)))
+            p = bitmath.exp2_hfa_rail(bitmath.quant_rail(s - m_new[..., None]))
+        else:
+            alpha = jnp.exp(jnp.minimum(m - m_new, 0.0))
+            p = jnp.exp(s - m_new[..., None])
+        p = jnp.where((m_new != NEG_INF)[..., None], p, 0.0)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("...gk,...kd->...gd", p, vb)
+        m = m_new
+    return acc, m, l
+
+
+def ref_hfa_datapath(q, k, v, *, causal=False, scale=None):
+    """Oracle for hfa_datapath.py: the bit-accurate core emulation."""
+    return core_hfa.hfa_attention(q, k, v, causal=causal, scale=scale)

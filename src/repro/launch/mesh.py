@@ -1,0 +1,27 @@
+"""Production mesh definitions.
+
+A *function*, not a module-level constant: importing this module never
+touches jax device state (required so smoke tests see 1 CPU device while
+the dry-run sees 512 placeholders).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2x16x16 = 512 chips across two pods.
+
+    Axes: "pod" (DP across pods, ICI/DCN boundary), "data" (DP + FSDP
+    weight sharding within a pod), "model" (TP/EP/SP).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(devices: int | None = None):
+    """Small mesh over whatever devices exist (tests: 8 fake CPU devices)."""
+    n = devices or len(jax.devices())
+    model = 2 if n % 2 == 0 else 1
+    return jax.make_mesh((n // model, model), ("data", "model"))

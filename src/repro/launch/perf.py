@@ -1,0 +1,135 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimb driver (EXPERIMENTS.md §Perf).
+
+Runs named variants of the three hillclimb cells, re-deriving the roofline
+terms per variant.  Each record lands in experiments/artifacts/perf/.
+
+  python -m repro.launch.perf --cell A --variant mb1
+  python -m repro.launch.perf --list
+"""
+import argparse
+import json
+import time
+import traceback
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
+                            "../../../experiments/artifacts/perf")
+
+# cell id -> (arch, shape)
+CELLS = {
+    "A": ("command-r-plus-104b", "train_4k"),    # most collective-bound
+    "B": ("qwen1.5-4b", "decode_32k"),           # worst cell: 25.7 GiB/dev,
+                                                 # memory-bound ring rewrite,
+                                                 # kv=20 unshardable heads
+    "C": ("command-r-plus-104b", "decode_32k"),  # paper-representative
+    "B2": ("qwen3-1.7b", "decode_32k"),          # earlier iteration kept
+}
+
+# variant name -> {"cfg": {...}, "rules": {...}}
+VARIANTS = {
+    "baseline": {},
+    # A: gradient-accumulation count scales the per-step FSDP weight
+    # all-gather volume linearly; fewer microbatches -> fewer gathers.
+    "mb1": {"cfg": {"microbatches": 1}},
+    "mb2": {"cfg": {"microbatches": 2}},
+    # A: no remat: trades recompute flops/bytes for activation memory.
+    "noremat_mb2": {"cfg": {"microbatches": 2, "remat": "none"}},
+    # A: remat without sequence parallelism (isolate SP's contribution).
+    "no_sp": {"rules": {"seq": None}},
+    # B: serving a model whose weights fit per-device: replicate over
+    # "data" instead of FSDP - removes the per-token weight all-gather.
+    "serve_repl_weights": {"rules": {"fsdp": None}},
+    # B/C: paper's ACC merge via shard_map: local ring write (no full-ring
+    # rewrite) + partial FAU + log-domain (m, l, o~) merge.
+    "shardmap_merge": {"cfg": {"serve_attn": "shardmap_merge"}},
+    # C: combine both serving optimizations where weights allow.
+    "shardmap_merge_repl": {"cfg": {"serve_attn": "shardmap_merge"},
+                            "rules": {"fsdp": None}},
+    # C: weight-stationary decode: replicate tiny activations over "data"
+    # so XLA psums (B,1,H,dh) partials instead of all-gathering the
+    # d-sharded weights (cache stays batch+seq sharded via kv_batch).
+    "serve_weight_stationary": {"rules": {"batch": None}},
+    "ws_shardmap": {"cfg": {"serve_attn": "shardmap_merge"},
+                    "rules": {"batch": None}},
+}
+
+
+def run_variant(cell: str, variant: str, save=True) -> dict:
+    import jax
+
+    from repro.analysis import roofline as rl
+    from repro.configs import get_config
+    from repro.launch import dryrun
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import SHAPES, build_cell
+
+    arch, shape = CELLS[cell]
+    cfg = get_config(arch)
+    mesh = make_production_mesh()
+    spec = VARIANTS[variant]
+    record = {"cell": cell, "arch": arch, "shape": shape, "variant": variant,
+              "spec": spec}
+    t0 = time.time()
+    try:
+        fn, args, in_sh, out_sh, meta = build_cell(cfg, shape, mesh,
+                                                   variant=spec)
+        with mesh:
+            compiled = jax.jit(fn, in_shardings=in_sh,
+                               out_shardings=out_sh).lower(*args).compile()
+        ma = compiled.memory_analysis()
+        record["memory_gib"] = round((ma.argument_size_in_bytes
+                                      + ma.output_size_in_bytes
+                                      + ma.temp_size_in_bytes) / 2**30, 2)
+        record["compile_seconds"] = round(time.time() - t0, 1)
+
+        # Probe-corrected cost for the variant.
+        vcfg = meta["cfg"]
+        probes = dryrun.cost_probes(vcfg, shape, mesh,
+                                    rules=spec.get("rules"))
+        per = probes["per_step"]
+        p2 = probes.get("probe_2group", {})
+        per = {k: max(v, p2.get(k, 0.0)) for k, v in per.items()}
+        record["per_step"] = per
+        record["terms"] = {
+            "compute_s": per.get("flops", 0.0) / rl.PEAK_FLOPS,
+            "memory_s": per.get("bytes accessed", 0.0) / rl.HBM_BW,
+            "collective_s": per.get("collective_bytes", 0.0) / rl.LINK_BW,
+        }
+        record["dominant"] = max(record["terms"], key=record["terms"].get)
+        mode, seq, batch = SHAPES[shape]
+        mf = rl.model_flops(vcfg, mode, seq, batch)
+        step = max(record["terms"].values())
+        record["roofline_fraction"] = (
+            mf / 256 / rl.PEAK_FLOPS / step if step else 0.0)
+        record["status"] = "ok"
+    except Exception:
+        record["status"] = "error"
+        record["error"] = traceback.format_exc()[-2000:]
+    if save:
+        os.makedirs(ARTIFACT_DIR, exist_ok=True)
+        with open(os.path.join(ARTIFACT_DIR,
+                               f"{cell}__{variant}.json"), "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=list(CELLS))
+    ap.add_argument("--variant", choices=list(VARIANTS))
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+    if args.list:
+        for f in sorted(os.listdir(ARTIFACT_DIR)):
+            r = json.load(open(os.path.join(ARTIFACT_DIR, f)))
+            print(f, r["status"], r.get("terms"), r.get("memory_gib"))
+        return
+    r = run_variant(args.cell, args.variant)
+    print(json.dumps({k: v for k, v in r.items() if k != "per_step"},
+                     indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

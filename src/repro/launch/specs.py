@@ -1,0 +1,205 @@
+"""ShapeDtypeStruct stand-ins + sharding-spec trees for every dry-run cell.
+
+``input_specs(cfg, shape_name)`` returns the abstract inputs for the step
+being lowered (train / prefill / decode), without allocating anything.
+``build_cell(cfg, shape_name, mesh)`` assembles (fn, args, in_shardings,
+out_shardings) ready for ``jax.jit(...).lower(...)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.model import build_model
+from repro.optim import build_optimizer
+from repro.optim.schedule import warmup_cosine
+from repro.parallel import sharding as sh
+from repro.runtime.trainer import make_train_step
+
+# shape id -> (mode, seq_len, global_batch)
+SHAPES: dict[str, tuple[str, int, int]] = {
+    "train_4k": ("train", 4_096, 256),
+    "prefill_32k": ("prefill", 32_768, 32),
+    "decode_32k": ("decode", 32_768, 128),
+    "long_500k": ("decode", 524_288, 1),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """long_500k only runs for sub-quadratic (SSM/hybrid) archs."""
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention arch: 500k dense decode skipped per "
+                       "task spec (no sub-quadratic attention claimed); see "
+                       "DESIGN.md §4")
+    return True, ""
+
+
+def cell_config(cfg: ModelConfig, shape_name: str) -> ModelConfig:
+    """Adjust max_seq (learned pos-emb tables, caches) to the cell shape."""
+    mode, seq, batch = SHAPES[shape_name]
+    return dataclasses.replace(cfg, max_seq=max(seq, cfg.max_seq))
+
+
+def _token_specs(cfg: ModelConfig, seq: int, batch: int) -> dict[str, Any]:
+    out: dict[str, Any] = {}
+    n_text = seq
+    if cfg.family == "vlm":
+        n_text = seq - cfg.n_patches
+        out["patches"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    out["tokens"] = jax.ShapeDtypeStruct((batch, n_text), jnp.int32)
+    return out
+
+
+def _batch_logical(batch_specs: dict[str, Any]) -> dict[str, Any]:
+    out = {}
+    for k, v in batch_specs.items():
+        if k == "tokens":
+            out[k] = ("batch", None)
+        else:
+            out[k] = ("batch", None, None)
+    return out
+
+
+def cache_logical_from_shapes(shapes: Any, cfg: ModelConfig, mesh) -> Any:
+    """Logical axes for a decode cache tree, chosen per leaf name/shape.
+
+    KV rings shard heads over "model" when divisible, otherwise the cache
+    *sequence* is sharded over "model" - the paper's multi-KV-block
+    parallel layout (partial attention per shard + online merge).
+    """
+    kv_heads_divisible = (cfg.n_kv_heads > 0
+                          and cfg.n_kv_heads % mesh.shape["model"] == 0)
+
+    def leaf(path, s):
+        name = str(getattr(path[-1], "key", path[-1]))
+        nd = len(s.shape)
+        if name in ("k", "v", "ck", "cv"):
+            core = (("kv_batch", None, "kv_heads", "head_dim")
+                    if kv_heads_divisible
+                    else ("kv_batch", "kv_seq", None, "head_dim"))
+            return ("layers",) * (nd - 4) + core
+        if name == "ssm":
+            return ("layers",) * (nd - 4) + ("kv_batch", "mamba_heads", None, None)
+        if name.startswith("conv_"):
+            return ("layers",) * (nd - 3) + ("kv_batch", None, "mamba_inner")
+        if name == "pos":
+            return ()
+        return (None,) * nd
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    return treedef.unflatten([leaf(p, s) for p, s in flat])
+
+
+def _shardings(mesh, logical_tree, shape_tree, rules):
+    specs = sh.tree_specs(logical_tree, shape_tree, rules, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(cfg: ModelConfig, shape_name: str, mesh, variant=None):
+    """Returns (fn, args_shapes, in_shardings, out_shardings, meta).
+
+    ``variant`` (perf hillclimb): {"cfg": {field: value}, "rules": {...}}
+    overrides applied on top of the baseline configuration.
+    """
+    mode, seq, batch = SHAPES[shape_name]
+    cfg = cell_config(cfg, shape_name)
+    rule_over = {}
+    if variant:
+        if variant.get("cfg"):
+            cfg = dataclasses.replace(cfg, **variant["cfg"])
+        rule_over = variant.get("rules", {})
+    model = build_model(cfg)
+    param_shapes, param_logical = model.shape_and_logical()
+    base_rules = sh.TRAIN_RULES if mode == "train" else sh.SERVE_RULES
+    active_rules = dict(base_rules, **rule_over)
+    sh.set_context(mesh, active_rules)
+
+    if mode == "train":
+        rules = dict(active_rules)
+        opt = build_optimizer(cfg, warmup_cosine(3e-4, 100, 10_000))
+        opt_shapes = jax.eval_shape(opt.init, param_shapes)
+        opt_logical = opt.state_logical(param_logical)
+        step = make_train_step(model, opt, microbatches=cfg.microbatches,
+                               unroll=cfg.unroll_microbatches)
+        batch_specs = _token_specs(cfg, seq, batch)
+        carry_shapes = {"params": param_shapes, "opt_state": opt_shapes}
+        carry_logical = {"params": param_logical, "opt_state": opt_logical}
+        carry_sh = _shardings(mesh, carry_logical, carry_shapes, rules)
+        batch_sh = _shardings(mesh, _batch_logical(batch_specs), batch_specs,
+                              rules)
+        metrics_keys = ["nll", "loss", "load_balance", "router_z",
+                        "grad_norm"]
+        metrics_sh = {k: NamedSharding(mesh, P()) for k in metrics_keys}
+        return (step, (carry_shapes, batch_specs),
+                (carry_sh, batch_sh), (carry_sh, metrics_sh),
+                {"cfg": cfg, "mode": mode, "seq": seq, "batch": batch})
+
+    rules = dict(active_rules)
+    param_sh = _shardings(mesh, param_logical, param_shapes, rules)
+
+    if mode == "prefill":
+        if cfg.family == "encdec":
+            def fn(params, batch_in):
+                enc_out = model._encode(params, batch_in["frames"],
+                                        jnp.bfloat16)
+                cache = model.init_cache(params, batch, seq, enc_out=enc_out)
+                return model.prefill(params, cache, batch_in["tokens"])
+        elif cfg.family == "vlm":
+            def fn(params, batch_in):
+                cache = model.init_cache(params, batch, seq)
+                return model.prefill(params, cache, batch_in["tokens"],
+                                     prefix_embeds=batch_in["patches"])
+        else:
+            def fn(params, batch_in):
+                cache = model.init_cache(params, batch, seq)
+                return model.prefill(params, cache, batch_in["tokens"])
+        batch_specs = _token_specs(cfg, seq, batch)
+        batch_sh = _shardings(mesh, _batch_logical(batch_specs), batch_specs,
+                              rules)
+        # outputs: (logits, cache) - logits sharded, cache per its logical.
+        cache_shapes = jax.eval_shape(
+            lambda p, b: fn(p, b)[1], param_shapes, batch_specs)
+        cache_sh = _shardings(
+            mesh, cache_logical_from_shapes(cache_shapes, cfg, mesh),
+            cache_shapes, rules)
+        logits_sh = NamedSharding(mesh, sh.spec_for(
+            ("batch", None, "vocab"),
+            (batch, 1, cfg.padded_vocab), rules, mesh))
+        return (fn, (param_shapes, batch_specs), (param_sh, batch_sh),
+                (logits_sh, cache_sh),
+                {"cfg": cfg, "mode": mode, "seq": seq, "batch": batch})
+
+    # decode: one new token against a cache of seq_len.
+    def fn(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    enc_out_shape = None
+    if cfg.family == "encdec":
+        enc_out_shape = jax.ShapeDtypeStruct(
+            (batch, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    cache_shapes = jax.eval_shape(
+        functools.partial(model.init_cache, batch=batch, max_seq=seq),
+        param_shapes, enc_out=enc_out_shape)
+    # the cache arrives mid-generation: pos is a traced scalar
+    tok_shape = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    cache_logical = cache_logical_from_shapes(cache_shapes, cfg, mesh)
+    cache_sh = _shardings(mesh, cache_logical, cache_shapes, rules)
+    tok_sh = NamedSharding(mesh, sh.spec_for(("batch", None), (batch, 1),
+                                             rules, mesh))
+    logits_sh = NamedSharding(mesh, sh.spec_for(
+        ("batch", None, "vocab"), (batch, 1, cfg.padded_vocab), rules, mesh))
+    return (fn, (param_shapes, cache_shapes, tok_shape),
+            (param_sh, cache_sh, tok_sh), (logits_sh, cache_sh),
+            {"cfg": cfg, "mode": mode, "seq": seq, "batch": batch})

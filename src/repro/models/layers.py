@@ -1,0 +1,254 @@
+"""Shared neural-net layers (pure JAX, no framework deps).
+
+Every ``*_init`` returns ``(params, logical)`` - two parallel pytrees, the
+second holding tuples of logical axis names consumed by
+:mod:`repro.parallel.sharding`.  ``*_apply`` functions are pure.
+
+Attention dispatches to the H-FA / FA-2 kernel stack via
+:mod:`repro.kernels.ops` - the paper's contribution is a first-class layer
+here, selected per-config with ``attn_impl``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+def _init_dense(key, shape, scale=None, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(shape[0]) if scale is None else scale
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+# ---------------------------------------------------------------- norms
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}, {"scale": ("embed",)}
+
+
+def rmsnorm_apply(p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return ({"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+            {"scale": ("embed",), "bias": ("embed",)})
+
+
+def layernorm_apply(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- embeddings
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32):
+    w = jax.random.normal(key, (vocab, d), dtype) * 0.02
+    return {"emb": w}, {"emb": ("vocab", "fsdp")}
+
+
+def embedding_lookup(p, ids):
+    return jnp.take(p["emb"], ids, axis=0)
+
+
+def sinusoidal_pos(seq: int, d: int, offset=0) -> jax.Array:
+    """Sinusoidal position embeddings; ``offset`` may be traced (decode)."""
+    pos = (jnp.arange(seq, dtype=jnp.float32) + offset)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d)
+    half = jnp.stack([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+    return half.reshape(seq, d)
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_apply(x: jax.Array, positions: jax.Array, theta: float = 10000.0):
+    """Rotary embedding. x: (B, S, H, dh), positions: (B, S) or (S,)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+def attention_init(key, cfg, dtype=jnp.float32, cross: bool = False):
+    """GQA attention params. cfg needs d_model, n_heads, n_kv_heads, d_head,
+    qkv_bias, qk_norm."""
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _init_dense(ks[0], (d, h, dh), 1.0 / math.sqrt(d), dtype),
+        "wk": _init_dense(ks[1], (d, hkv, dh), 1.0 / math.sqrt(d), dtype),
+        "wv": _init_dense(ks[2], (d, hkv, dh), 1.0 / math.sqrt(d), dtype),
+        "wo": _init_dense(ks[3], (h, dh, d), 1.0 / math.sqrt(h * dh), dtype),
+    }
+    l = {
+        "wq": ("fsdp", "heads", "head_dim"),
+        "wk": ("fsdp", "kv_heads", "head_dim"),
+        "wv": ("fsdp", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "fsdp"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, dh), dtype)
+        p["bk"] = jnp.zeros((hkv, dh), dtype)
+        p["bv"] = jnp.zeros((hkv, dh), dtype)
+        l["bq"] = ("heads", "head_dim")
+        l["bk"] = ("kv_heads", "head_dim")
+        l["bv"] = ("kv_heads", "head_dim")
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dtype)
+        p["k_norm"] = jnp.ones((dh,), dtype)
+        l["q_norm"] = ("head_dim",)
+        l["k_norm"] = ("head_dim",)
+    return p, l
+
+
+def _head_rmsnorm(scale, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def attention_apply(
+    p,
+    x: jax.Array,                    # (B, S, d_model)
+    cfg,
+    *,
+    positions: jax.Array | None = None,
+    kv_input: jax.Array | None = None,   # cross-attention source
+    cache: dict[str, jax.Array] | None = None,
+    cache_pos: jax.Array | int | None = None,
+    causal: bool = True,
+    attn_impl: str | None = None,
+):
+    """Returns (out (B,S,d_model), new_cache)."""
+    b, s, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    impl = attn_impl or cfg.attn_impl
+    src = x if kv_input is None else kv_input
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = _head_rmsnorm(p["q_norm"], q)
+        k = _head_rmsnorm(p["k_norm"], k)
+    if cfg.pos_emb == "rope" and kv_input is None:
+        if positions is None:
+            base = 0 if cache_pos is None else cache_pos
+            positions = base + jnp.arange(s)
+            if positions.ndim == 1:
+                positions = jnp.broadcast_to(positions[None], (b, s))
+        q = rope_apply(q, positions, cfg.rope_theta)
+        k = rope_apply(k, positions, cfg.rope_theta)
+
+    new_cache = cache
+    if cache is not None and kv_input is None:
+        # Decode / incremental: write into the ring at cache_pos.
+        pos = cache_pos if cache_pos is not None else 0
+        if s == 1 and cfg.serve_attn == "shardmap_merge":
+            # Paper's multi-KV-block ACC merge across the "model" axis:
+            # local ring write + partial FAU + log-domain merge.
+            from repro.parallel import collectives, sharding
+            mesh = sharding._ACTIVE["mesh"]
+            if mesh is not None and "model" in mesh.shape and \
+                    cache["k"].shape[1] % mesh.shape["model"] == 0:
+                out, ck, cv = collectives.shardmap_decode_attention(
+                    q, k, v, cache["k"], cache["v"],
+                    jnp.asarray(pos, jnp.int32), mesh=mesh,
+                    use_hfa=impl.startswith("hfa"))
+                out = jnp.einsum("bshk,hkd->bsd", out,
+                                 p["wo"].astype(x.dtype))
+                return out, {"k": ck, "v": cv}
+        if s == 1:
+            # Select-based write: elementwise, so it PRESERVES the cache's
+            # sequence sharding (a dynamic-update-slice at a traced position
+            # on a sharded dim makes the SPMD partitioner all-gather the
+            # whole ring).  Costs a full cache rewrite in HBM bytes -
+            # addressed by the shard_map local-write path in §Perf.
+            hit = (jnp.arange(cache["k"].shape[1]) == pos)[None, :, None, None]
+            ck = jnp.where(hit, k.astype(cache["k"].dtype), cache["k"])
+            cv = jnp.where(hit, v.astype(cache["v"].dtype), cache["v"])
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        if s == 1:
+            out = kops.decode_attention(q, ck, cv, impl=_decode_impl(impl),
+                                        kv_len=pos + 1)
+            out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+            return out, new_cache
+        # Fresh prefill (pos == 0): attend causally within the chunk itself;
+        # the cache is storage only.  Continued chunked prefill (pos > 0)
+        # must go through decode steps (documented limitation).
+
+    out = kops.multihead_attention(q, k, v, impl=impl, causal=causal,
+                                   block_q=cfg.attn_block,
+                                   block_kv=cfg.attn_block)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, new_cache
+
+
+def _decode_impl(impl: str) -> str:
+    # Pallas prefill kernels pair with their decode counterparts.
+    return {"fa2": "fa2", "exact": "fa2", "hfa": "hfa_pallas",
+            "fa2_pallas": "fa2_pallas", "hfa_pallas": "hfa_pallas",
+            "hfa_datapath": "hfa_pallas"}.get(impl, "fa2")
+
+
+# ---------------------------------------------------------------- MLPs
+def swiglu_init(key, d: int, ff: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {
+        "wg": _init_dense(ks[0], (d, ff), dtype=dtype),
+        "wu": _init_dense(ks[1], (d, ff), dtype=dtype),
+        "wd": _init_dense(ks[2], (ff, d), dtype=dtype),
+    }
+    l = {"wg": ("fsdp", "mlp"), "wu": ("fsdp", "mlp"), "wd": ("mlp", "fsdp")}
+    return p, l
+
+
+def swiglu_apply(p, x):
+    g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["wu"].astype(x.dtype))
+    y = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("bsf,fd->bsd", y, p["wd"].astype(x.dtype))
+
+
+def gelu_mlp_init(key, d: int, ff: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 2)
+    p = {"wi": _init_dense(ks[0], (d, ff), dtype=dtype),
+         "bi": jnp.zeros((ff,), dtype),
+         "wo": _init_dense(ks[1], (ff, d), dtype=dtype),
+         "bo": jnp.zeros((d,), dtype)}
+    l = {"wi": ("fsdp", "mlp"), "bi": ("mlp",),
+         "wo": ("mlp", "fsdp"), "bo": ("embed",)}
+    return p, l
+
+
+def gelu_mlp_apply(p, x):
+    y = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype)) + p["bi"].astype(x.dtype)
+    y = jax.nn.gelu(y.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", y, p["wo"].astype(x.dtype)) + p["bo"].astype(x.dtype)

@@ -1,0 +1,198 @@
+"""Mamba-2 (SSD, state-space duality) mixer layer - arXiv:2405.21060.
+
+Chunked SSD forward for training/prefill (sub-quadratic: intra-chunk
+matmul + inter-chunk state recurrence via lax.scan) and a constant-memory
+single-token decode step.  Separate z/x/B/C/dt projections keep every
+tensor axis cleanly shardable (d_inner and heads over "model").
+
+Note (DESIGN.md Arch-applicability): Mamba has no softmax, so the paper's
+H-FA technique does not apply inside this mixer.  The inter-chunk state
+pass reuses the same carry/merge structure as the attention block-merge,
+but in linear domain.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _init_dense, rmsnorm_apply
+
+
+def mamba_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    din = cfg.m_expand * d
+    h = din // cfg.m_headdim
+    gn = cfg.m_ngroups * cfg.m_dstate
+    cw = cfg.m_conv
+    ks = jax.random.split(key, 9)
+    p = {
+        "wz": _init_dense(ks[0], (d, din), dtype=dtype),
+        "wx": _init_dense(ks[1], (d, din), dtype=dtype),
+        "wB": _init_dense(ks[2], (d, gn), dtype=dtype),
+        "wC": _init_dense(ks[3], (d, gn), dtype=dtype),
+        "wdt": _init_dense(ks[4], (d, h), dtype=dtype),
+        "conv_x": _init_dense(ks[5], (cw, din), 1.0 / math.sqrt(cw), dtype),
+        "conv_B": _init_dense(ks[6], (cw, gn), 1.0 / math.sqrt(cw), dtype),
+        "conv_C": _init_dense(ks[7], (cw, gn), 1.0 / math.sqrt(cw), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.ones((din,), dtype),
+        "wo": _init_dense(ks[8], (din, d), 1.0 / math.sqrt(din), dtype),
+    }
+    l = {
+        "wz": ("fsdp", "mamba_inner"), "wx": ("fsdp", "mamba_inner"),
+        "wB": ("fsdp", "mamba_state"), "wC": ("fsdp", "mamba_state"),
+        "wdt": ("fsdp", "mamba_heads"),
+        "conv_x": ("conv", "mamba_inner"), "conv_B": ("conv", "mamba_state"),
+        "conv_C": ("conv", "mamba_state"),
+        "A_log": ("mamba_heads",), "D": ("mamba_heads",),
+        "dt_bias": ("mamba_heads",),
+        "norm": ("mamba_inner",),
+        "wo": ("mamba_inner", "fsdp"),
+    }
+    return p, l
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal conv. x: (B,S,C), w: (W,C). Returns (y, new_state).
+
+    ``state`` is the trailing (W-1,C) window from the previous call (decode).
+    """
+    bw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], bw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                 # (B, S+W-1, C)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(bw))
+    new_state = xp[:, -(bw - 1):, :] if bw > 1 else pad
+    return y, new_state
+
+
+def ssd_chunked(u, dA, Bm, Cm, chunk: int):
+    """Chunked SSD scan.
+
+    u:  (B,S,H,P) dt-weighted inputs
+    dA: (B,S,H)   log-decay increments (<= 0)
+    Bm: (B,S,H,N) input maps;  Cm: (B,S,H,N) output maps
+    Returns y (B,S,H,P) and the final state (B,H,N,P).
+    """
+    b, s, h, pdim = u.shape
+    n = Bm.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    def ck(x):
+        return x.reshape((b, nc, chunk) + x.shape[2:])
+
+    uc, dAc, Bc, Cc = ck(u), ck(dA), ck(Bm), ck(Cm)
+    cs = jnp.cumsum(dAc, axis=2)                         # (B,nc,Q,H)
+    # Intra-chunk (the 'attention-like' quadratic-in-Q term).
+    att = jnp.einsum("bcqhn,bcthn->bchqt", Cc, Bc)
+    ldiff = cs[:, :, :, None, :] - cs[:, :, None, :, :]  # (B,nc,Q,T,H)
+    ldiff = jnp.moveaxis(ldiff, -1, 2)                   # (B,nc,H,Q,T)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # Mask BEFORE exp: above the diagonal ldiff is positive and exp would
+    # overflow, poisoning gradients through the where.
+    decay = jnp.exp(jnp.where(causal, ldiff, -1e9))
+    y_intra = jnp.einsum("bchqt,bcthp->bcqhp", att * decay, uc)
+
+    # Per-chunk outgoing state and total decay.
+    dte = jnp.exp(cs[:, :, -1:, :] - cs)                 # decay to chunk end
+    states = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp", dte, Bc, uc)
+    tot = jnp.exp(cs[:, :, -1, :])                       # (B,nc,H)
+
+    # Inter-chunk recurrence.
+    def step(hstate, inp):
+        st, tt = inp
+        out = hstate
+        hstate = hstate * tt[..., None, None] + st
+        return hstate, out
+
+    init = jnp.zeros((b, h, n, pdim), jnp.float32)
+    final, h_in = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(states, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(tot, 1, 0).astype(jnp.float32)))
+    h_in = jnp.moveaxis(h_in, 0, 1)                      # state entering chunk
+
+    y_inter = jnp.einsum("bcqhn,bchnp->bcqhp", Cc,
+                         h_in.astype(Cc.dtype)) * jnp.exp(cs)[..., None]
+    y = (y_intra + y_inter).reshape(b, s, h, pdim)
+    return y, final
+
+
+def mamba_apply(p, x, cfg, *, state=None, chunk: int | None = None):
+    """x: (B,S,d_model). state: None (train) or dict {ssm, conv_x/B/C}.
+
+    Returns (out, new_state).  With ``state`` given and S small (decode),
+    runs the recurrent step; otherwise the chunked scan.
+    """
+    b, s, d = x.shape
+    din = cfg.m_expand * d
+    h = din // cfg.m_headdim
+    pdim = cfg.m_headdim
+    n = cfg.m_dstate
+    dt_limit = (1e-3, 1e2)
+
+    z = jnp.einsum("bsd,de->bse", x, p["wz"].astype(x.dtype))
+    xr = jnp.einsum("bsd,de->bse", x, p["wx"].astype(x.dtype))
+    Br = jnp.einsum("bsd,de->bse", x, p["wB"].astype(x.dtype))
+    Cr = jnp.einsum("bsd,de->bse", x, p["wC"].astype(x.dtype))
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"].astype(x.dtype))
+
+    cs = {} if state is None else state
+    xr, cx = _causal_conv(xr, p["conv_x"].astype(x.dtype), cs.get("conv_x"))
+    Br, cB = _causal_conv(Br, p["conv_B"].astype(x.dtype), cs.get("conv_B"))
+    Cr, cC = _causal_conv(Cr, p["conv_C"].astype(x.dtype), cs.get("conv_C"))
+    xr = jax.nn.silu(xr.astype(jnp.float32))
+    Br = jax.nn.silu(Br.astype(jnp.float32))
+    Cr = jax.nn.silu(Cr.astype(jnp.float32))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    dt = jnp.clip(dt, dt_limit[0], dt_limit[1])          # (B,S,H)
+    A = -jnp.exp(p["A_log"])                             # (H,)
+    dA = dt * A                                          # (B,S,H), <= 0
+
+    xh = xr.reshape(b, s, h, pdim)
+    u = xh * dt[..., None]
+    # ngroups == 1: broadcast B/C across heads.
+    Bm = jnp.broadcast_to(Br.reshape(b, s, 1, n), (b, s, h, n))
+    Cm = jnp.broadcast_to(Cr.reshape(b, s, 1, n), (b, s, h, n))
+
+    if state is not None and s == 1:
+        hst = cs["ssm"]                                   # (B,H,N,P)
+        decay = jnp.exp(dA[:, 0])                         # (B,H)
+        upd = jnp.einsum("bhn,bhp->bhnp", Bm[:, 0], u[:, 0])
+        hst = hst * decay[..., None, None] + upd
+        y = jnp.einsum("bhn,bhnp->bhp", Cm[:, 0], hst)[:, None]
+        new_state = {"ssm": hst, "conv_x": cx, "conv_B": cB, "conv_C": cC}
+    else:
+        ch = chunk or min(cfg.m_chunk, s)
+        y, hst = ssd_chunked(u, dA, Bm, Cm, ch)
+        new_state = {"ssm": hst, "conv_x": cx, "conv_B": cB, "conv_C": cC}
+
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, s, din)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm_apply({"scale": p["norm"]}, y.astype(x.dtype))
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(x.dtype))
+    return out, new_state
+
+
+def mamba_init_state(cfg, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    din = cfg.m_expand * d
+    h = din // cfg.m_headdim
+    gn = cfg.m_ngroups * cfg.m_dstate
+    cw = cfg.m_conv
+    return {
+        "ssm": jnp.zeros((batch, h, cfg.m_dstate, cfg.m_headdim), jnp.float32),
+        "conv_x": jnp.zeros((batch, cw - 1, din), dtype),
+        "conv_B": jnp.zeros((batch, cw - 1, gn), dtype),
+        "conv_C": jnp.zeros((batch, cw - 1, gn), dtype),
+    }

@@ -1,0 +1,221 @@
+"""Model facade: init/apply/caches/loss for every assigned family.
+
+``build_model(cfg)`` returns an ``LM`` whose methods are pure functions
+suitable for jit/pjit:
+
+  init(key) -> params
+  shape_and_logical() -> (ShapeDtypeStruct tree, logical-axes tree)
+  apply(params, batch, train=True) -> (logits, aux)
+  loss(params, batch) -> (scalar, metrics)
+  init_cache(params_or_shapes, batch, max_seq, enc_out=None) -> cache
+  decode_step(params, cache, tokens) -> (logits, new_cache)
+
+Batch dicts per family:
+  dense/moe/ssm/hybrid: {"tokens": (B,S) int32}
+  vlm:    {"tokens": (B,S), "patches": (B,P,d_model)}   (stub frontend)
+  encdec: {"tokens": (B,S), "frames": (B,T,d_model)}    (stub frontend)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.parallel.sharding import constrain
+
+AUX_COEF = {"load_balance": 0.01, "router_z": 0.001}
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- init
+    def _init(self, key):
+        cfg = self.cfg
+        pdt = _dtype(cfg.param_dtype)
+        ks = jax.random.split(key, 8)
+        p: dict[str, Any] = {}
+        l: dict[str, Any] = {}
+        p["embed"], l["embed"] = L.embedding_init(ks[0], cfg.padded_vocab,
+                                                  cfg.d_model, pdt)
+        cross = cfg.family == "encdec"
+        p["layers"], l["layers"] = T.stack_init(ks[1], cfg, pdt, cross=cross)
+        p["final_norm"], l["final_norm"] = T._norm_init(cfg, pdt)
+        if not cfg.tie_embeddings:
+            p["lm_head"] = jax.random.normal(
+                ks[2], (cfg.d_model, cfg.padded_vocab), pdt) * 0.02
+            l["lm_head"] = ("fsdp", "vocab")
+        if cfg.pos_emb == "learned":
+            p["pos_emb"] = jax.random.normal(
+                ks[3], (cfg.max_seq, cfg.d_model), pdt) * 0.02
+            l["pos_emb"] = ("seq", "embed")
+        if cross:
+            enc_cfg = self._enc_cfg()
+            p["enc_layers"], l["enc_layers"] = T.stack_init(
+                ks[4], enc_cfg, pdt, cross=False)
+            p["enc_norm"], l["enc_norm"] = T._norm_init(enc_cfg, pdt)
+        return p, l
+
+    def _enc_cfg(self):
+        import dataclasses
+        return dataclasses.replace(
+            self.cfg, family="dense", n_layers=self.cfg.n_enc_layers,
+            pos_emb="sinusoidal", n_experts=0, attn_every=0)
+
+    def init(self, key):
+        return self._init(key)[0]
+
+    def shape_and_logical(self):
+        captured = {}
+
+        def f(key):
+            p, l = self._init(key)
+            captured["l"] = l
+            return p
+
+        shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+        return shapes, captured["l"]
+
+    # ------------------------------------------------------------ forward
+    def _embed_in(self, params, tokens, cdt, pos0=0):
+        cfg = self.cfg
+        x = L.embedding_lookup(params["embed"], tokens).astype(cdt)
+        if cfg.pos_emb == "learned":
+            pe = jax.lax.dynamic_slice_in_dim(
+                params["pos_emb"], pos0, tokens.shape[1], axis=0)
+            x = x + pe.astype(cdt)[None]
+        elif cfg.pos_emb == "sinusoidal":
+            x = x + L.sinusoidal_pos(tokens.shape[1], cfg.d_model,
+                                     pos0).astype(cdt)[None]
+        return x
+
+    def _encode(self, params, frames, cdt):
+        """Whisper encoder over precomputed (stub) frame embeddings."""
+        cfg = self._enc_cfg()
+        x = frames.astype(cdt)
+        x = x + L.sinusoidal_pos(x.shape[1], cfg.d_model).astype(cdt)[None]
+        x, _, _ = T.stack_apply(params["enc_layers"], x, cfg, causal=False)
+        return T._norm_apply(cfg, params["enc_norm"], x)
+
+    def apply(self, params, batch, train: bool = True):
+        cfg = self.cfg
+        cdt = _dtype(cfg.compute_dtype)
+        tokens = batch["tokens"]
+        enc_caches = None
+
+        if cfg.family == "encdec":
+            enc_out = self._encode(params, batch["frames"], cdt)
+            _, enc_caches = T.stack_init_cache(
+                cfg, tokens.shape[0], 0, cdt, cross=True, enc_out=enc_out,
+                params=params["layers"])
+            x = self._embed_in(params, tokens, cdt)
+        elif cfg.family == "vlm":
+            patches = batch["patches"].astype(cdt)     # (B, P, d) stub
+            tok = self._embed_in(params, tokens, cdt)
+            x = jnp.concatenate([patches, tok], axis=1)
+        else:
+            x = self._embed_in(params, tokens, cdt)
+
+        x = constrain(x, ("batch", "seq", "embed"))
+        x, _, aux = T.stack_apply(params["layers"], x, cfg,
+                                  enc_caches=enc_caches, causal=True)
+        x = T._norm_apply(cfg, params["final_norm"], x)
+        if cfg.family == "vlm":
+            x = x[:, batch["patches"].shape[1]:]       # logits on text only
+        logits = self._head(params, x)
+        return logits, aux
+
+    def _head(self, params, x):
+        cfg = self.cfg
+        w = (params["embed"]["emb"].T if cfg.tie_embeddings
+             else params["lm_head"])
+        logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+        # vocab sharding takes priority over SP on the seq dim here: the
+        # f32 loss intermediates are V/16-sharded instead.
+        return constrain(logits, ("batch", None, "vocab"))
+
+    # ------------------------------------------------------------- loss
+    def loss(self, params, batch):
+        logits, aux = self.apply(params, batch)
+        tokens = batch["tokens"]
+        lg = logits[:, :-1].astype(jnp.float32)
+        tg = tokens[:, 1:]
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, tg[..., None], axis=-1)[..., 0]
+        mask = (tg >= 0).astype(jnp.float32)
+        nll = jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        total = nll
+        metrics = {"nll": nll}
+        for k, v in aux.items():
+            coef = AUX_COEF.get(k, 0.0)
+            total = total + coef * v
+            metrics[k] = v
+        metrics["loss"] = total
+        return total, metrics
+
+    # ------------------------------------------------------------- decode
+    def init_cache(self, params, batch: int, max_seq: int, enc_out=None):
+        cfg = self.cfg
+        cdt = _dtype(cfg.compute_dtype)
+        cross = cfg.family == "encdec"
+        caches, enc_caches = T.stack_init_cache(
+            cfg, batch, max_seq, cdt, cross=cross, enc_out=enc_out,
+            params=params["layers"] if cross else None)
+        cache = {"layers": caches, "pos": jnp.int32(0)}
+        if enc_caches is not None:
+            cache["enc"] = enc_caches
+        return cache
+
+    def prefill(self, params, cache, tokens, prefix_embeds=None):
+        """Write a prompt into the cache; logits for its last position.
+
+        Must be called at cache position 0 (fresh prefill).  For VLM,
+        ``prefix_embeds`` (B, P, d) are concatenated before the tokens.
+        """
+        cfg = self.cfg
+        cdt = _dtype(cfg.compute_dtype)
+        x = self._embed_in(params, tokens, cdt, pos0=0)
+        if prefix_embeds is not None:
+            x = jnp.concatenate([prefix_embeds.astype(cdt), x], axis=1)
+        x = constrain(x, ("batch", "seq", "embed"))
+        x, new_caches, _ = T.stack_apply(
+            params["layers"], x, cfg, caches=cache["layers"],
+            cache_pos=0, enc_caches=cache.get("enc"), causal=True)
+        x = T._norm_apply(cfg, params["final_norm"], x[:, -1:])
+        logits = self._head(params, x)
+        out = dict(cache)
+        out["layers"] = new_caches
+        n_prefix = 0 if prefix_embeds is None else prefix_embeds.shape[1]
+        out["pos"] = cache["pos"] + tokens.shape[1] + n_prefix
+        return logits, out
+
+    def decode_step(self, params, cache, tokens):
+        """One token: tokens (B, 1) -> (logits (B,1,V), new cache)."""
+        cfg = self.cfg
+        cdt = _dtype(cfg.compute_dtype)
+        pos = cache["pos"]
+        x = self._embed_in(params, tokens, cdt, pos0=pos)
+        x = constrain(x, ("batch", None, "embed"))
+        x, new_caches, _ = T.stack_apply(
+            params["layers"], x, cfg, caches=cache["layers"], cache_pos=pos,
+            enc_caches=cache.get("enc"), causal=True)
+        x = T._norm_apply(cfg, params["final_norm"], x)
+        logits = self._head(params, x)
+        out = dict(cache)
+        out["layers"] = new_caches
+        out["pos"] = pos + 1
+        return logits, out
+
+
+def build_model(cfg: ModelConfig) -> LM:
+    return LM(cfg)

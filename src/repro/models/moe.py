@@ -1,0 +1,102 @@
+"""Mixture-of-Experts FFN: top-k router + capacity dispatch/combine.
+
+GShard/Switch-style formulation generalized to top-k: tokens are routed to
+their top-k experts, each expert processes at most C = ceil(T/E * cf * k)
+tokens (overflow dropped, standard at scale), and outputs are combined with
+the router weights.  The dispatch/combine einsums lower to all-to-all
+resharding when experts are sharded over the "model" mesh axis (EP).
+
+Aux losses: load-balancing (Switch) + router z-loss, returned for the
+trainer to add.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _init_dense
+
+
+def moe_init(key, cfg, dtype=jnp.float32):
+    e, d, ff = cfg.n_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": _init_dense(ks[0], (d, e), dtype=jnp.float32),
+        "wg": _init_dense(ks[1], (e, d, ff), 1.0 / math.sqrt(d), dtype),
+        "wu": _init_dense(ks[2], (e, d, ff), 1.0 / math.sqrt(d), dtype),
+        "wd": _init_dense(ks[3], (e, ff, d), 1.0 / math.sqrt(ff), dtype),
+    }
+    l = {
+        "router": ("fsdp", None),
+        "wg": ("experts", "fsdp", "expert_mlp"),
+        "wu": ("experts", "fsdp", "expert_mlp"),
+        "wd": ("experts", "expert_mlp", "fsdp"),
+    }
+    return p, l
+
+
+GROUP_SIZE = 4096  # tokens per dispatch group (GShard 'group' dimension)
+
+
+def moe_apply(p, x: jax.Array, cfg) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """x: (B, S, d) -> (out, aux) with aux = {load_balance, router_z}.
+
+    Tokens are split into groups of <= GROUP_SIZE with *per-group* capacity
+    (GShard semantics): dispatch memory is O(G * g * E * C_g) with
+    C_g = g/E * cf * k, instead of the quadratic-in-T naive form.  Groups
+    map onto the data-parallel token sharding, experts onto "model" (EP);
+    the dispatch/combine einsums then lower to all-to-alls.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    t = b * s
+    # Bound the dense dispatch-einsum cost relative to the expert FFN cost:
+    # dispatch ~ cf*g*d flops/token vs FFN ~ 6*k*d*ff, so keep g <~ 4*ff.
+    auto = cfg.moe_group or min(GROUP_SIZE, 4 * max(cfg.d_ff, 128))
+    g = min(auto, t)
+    while t % g:
+        g //= 2
+    ng = t // g
+    cap = max(int(math.ceil(g / e * cfg.capacity_factor * k)), k)
+
+    xt = x.reshape(ng, g, d)
+    logits = jnp.einsum("Ntd,de->Nte", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)            # (N, g, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Slot of each (token, choice) inside its expert's capacity buffer.
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)    # (N, g, k, e)
+    flatoh = onehot.reshape(ng, g * k, e)
+    pos = jnp.cumsum(flatoh, axis=1) * flatoh - 1
+    pos = jnp.max(pos, axis=-1).reshape(ng, g, k)
+    keep = pos < cap
+
+    slot_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1,
+                             dtype=xt.dtype)[..., :cap]       # (N, g, k, C)
+    disp = jnp.einsum("Ntke,Ntkc->Ntec", onehot.astype(xt.dtype), slot_oh)
+    comb = jnp.einsum("Ntk,Ntke,Ntkc->Ntec",
+                      gate_vals.astype(xt.dtype) * keep.astype(xt.dtype),
+                      onehot.astype(xt.dtype), slot_oh)
+
+    expert_in = jnp.einsum("Ntec,Ntd->Necd", disp, xt)        # a2a under EP
+    gact = jnp.einsum("Necd,edf->Necf", expert_in, p["wg"].astype(xt.dtype))
+    uact = jnp.einsum("Necd,edf->Necf", expert_in, p["wu"].astype(xt.dtype))
+    act = jax.nn.silu(gact.astype(jnp.float32)).astype(xt.dtype) * uact
+    expert_out = jnp.einsum("Necf,efd->Necd", act, p["wd"].astype(xt.dtype))
+    out = jnp.einsum("Ntec,Necd->Ntd", comb, expert_out)      # a2a back
+
+    # Switch load-balance loss + router z-loss (per group, averaged).
+    me = jnp.mean(probs, axis=1)                              # (N, e)
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], e, dtype=jnp.float32),
+                  axis=1)
+    aux = {
+        "load_balance": e * jnp.mean(jnp.sum(me * ce, axis=-1)),
+        "router_z": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+    }
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,14 @@
+"""Optimizers + schedules + gradient compression (no external deps)."""
+from repro.optim.adamw import adamw  # noqa: F401
+from repro.optim.adafactor import adafactor  # noqa: F401
+from repro.optim.schedule import warmup_cosine  # noqa: F401
+from repro.optim.compression import compress_gradients  # noqa: F401
+
+
+def build_optimizer(cfg, lr_schedule):
+    """Optimizer per the arch config (adafactor for the >=100B archs)."""
+    if cfg.optimizer == "adafactor":
+        return adafactor(lr_schedule)
+    # fp32 master copies only when params are actually low precision
+    # (an fp32 master of fp32 params would alias the donated param buffer).
+    return adamw(lr_schedule, master_fp32=(cfg.param_dtype != "float32"))

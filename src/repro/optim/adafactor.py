@@ -1,0 +1,76 @@
+"""Adafactor (Shazeer & Stern 2018): factored second moments.
+
+Used for the >=100B assigned archs: state is ~2 fp32 vectors per matrix
+instead of two full fp32 tensors (O(n+m) vs O(nm)), keeping per-device
+optimizer bytes within the v5e HBM budget at 256 chips (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import Optimizer
+
+
+def adafactor(lr_schedule, decay=0.8, eps1=1e-30, eps2=1e-3,
+              clip_threshold=1.0, weight_decay=0.0):
+    def _factored(shape):
+        return len(shape) >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                row = jnp.zeros(p.shape[:-1], jnp.float32)
+                col = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                return {"vr": row, "vc": col}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(one, params,
+                                  is_leaf=lambda x: hasattr(x, "shape")),
+                "step": jnp.int32(0)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = lr_schedule(step)
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def one(g, st, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps1
+            if _factored(p.shape):
+                vr = beta * st["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * st["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.mean(vr, axis=-1, keepdims=True)
+                u = (g / jnp.sqrt(jnp.maximum(vr[..., None] / denom[..., None],
+                                              eps1))
+                     / jnp.sqrt(jnp.maximum(vc[..., None, :], eps1)))
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = beta * st["v"] + (1 - beta) * g2
+                u = g / jnp.sqrt(jnp.maximum(v, eps1))
+                new_st = {"v": v}
+            rms_u = jnp.sqrt(jnp.mean(u * u) + eps1)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            pf = p.astype(jnp.float32)
+            scale = jnp.maximum(eps2, jnp.sqrt(jnp.mean(pf * pf)))
+            new_p = pf - lr * scale * u - lr * weight_decay * pf
+            return new_p.astype(p.dtype), new_st
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_s = tdef.flatten_up_to(state["f"])
+        flat_p = tdef.flatten_up_to(params)
+        outs = [one(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_params = tdef.unflatten([o[0] for o in outs])
+        new_state = {"f": tdef.unflatten([o[1] for o in outs]), "step": step}
+        return new_params, new_state
+
+    def state_logical(param_logical):
+        def one(axes):
+            if isinstance(axes, tuple) and len(axes) >= 2:
+                return {"vr": axes[:-1], "vc": axes[:-2] + axes[-1:]}
+            return {"v": axes}
+        is_leaf = lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x)
+        return {"f": jax.tree.map(one, param_logical, is_leaf=is_leaf),
+                "step": ()}
+
+    return Optimizer(init, update, state_logical)

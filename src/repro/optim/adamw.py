@@ -1,0 +1,85 @@
+"""AdamW with fp32 moments (optionally fp32 master weights for bf16 params).
+
+API (optax-like but dependency-free):
+  opt = adamw(schedule)
+  state = opt.init(params)
+  params, state = opt.update(grads, state, params)
+
+Moments are stored fp32 and shard like their parameters (ZeRO-style when
+the parameter itself is sharded over the full mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]
+    state_logical: Callable[[Any], Any]  # logical axes for the state tree
+
+
+def adamw(lr_schedule, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          master_fp32=True):
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        state = {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.int32(0),
+        }
+        if master_fp32:
+            state["master"] = jax.tree.map(
+                lambda p: p.astype(jnp.float32), params)
+        return state
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = lr_schedule(step)
+        b1c = 1.0 - b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p, p_master):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / b1c
+            vhat = v / b2c
+            base = p_master if p_master is not None else p.astype(jnp.float32)
+            new = base - lr * (mhat / (jnp.sqrt(vhat) + eps)
+                               + weight_decay * base)
+            return new, m, v
+
+        master = state.get("master")
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        flat_p = tdef.flatten_up_to(params)
+        flat_mast = (tdef.flatten_up_to(master) if master is not None
+                     else [None] * len(flat_g))
+        outs = [upd(g, m, v, p, pm) for g, m, v, p, pm in
+                zip(flat_g, flat_m, flat_v, flat_p, flat_mast)]
+        new_p32 = tdef.unflatten([o[0] for o in outs])
+        new_state = {
+            "m": tdef.unflatten([o[1] for o in outs]),
+            "v": tdef.unflatten([o[2] for o in outs]),
+            "step": step,
+        }
+        if master is not None:
+            new_state["master"] = new_p32
+        new_params = jax.tree.map(
+            lambda n, p: n.astype(p.dtype), new_p32, params)
+        return new_params, new_state
+
+    def state_logical(param_logical):
+        out = {"m": param_logical, "v": param_logical, "step": ()}
+        if master_fp32:
+            out["master"] = param_logical
+        return out
+
+    return Optimizer(init, update, state_logical)

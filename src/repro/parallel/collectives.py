@@ -1,0 +1,105 @@
+"""Distributed attention collectives: the paper's multi-KV-block merge
+(Fig. 2 / Eq. 16) promoted to the mesh.
+
+``shardmap_decode_attention`` serves one new token against a KV ring whose
+*sequence* dim is sharded over the "model" axis:
+
+  * each shard writes the new (k, v) row with a LOCAL dynamic-update-slice
+    (a traced-index DUS on a sharded dim would force the SPMD partitioner
+    to all-gather and rewrite the whole ring - the baseline's memory
+    bottleneck, see EXPERIMENTS.md §Perf);
+  * each shard computes a partial FAU triplet (o~, m, l) over its local
+    window, exactly like one of the paper's block-FAUs;
+  * the triplets (tiny: one d-vector per head) are all-gathered over the
+    shard axis and merged with the log-domain ACC rule, optionally through
+    the FIX16 quantized path (use_hfa).
+
+Collective volume per token: P * (d+2) floats per head instead of the
+full ring - this is the paper's cascaded-ACC architecture as an ICI
+pattern.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import decode as dk
+
+
+def shardmap_decode_attention(
+    q: jax.Array,        # (B, 1, H, dh)
+    k_new: jax.Array,    # (B, 1, Hkv, dh)
+    v_new: jax.Array,    # (B, 1, Hkv, dh)
+    cache_k: jax.Array,  # (B, S, Hkv, dh), S sharded over `axis`
+    cache_v: jax.Array,
+    pos: jax.Array,      # scalar int32: global write index
+    *,
+    mesh,
+    axis: str = "model",
+    batch_axes=("pod", "data"),
+    use_hfa: bool = True,
+    scale: float | None = None,
+):
+    """Returns (out (B,1,H,dh), new_cache_k, new_cache_v)."""
+    b, _, h, dh = q.shape
+    hkv = cache_k.shape[2]
+    g = h // hkv
+    n_shards = mesh.shape[axis]
+    s_local = cache_k.shape[1] // n_shards
+    batch_axes = tuple(a for a in batch_axes if a in mesh.shape)
+    bspec = batch_axes if len(batch_axes) > 1 else (
+        batch_axes[0] if batch_axes else None)
+
+    def local(q, k_new, v_new, ck, cv, pos):
+        bl = q.shape[0]  # local (batch-sharded) size
+        idx = jax.lax.axis_index(axis)
+        offset = idx * s_local
+        local_pos = jnp.clip(pos - offset, 0, s_local - 1)
+        hit = (pos >= offset) & (pos < offset + s_local)
+        # Local write: plain DUS on the unsharded local ring.
+        ck_w = jax.lax.dynamic_update_slice(
+            ck, k_new.astype(ck.dtype), (0, local_pos, 0, 0))
+        cv_w = jax.lax.dynamic_update_slice(
+            cv, v_new.astype(cv.dtype), (0, local_pos, 0, 0))
+        ck = jnp.where(hit, ck_w, ck)
+        cv = jnp.where(hit, cv_w, cv)
+
+        # Partial FAU over the local window [offset, offset + s_local).
+        kv_len_local = jnp.clip(pos + 1 - offset, 0, s_local)
+        qg = q.reshape(bl, hkv, g, dh)
+        scale_v = (1.0 / dh ** 0.5) if scale is None else scale
+        s = jnp.einsum("bhgd,bshd->bhgs", qg, ck,
+                       preferred_element_type=jnp.float32) * scale_v
+        mask = jnp.arange(s_local)[None, None, None, :] < kv_len_local
+        s = jnp.where(mask, s, -1e30)
+        m = jnp.max(s, axis=-1)
+        if use_hfa:
+            from repro.kernels import bitmath
+            p = bitmath.exp2_hfa_rail(bitmath.quant_rail(
+                jnp.minimum(s - m[..., None], 0.0)))
+        else:
+            p = jnp.exp(s - m[..., None])
+        p = jnp.where(mask & (m != -1e30)[..., None], p, 0.0)
+        l = jnp.sum(p, axis=-1)
+        o = jnp.einsum("bhgs,bshd->bhgd", p.astype(q.dtype), cv,
+                       preferred_element_type=jnp.float32)
+
+        # ACC merge across shards (Eq. 16): gather the tiny triplets.
+        og = jax.lax.all_gather(o, axis)
+        mg = jax.lax.all_gather(m, axis)
+        lg = jax.lax.all_gather(l, axis)
+        om, mm, lm = dk.merge_partials(og, mg, lg, use_hfa=use_hfa)
+        out = dk.finalize_decode(om, lm, use_hfa=use_hfa)
+        return out.reshape(bl, 1, h, dh).astype(q.dtype), ck, cv
+
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(bspec), P(bspec), P(bspec),
+                  P(bspec, axis), P(bspec, axis), P()),
+        out_specs=(P(bspec), P(bspec, axis), P(bspec, axis)),
+        check_vma=False)
+    return fn(q, k_new, v_new, cache_k, cache_v, pos)

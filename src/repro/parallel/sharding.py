@@ -1,0 +1,141 @@
+"""Logical-axis sharding: MaxText-style rules -> PartitionSpec trees.
+
+Parameters and activations are annotated with *logical* axis names
+("vocab", "heads", "mlp", "batch", ...).  A rule table maps logical names
+to mesh axes; unmapped names are replicated.  This indirection is what the
+perf iterations tune: changing a rule re-shards the whole model without
+touching layer code.
+
+Rules honour divisibility: if a logical axis size does not divide the mesh
+axis size, the rule silently falls back to replication for that tensor
+axis (the standard GQA kv-head treatment: replicate when kv_heads < TP).
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# Default rule table.  "pod" and "data" both carry batch (DP across pods
+# and within a pod); "model" carries TP/EP/SP; "fsdp" shards weight d_model
+# dims over "data" (ZeRO-3/FSDP - parameters+optimizer state are fully
+# sharded over the whole mesh, all-gathered per layer by XLA).
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "kv_batch": ("pod", "data"),   # decode cache batch (may differ from activations)
+    "seq": None,                # activations sequence dim (SP rule: "model")
+    "kv_seq": "model",          # decode KV cache sequence sharding
+    "embed": None,              # activations d_model (replicated)
+    "fsdp": "data",             # weight d_model dims
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "mamba_inner": "model",
+    "mamba_heads": "model",
+    "mamba_state": None,
+    "layers": None,             # stacked scan axis
+    "conv": None,
+}
+
+# Training enables sequence parallelism: the residual stream saved by the
+# scan-over-layers remat is sharded over "model" on the sequence dim.
+TRAIN_RULES = dict(DEFAULT_RULES, seq="model")
+
+# Serving: decode KV caches shard their sequence dim over "model" (the
+# paper's multi-KV-block parallelism promoted to the mesh, DESIGN.md §2)
+# when kv_heads are not divisible by the model axis.
+SERVE_RULES = dict(DEFAULT_RULES)
+
+
+def spec_for(
+    logical: Sequence[str | None],
+    shape: Sequence[int] | None = None,
+    rules: Mapping[str, Any] | None = None,
+    mesh: Mesh | None = None,
+) -> P:
+    """Build a PartitionSpec from logical axis names.
+
+    If ``shape`` and ``mesh`` are given, any mapping whose mesh-axis size
+    does not divide the tensor-axis size degrades to replication.
+    """
+    rules = DEFAULT_RULES if rules is None else rules
+    out = []
+    used: set[str] = set()
+    for i, name in enumerate(logical):
+        axis = rules.get(name) if name is not None else None
+        if axis is not None and mesh is not None:
+            # Drop mesh axes that don't exist on this mesh (e.g. "pod" on
+            # the single-pod mesh) or are already used by an earlier dim.
+            sizes = axis if isinstance(axis, tuple) else (axis,)
+            sizes = tuple(a for a in sizes
+                          if a in mesh.shape and a not in used)
+            axis = sizes if len(sizes) > 1 else (sizes[0] if sizes else None)
+        if axis is not None and shape is not None and mesh is not None:
+            sizes = axis if isinstance(axis, tuple) else (axis,)
+            total = int(np.prod([mesh.shape[a] for a in sizes]))
+            if shape[i] % total != 0:
+                axis = None
+        if axis is not None:
+            used.update(axis if isinstance(axis, tuple) else (axis,))
+        out.append(axis)
+    # Trim trailing Nones (canonical form).
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def tree_specs(
+    logical_tree: Any,
+    shape_tree: Any | None = None,
+    rules: Mapping[str, Any] | None = None,
+    mesh: Mesh | None = None,
+) -> Any:
+    """Map ``spec_for`` over a pytree of logical-axis tuples."""
+    is_leaf = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    if shape_tree is None:
+        return jax.tree.map(lambda l: spec_for(l, None, rules, mesh),
+                            logical_tree, is_leaf=is_leaf)
+    return jax.tree.map(
+        lambda l, s: spec_for(l, s.shape, rules, mesh),
+        logical_tree, shape_tree, is_leaf=is_leaf)
+
+
+def tree_shardings(mesh: Mesh, spec_tree: Any) -> Any:
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+# Active sharding context: set by launchers before tracing so that
+# ``constrain`` calls inside model code resolve logical names against the
+# right mesh + rule table.  Without a context, constraints are no-ops
+# (small single-device tests).
+_ACTIVE: dict[str, Any] = {"mesh": None, "rules": None}
+
+
+def set_context(mesh: Mesh | None, rules: Mapping[str, Any] | None):
+    _ACTIVE["mesh"] = mesh
+    _ACTIVE["rules"] = rules
+
+
+def constrain(x: jax.Array, logical: Sequence[str | None],
+              rules: Mapping[str, Any] | None = None,
+              mesh: Mesh | None = None) -> jax.Array:
+    """with_sharding_constraint by logical names (no-op without a context)."""
+    mesh = mesh if mesh is not None else _ACTIVE["mesh"]
+    rules = rules if rules is not None else _ACTIVE["rules"]
+    if mesh is None:
+        return x
+    spec = spec_for(logical, x.shape, rules, mesh)
+    # NamedSharding works both under a mesh context manager and in bare
+    # eval_shape traces (cache-shape derivation).
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,2 @@
+"""Training runtime: step factories + fault-tolerant driver."""
+from repro.runtime.trainer import Trainer, make_train_step  # noqa: F401

@@ -1,0 +1,138 @@
+"""Unit + property tests for the FIX16 LNS datapath (paper Sec. IV-V)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lns
+from repro.core.numerics import FRAC_ONE, LOG_ZERO
+
+finite_bf16 = st.floats(min_value=-3.0e38, max_value=3.0e38, allow_subnormal=False)
+
+
+def test_blinn_roundtrip_exact():
+    """float -> LNS -> float is EXACT for any finite bf16 (Blinn inverse)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(4096)
+                    * 10.0 ** rng.integers(-20, 20, 4096), jnp.bfloat16)
+    s, r = lns.blinn_log2(x)
+    back = lns.lns_to_bf16(s, r)
+    assert bool(jnp.all(back == x))
+
+
+def test_blinn_zero_maps_to_log_zero():
+    s, r = lns.blinn_log2(jnp.bfloat16(0.0))
+    assert float(r) <= LOG_ZERO
+    assert float(lns.lns_to_bf16(s, r)) == 0.0
+
+
+@given(st.floats(min_value=1e-30, max_value=1e30))
+@settings(max_examples=200, deadline=None)
+def test_blinn_log2_mitchell_bound(x):
+    """|blinn(x) - log2(x)| <= 0.0861 + quantization (Mitchell's bound)."""
+    xb = jnp.bfloat16(x)
+    if float(xb) == 0.0 or not np.isfinite(float(xb)):
+        return
+    _, r = lns.blinn_log2(xb)
+    true = np.log2(abs(float(xb)))
+    assert abs(float(r) / FRAC_ONE - true) <= 0.0861 + 1.0 / FRAC_ONE
+
+
+def test_pwl_exp2_max_error():
+    """8-segment PWL of 2^-f within 6e-3 of exact on the 7-bit grid."""
+    f = jnp.arange(FRAC_ONE, dtype=jnp.float32)
+    g = np.asarray(lns.pwl_exp2_frac(f)) / FRAC_ONE
+    true = 2.0 ** (-(np.arange(FRAC_ONE) / FRAC_ONE))
+    assert np.abs(g - true).max() < 6e-3
+
+
+def test_pwl_monotone_nonincreasing():
+    f = jnp.arange(FRAC_ONE, dtype=jnp.float32)
+    g = np.asarray(lns.pwl_exp2_frac(f))
+    assert np.all(np.diff(g) <= 0)
+
+
+@given(st.floats(min_value=0.0, max_value=250.0))
+@settings(max_examples=200, deadline=None)
+def test_exp2_neg_close(d):
+    raw = jnp.float32(round(d * FRAC_ONE))
+    got = float(lns.exp2_neg(raw)) / FRAC_ONE
+    true = 2.0 ** (-round(d * FRAC_ONE) / FRAC_ONE)
+    # 7-bit output rail + PWL error
+    assert abs(got - true) <= 2.0 / FRAC_ONE + 6e-3
+
+
+@given(finite_bf16, finite_bf16)
+@settings(max_examples=300, deadline=None)
+def test_lns_add_same_sign_relative_error(a, b):
+    """Same-sign LNS add within the Mitchell factor 2^0.0861 ~ 6.2% + rail."""
+    a, b = abs(a), abs(b)
+    ab, bb = jnp.bfloat16(a), jnp.bfloat16(b)
+    if not (np.isfinite(float(ab)) and np.isfinite(float(bb))):
+        return
+    if float(ab) == 0 or float(bb) == 0:
+        return
+    sa, ra = lns.blinn_log2(ab)
+    sb, rb = lns.blinn_log2(bb)
+    sc, rc = lns.lns_add(sa, ra, sb, rb)
+    got = float(lns.lns_value_hw(sc, rc))
+    true = float(ab) + float(bb)
+    if (not np.isfinite(true) or not np.isfinite(got) or true == 0
+            or true > 1e37 or abs(rc) >= 32767):
+        return  # f32 overflow territory / rail saturation
+    assert got >= 0 and int(sc) == 0
+    # Blinn conversion error composes with the Mitchell add correction:
+    # two stacked ~6% approximations bound the result by ~12%.
+    assert abs(got - true) / true < 0.12
+
+
+@given(finite_bf16)
+@settings(max_examples=100, deadline=None)
+def test_lns_add_zero_identity(a):
+    ab = jnp.bfloat16(a)
+    if not np.isfinite(float(ab)):
+        return
+    sa, ra = lns.blinn_log2(ab)
+    sz, rz = lns.blinn_log2(jnp.bfloat16(0.0))
+    sc, rc = lns.lns_add(sa, ra, sz, rz)
+    assert float(lns.lns_value_hw(sc, rc)) == pytest.approx(
+        float(lns.lns_value_hw(sa, ra)), rel=1e-6)
+
+
+def test_lns_add_exact_cancellation():
+    s1, r1 = lns.blinn_log2(jnp.bfloat16(1.5))
+    s2, r2 = lns.blinn_log2(jnp.bfloat16(-1.5))
+    sc, rc = lns.lns_add(s1, r1, s2, r2)
+    assert float(rc) <= LOG_ZERO
+
+
+def test_quant_scorediff_clamps_and_rounds():
+    import math
+    d = jnp.float32(-20.0)  # below the -15 clamp
+    raw = float(lns.quant_scorediff(d))
+    assert raw == round(-15.0 * math.log2(math.e) * FRAC_ONE)
+    assert float(lns.quant_scorediff(jnp.float32(-jnp.inf))) == raw
+    assert float(lns.quant_scorediff(jnp.float32(0.0))) == 0.0
+
+
+def test_sign_selection_follows_larger_operand():
+    sa, ra = lns.blinn_log2(jnp.bfloat16(-8.0))
+    sb, rb = lns.blinn_log2(jnp.bfloat16(1.0))
+    sc, rc = lns.lns_add(sa, ra, sb, rb)
+    assert int(sc) == 1  # negative dominates
+    sc, rc = lns.lns_add(sb, rb, sa, ra)
+    assert int(sc) == 1
+
+
+def test_exact_config_is_near_float():
+    rng = np.random.default_rng(1)
+    a = rng.standard_normal(500).astype(np.float32)
+    b = rng.standard_normal(500).astype(np.float32)
+    sa, ra = lns.lns_from_bf16(jnp.asarray(a, jnp.bfloat16), lns.EXACT)
+    sb, rb = lns.lns_from_bf16(jnp.asarray(b, jnp.bfloat16), lns.EXACT)
+    sc, rc = lns.lns_add(sa, ra, sb, rb, lns.EXACT)
+    got = np.asarray(lns.lns_value_f32(sc, rc))
+    true = a.astype(np.float32) + b.astype(np.float32)
+    mask = np.abs(true) > 1e-2
+    rel = np.abs(got - true)[mask] / np.abs(true)[mask]
+    assert np.median(rel) < 0.01

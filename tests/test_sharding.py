@@ -1,0 +1,51 @@
+"""Sharding rule resolution: divisibility fallback, axis dedupe, pod drop."""
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel import sharding as sh
+
+
+def _mesh():
+    n = len(jax.devices())
+    return jax.make_mesh((max(n // 1, 1),), ("data",))
+
+
+def test_spec_basic():
+    spec = sh.spec_for(("batch", None, "vocab"))
+    assert spec == P(("pod", "data"), None, "model")
+
+
+def test_missing_mesh_axes_dropped():
+    mesh = jax.make_mesh((1,), ("data",))
+    spec = sh.spec_for(("batch", None), (8, 4), None, mesh)
+    assert spec == P("data")
+
+
+def test_divisibility_fallback_replicates():
+    mesh = jax.make_mesh((1,), ("data",))
+    rules = dict(sh.DEFAULT_RULES, heads="data")
+    # 20 heads % 1 == 0 -> kept; with a fake larger axis it must drop
+    spec = sh.spec_for(("heads",), (20,), rules, mesh)
+    assert spec == P("data")
+
+
+def test_duplicate_axis_dropped():
+    mesh = jax.make_mesh((1,), ("model",))
+    rules = {"seq": "model", "vocab": "model"}
+    spec = sh.spec_for(("seq", "vocab"), (8, 8), rules, mesh)
+    assert spec == P("model")  # second use of "model" dropped
+
+
+def test_tree_specs_maps_leaves():
+    logical = {"a": ("vocab", "embed"), "b": {"c": ("mlp",)}}
+    specs = sh.tree_specs(logical)
+    assert specs["a"] == P("model")
+    assert specs["b"]["c"] == P("model")
+
+
+def test_constrain_noop_without_context():
+    sh.set_context(None, None)
+    import jax.numpy as jnp
+    x = jnp.zeros((4, 4))
+    y = sh.constrain(x, ("batch", None))
+    assert y.shape == x.shape

@@ -1,0 +1,74 @@
+"""Fault-tolerant trainer: restart, determinism, straggler log, compression."""
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.model import build_model
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def _trainer(tmp_path, arch="qwen3-1.7b", **kw):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    tcfg = TrainerConfig(steps=10, ckpt_every=4, ckpt_dir=str(tmp_path),
+                         seq_len=32, global_batch=4, warmup=2, **kw)
+    return Trainer(model, tcfg)
+
+
+def test_training_reduces_loss(tmp_path):
+    tr = _trainer(tmp_path)
+    tr.tcfg.steps = 30
+    res = tr.run()
+    losses = [m["loss"] for m in res["metrics"]]
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+def test_failure_injection_restarts_from_checkpoint(tmp_path):
+    tr = _trainer(tmp_path)
+    res = tr.run(fail_at={6: RuntimeError("injected node failure")})
+    assert res["final_step"] == 10
+    assert res["restarts"] == 1
+    assert any("restarted from step 4" in e for e in res["events"])
+
+
+def test_replayed_steps_are_deterministic(tmp_path):
+    tr = _trainer(tmp_path)
+    res = tr.run(fail_at={6: RuntimeError("boom")})
+    by_step = {}
+    for m in res["metrics"]:
+        by_step.setdefault(m["step"], []).append(m["loss"])
+    replayed = {k: v for k, v in by_step.items() if len(v) > 1}
+    assert replayed, "failure should force replay of steps 4..5"
+    for step, losses in replayed.items():
+        assert abs(losses[0] - losses[1]) < 1e-4, step
+
+
+def test_too_many_failures_raises(tmp_path):
+    tr = _trainer(tmp_path)
+    tr.tcfg.max_restarts = 1
+    with pytest.raises(RuntimeError):
+        tr.run(fail_at={2: RuntimeError("a"), 3: RuntimeError("b"),
+                        5: RuntimeError("c")})
+
+
+def test_resume_from_existing_checkpoints(tmp_path):
+    tr = _trainer(tmp_path)
+    tr.tcfg.steps = 8
+    tr.run()
+    tr2 = _trainer(tmp_path)
+    tr2.tcfg.steps = 10
+    res = tr2.run()
+    assert any("resumed from step 8" in e for e in res["events"])
+    assert res["final_step"] == 10
+    assert len(res["metrics"]) == 2  # only steps 8, 9 executed
+
+
+def test_grad_compression_trains(tmp_path):
+    tr = _trainer(tmp_path, grad_compression=True)
+    tr.tcfg.steps = 12
+    res = tr.run()
+    losses = [m["loss"] for m in res["metrics"]]
+    assert np.isfinite(losses).all()
