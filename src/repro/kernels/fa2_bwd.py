@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import pallas_compat
+
 NEG_INF = -1e30
 LANES = 128
 
@@ -149,7 +151,7 @@ def fa2_backward(q, k, v, o, do, lse, *, causal=False, scale=None,
         out_specs=pl.BlockSpec((1, block_q, d), lambda b, iq, ik: (b, iq, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, lq, d), q.dtype),
         scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret, name="fa2_bwd_dq",
     )(q, k, v, do, lse3, delta)
@@ -175,7 +177,7 @@ def fa2_backward(q, k, v, o, do, lse, *, causal=False, scale=None,
         ],
         scratch_shapes=[pltpu.VMEM((block_kv, d), jnp.float32),
                         pltpu.VMEM((block_kv, d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret, name="fa2_bwd_dkv",
     )(q, k, v, do, lse3, delta)

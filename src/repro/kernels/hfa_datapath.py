@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import pallas_compat
 from repro.core import lns
 from repro.core.numerics import LOG_ZERO
 
@@ -125,7 +126,7 @@ def hfa_datapath_pallas(
         ],
         out_specs=pl.BlockSpec((1, lq, d), lambda b: (b, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, lq, d), jnp.bfloat16),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_compat.CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
         name="hfa_datapath",

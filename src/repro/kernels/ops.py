@@ -28,6 +28,7 @@ from repro.kernels import decode as decode_k
 from repro.kernels import fa2 as fa2_k
 from repro.kernels import hfa as hfa_k
 from repro.kernels import hfa_datapath as dp_k
+from repro.kernels import paged_decode as paged_k
 
 IMPLS = ("exact", "fa2", "hfa", "fa2_pallas", "hfa_pallas", "hfa_datapath")
 
@@ -210,28 +211,92 @@ def decode_attention(
         return out.reshape(b, hkv, g, d).reshape(b, 1, h, d).astype(q.dtype)
 
     # jnp path (supports traced kv_len): grouped-GQA masked attention.
-    # No head repeat and no f32 cache copy: the score/PV einsums read the
-    # bf16 ring directly with f32 accumulation - essential for the
-    # 32k/500k sequence-sharded caches.
-    scale_v = (1.0 / d ** 0.5) if scale is None else scale
     qg = q.reshape(b, hkv, g, d)                        # (B, Hkv, G, d)
+    out = _decode_jnp_grouped(qg, k_cache, v_cache, kv_len,
+                              scale=scale, use_hfa=use_hfa,
+                              acc_dtype=q.dtype)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def _decode_jnp_grouped(qg, k_cache, v_cache, kv_len, *, scale, use_hfa,
+                        acc_dtype):
+    """Grouped-GQA single-token decode, shared by the dense and paged
+    jnp paths.
+
+    No head repeat and no f32 cache copy: the score/PV einsums read the
+    bf16 ring directly with f32 accumulation - essential for the
+    32k/500k sequence-sharded caches.  ``kv_len`` masks unwritten cache
+    slots; it may be None, a (traced) scalar, or a per-sequence (B,)
+    vector (the paged/continuous-batching case, where a 0 entry marks a
+    free slot and yields a zero row).
+
+    qg: (B, Hkv, G, d); k_cache/v_cache: (B, S, Hkv, d).
+    Returns (B, Hkv, G, d) float32.
+    """
+    b, _, _, d = qg.shape
+    s_len = k_cache.shape[1]
+    scale_v = (1.0 / d ** 0.5) if scale is None else scale
     s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
                    preferred_element_type=jnp.float32) * scale_v
+    mask = None
     if kv_len is not None:
-        mask = jnp.arange(s_len) < kv_len
-        s = jnp.where(mask[None, None, None, :], s, -1e30)
+        kvl = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
+        mask = jnp.arange(s_len)[None, :] < kvl[:, None]     # (B, S)
+        s = jnp.where(mask[:, None, None, :], s, -1e30)
     if use_hfa:
         from repro.kernels import bitmath
         m = jnp.max(s, axis=-1, keepdims=True)
         p = bitmath.exp2_hfa_rail(bitmath.quant_rail(s - m))
-        if kv_len is not None:
-            p = jnp.where(mask[None, None, None, :], p, 0.0)
+        if mask is not None:
+            p = jnp.where(mask[:, None, None, :], p, 0.0)
         l = jnp.sum(p, axis=-1)
-        o = jnp.einsum("bhgs,bshd->bhgd", p.astype(q.dtype), v_cache,
+        o = jnp.einsum("bhgs,bshd->bhgd", p.astype(acc_dtype), v_cache,
                        preferred_element_type=jnp.float32)
-        out = decode_k.finalize_decode(o, l, use_hfa=True)
-    else:
-        p = jax.nn.softmax(s, axis=-1)
-        out = jnp.einsum("bhgs,bshd->bhgd", p.astype(q.dtype), v_cache,
-                         preferred_element_type=jnp.float32)
+        return decode_k.finalize_decode(o, l, use_hfa=True)
+    p = jax.nn.softmax(s, axis=-1)
+    if mask is not None:
+        # Zero fully-masked rows (free slots) instead of a uniform softmax
+        # over garbage.
+        p = jnp.where(jnp.any(mask, 1)[:, None, None, None], p, 0.0)
+    return jnp.einsum("bhgs,bshd->bhgd", p.astype(acc_dtype), v_cache,
+                      preferred_element_type=jnp.float32)
+
+
+def paged_decode_attention(
+    q: jax.Array,           # (B, 1, H, d) single new token per slot
+    k_pages: jax.Array,     # (P, page, Hkv, d) shared block pool
+    v_pages: jax.Array,     # (P, page, Hkv, d)
+    page_table: jax.Array,  # (B, pages_per_seq) int32
+    kv_lens: jax.Array,     # (B,) int32; 0 marks a free slot
+    *,
+    impl: str = "fa2",
+    scale: float | None = None,
+    force_pallas: bool = False,
+) -> jax.Array:
+    """Continuous-batching decode attention against a paged KV cache.
+
+    On TPU the paged Pallas kernel streams pages straight from HBM via
+    the page table (scalar prefetch) and finalizes with LogDiv for the
+    H-FA impls.  Elsewhere (or for non-Pallas impls) a jnp path gathers
+    the sequence's pages into a dense view and reuses the grouped decode
+    math - same numerics, XLA-compiled, which is also what the CPU CI
+    exercises end-to-end.  ``force_pallas`` pins the kernel (interpret
+    mode off-TPU) for parity tests.
+    """
+    b, one, h, d = q.shape
+    assert one == 1
+    hkv = k_pages.shape[2]
+    g = h // hkv
+    use_hfa = impl.startswith("hfa")
+    qg = q.reshape(b, h, d).reshape(b, hkv, g, d)
+    if force_pallas or (_on_tpu() and impl in ("fa2_pallas", "hfa_pallas")):
+        o, m, l = paged_k.paged_decode_partial_pallas(
+            qg, k_pages, v_pages, page_table, kv_lens, scale=scale,
+            use_hfa=use_hfa, interpret=not _on_tpu())
+        out = decode_k.finalize_decode(o, l, use_hfa=use_hfa)
+        return out.reshape(b, 1, h, d).astype(q.dtype)
+    k_cache = paged_k.gather_pages(k_pages, page_table)
+    v_cache = paged_k.gather_pages(v_pages, page_table)
+    out = _decode_jnp_grouped(qg, k_cache, v_cache, kv_lens, scale=scale,
+                              use_hfa=use_hfa, acc_dtype=q.dtype)
     return out.reshape(b, 1, h, d).astype(q.dtype)

@@ -1,0 +1,200 @@
+"""Paged flash-decode Pallas kernel + device-side page-table cache ops.
+
+The serving engine stores each layer's KV cache as a shared *block pool*
+of fixed-size pages, ``(num_pages, page_size, Hkv, d)``, addressed by a
+per-sequence page table ``(B, pages_per_seq)`` - vLLM's PagedAttention
+layout mapped onto the paper's multi-KV-block FAU architecture (Fig. 2):
+
+  * Every page is one KV block.  The kernel walks a sequence's page
+    table with scalar prefetch (the page id feeds the BlockSpec index
+    map, so the DMA engine gathers non-contiguous pages directly from
+    HBM) and streams them through the Alg. 2 online update.
+  * The kernel emits the same *partial triplet* (m, l, o~) as the dense
+    ``decode.py`` kernel, so the log-domain ACC merge (Eq. 16) and the
+    LogDiv finalize are reused unchanged.
+  * ``use_hfa`` switches the exponentials to the FIX16-quantized
+    PWL/bit-pack datapath, exactly as in the dense kernel.
+
+Also here (they pair with the kernel, not with host bookkeeping):
+``append_kv`` / ``write_prefill_kv`` scatter new K/V into the pools at
+page-table-resolved positions, and ``gather_pages`` reconstructs a dense
+view for the jnp fallback path and the test oracles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import pallas_compat
+from repro.kernels import bitmath
+from repro.kernels.decode import LANES, NEG_INF
+
+
+def _paged_decode_kernel(pt_ref, sl_ref, q_ref, k_ref, v_ref,
+                         o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr, *,
+                         page_size: int, scale: float, use_hfa: bool):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)           # (G, d)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)     # (page, d)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)     # (page, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    kv_ids = j * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kv_ids < sl_ref[b]
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    if use_hfa:
+        alpha = bitmath.exp2_hfa_rail(
+            bitmath.quant_rail(jnp.minimum(m_prev - m_new, 0.0)))
+        p = bitmath.exp2_hfa_rail(bitmath.quant_rail(s - m_new[:, None]))
+    else:
+        alpha = jnp.exp(jnp.minimum(m_prev - m_new, 0.0))
+        p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask & (m_new != NEG_INF)[:, None], p, 0.0)
+
+    l_scr[:, 0] = l_scr[:, 0] * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[:, 0] = m_new
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        o_ref[0, 0] = acc_scr[...].astype(o_ref.dtype)
+        m_ref[0, 0, :, 0] = m_scr[:, 0]
+        l_ref[0, 0, :, 0] = l_scr[:, 0]
+
+
+def paged_decode_partial_pallas(
+    q: jax.Array,           # (B, Hkv, G, d) grouped queries
+    k_pages: jax.Array,     # (P, page, Hkv, d) shared block pool
+    v_pages: jax.Array,     # (P, page, Hkv, d)
+    page_table: jax.Array,  # (B, pages_per_seq) int32 page ids
+    kv_lens: jax.Array,     # (B,) int32 valid KV length per sequence
+    *,
+    scale: float | None = None,
+    use_hfa: bool = False,
+    interpret: bool = True,
+):
+    """Partial paged decode attention: one block-FAU triplet per (b, hkv).
+
+    Page-table entries past ``ceil(kv_lens[b] / page)`` may be any valid
+    page id (their contribution is masked out); ``kv_lens[b] == 0`` marks
+    a free slot and yields an all-zero triplet.
+
+    Returns:
+      (o~, m, l): o~ (B, Hkv, G, d) unnormalized f32 accumulator, m/l
+      (B, Hkv, G) running max / sum-of-exps - mergeable with the dense
+      triplets via :func:`repro.kernels.decode.merge_partials`.
+    """
+    b, hkv, g, d = q.shape
+    _, page_size, hkv_p, _ = k_pages.shape
+    assert hkv_p == hkv, (hkv_p, hkv)
+    pages_per_seq = page_table.shape[1]
+    scale_v = (1.0 / d ** 0.5) if scale is None else scale
+
+    kernel = functools.partial(_paged_decode_kernel, page_size=page_size,
+                               scale=scale_v, use_hfa=use_hfa)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, pages_per_seq),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b, h, j, pt, sl: (b, h, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, d),
+                         lambda b, h, j, pt, sl: (pt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, d),
+                         lambda b, h, j, pt, sl: (pt[b, j], 0, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b, h, j, pt, sl: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1), lambda b, h, j, pt, sl: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1), lambda b, h, j, pt, sl: (b, h, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, LANES), jnp.float32),
+            pltpu.VMEM((g, LANES), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g, 1), jnp.float32),
+        ],
+        compiler_params=pallas_compat.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="paged_flash_decode_partial",
+    )(page_table.astype(jnp.int32), kv_lens.astype(jnp.int32), q,
+      k_pages, v_pages)
+    return o, m[..., 0], l[..., 0]
+
+
+# ------------------------------------------------------- page cache ops
+def _flat_write_pos(page_table, positions, page_size):
+    """Pool-flat write index for (b, position): table[b, pos//page] * page
+    + pos % page.  positions: (B,) or (B, L)."""
+    pidx = jnp.take_along_axis(page_table, positions // page_size, axis=1)
+    return pidx * page_size + positions % page_size
+
+
+def append_kv(k_pages, v_pages, k_new, v_new, page_table, seq_lens):
+    """Scatter one new token's K/V per *active* sequence into the pools.
+
+    k_new/v_new: (B, 1, Hkv, d); the token for sequence b lands at
+    position ``seq_lens[b]``.  Slots with ``seq_lens[b] == 0`` are free
+    (nothing has been prefilled) and their write is dropped.
+    """
+    p, page_size, hkv, d = k_pages.shape
+    pos = seq_lens.astype(jnp.int32)
+    flat = _flat_write_pos(page_table, pos[:, None], page_size)[:, 0]
+    flat = jnp.where(pos > 0, flat, p * page_size)     # OOB => dropped
+    kf = k_pages.reshape(p * page_size, hkv, d)
+    vf = v_pages.reshape(p * page_size, hkv, d)
+    kf = kf.at[flat].set(k_new[:, 0].astype(kf.dtype), mode="drop")
+    vf = vf.at[flat].set(v_new[:, 0].astype(vf.dtype), mode="drop")
+    return kf.reshape(k_pages.shape), vf.reshape(v_pages.shape)
+
+
+def write_prefill_kv(k_pages, v_pages, k_new, v_new, page_table):
+    """Write a fresh prompt's K/V (positions 0..L-1) through the page table.
+
+    k_new/v_new: (B, L, Hkv, d); row b uses page_table row b.  All rows
+    are written in full - the engine prefills per request (or per group
+    of equal-length requests), padding to a page multiple; padded tail
+    positions are masked later by ``kv_lens``.
+    """
+    p, page_size, hkv, d = k_pages.shape
+    b, l, _, _ = k_new.shape
+    pos = jnp.broadcast_to(jnp.arange(l, dtype=jnp.int32)[None], (b, l))
+    flat = _flat_write_pos(page_table, pos, page_size).reshape(-1)
+    kf = k_pages.reshape(p * page_size, hkv, d)
+    vf = v_pages.reshape(p * page_size, hkv, d)
+    kf = kf.at[flat].set(k_new.reshape(b * l, hkv, d).astype(kf.dtype))
+    vf = vf.at[flat].set(v_new.reshape(b * l, hkv, d).astype(vf.dtype))
+    return kf.reshape(k_pages.shape), vf.reshape(v_pages.shape)
+
+
+def gather_pages(pages: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Dense (B, pages_per_seq * page, Hkv, d) view of each sequence's KV."""
+    b, j = page_table.shape
+    _, page_size, hkv, d = pages.shape
+    out = jnp.take(pages, page_table.reshape(-1), axis=0)
+    return out.reshape(b, j * page_size, hkv, d)

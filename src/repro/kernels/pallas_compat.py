@@ -1,0 +1,12 @@
+"""Version compatibility shims for the Pallas TPU API surface.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``
+around 0.5; the kernels in this package run against both, so resolve
+the name once here instead of pinning a jax version.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")

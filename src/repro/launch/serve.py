@@ -1,7 +1,12 @@
-"""Production serving entry point: batched continuous decode loop.
+"""Production serving entry point: continuous batching over paged KV.
+
+Default path: the paged serving engine (block-pool KV cache + scheduler,
+src/repro/serving/) with requests arriving every step - they join and
+leave the batch mid-flight.  ``--dense`` falls back to the legacy
+fixed-batch greedy loop over a contiguous cache.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
-      --batch 4 --steps 64
+      --batch 2 --steps 4
 """
 import argparse
 import time
@@ -15,10 +20,17 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="concurrent decode slots")
     ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=32,
+                    help="decode tokens per request")
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--requests", type=int, default=0,
+                    help="total requests (paged mode; default 2x batch)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--dense", action="store_true",
+                    help="legacy fixed-batch loop over a contiguous cache")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -32,6 +44,50 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     pipe = DataPipeline.for_config(cfg, args.prompt_len, args.batch)
     batch = pipe.batch(0)
+
+    if args.dense or not _paged_supported(cfg):
+        if not args.dense:
+            print(f"note: {cfg.name} (family={cfg.family}, "
+                  f"pos_emb={cfg.pos_emb}) is not paged-servable yet; "
+                  "falling back to the dense fixed-batch loop")
+        _serve_dense(model, params, cfg, batch, args)
+        return
+
+    from repro.serving import Request, ServingEngine
+
+    n_req = args.requests or 2 * args.batch
+    prompts = np.concatenate(
+        [pipe.batch(s)["tokens"] for s in range((n_req + args.batch - 1)
+                                                // args.batch)])[:n_req]
+    engine = ServingEngine(model, params, max_batch=args.batch,
+                           page_size=args.page_size, max_seq=args.max_seq)
+    # one new arrival per step: requests join and leave mid-flight
+    arrivals = [(i, Request(rid=i, prompt=prompts[i].tolist(),
+                            max_new_tokens=args.steps))
+                for i in range(n_req)]
+    t0 = time.perf_counter()
+    finished = engine.run(arrivals)
+    dt = time.perf_counter() - t0
+    engine.cache.check_invariants()
+    st = engine.stats
+    print(f"served {len(finished)} requests in {st['steps']} steps "
+          f"({st['preemptions']} preemptions, page_size={args.page_size})")
+    print(f"generated {st['generated_tokens']} tokens in {dt:.2f} s "
+          f"-> {st['generated_tokens']/dt:.1f} tok/s")
+    print("sample:", finished[0].tokens[:12])
+
+
+def _paged_supported(cfg) -> bool:
+    """Archs the paged engine can serve today: rope-positioned,
+    attention-only stacks with token-only prompts (no Mamba per-slot
+    state, no encoder cross caches, no patch/frame prefixes)."""
+    return (cfg.pos_emb == "rope"
+            and all(k == "attn" for k in cfg.layer_kinds())
+            and cfg.family not in ("encdec", "vlm"))
+
+
+def _serve_dense(model, params, cfg, batch, args):
+    """Legacy path: one fixed batch, dense contiguous KV cache."""
     prompts = jnp.asarray(batch["tokens"])
 
     enc_out = None

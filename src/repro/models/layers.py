@@ -136,8 +136,15 @@ def attention_apply(
     cache_pos: jax.Array | int | None = None,
     causal: bool = True,
     attn_impl: str | None = None,
+    page_state: dict[str, jax.Array] | None = None,
 ):
-    """Returns (out (B,S,d_model), new_cache)."""
+    """Returns (out (B,S,d_model), new_cache).
+
+    ``cache`` is either a dense ring {"k", "v"} or a paged block pool
+    {"k_pages", "v_pages"}; the paged form additionally needs
+    ``page_state`` = {"page_table" (B, J), "seq_lens" (B,)} from the
+    serving engine (seq_lens[b] == 0 marks a free slot).
+    """
     b, s, _ = x.shape
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
     impl = attn_impl or cfg.attn_impl
@@ -161,6 +168,10 @@ def attention_apply(
                 positions = jnp.broadcast_to(positions[None], (b, s))
         q = rope_apply(q, positions, cfg.rope_theta)
         k = rope_apply(k, positions, cfg.rope_theta)
+
+    if cache is not None and "k_pages" in cache and kv_input is None:
+        return _paged_attention(p, q, k, v, cfg, cache, page_state,
+                                impl=impl, causal=causal, x_dtype=x.dtype)
 
     new_cache = cache
     if cache is not None and kv_input is None:
@@ -209,6 +220,39 @@ def attention_apply(
                                    block_kv=cfg.attn_block)
     out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return out, new_cache
+
+
+def _paged_attention(p, q, k, v, cfg, cache, page_state, *, impl, causal,
+                     x_dtype):
+    """Attention against a paged block-pool KV cache (serving path).
+
+    Decode: append the new token's K/V at seq_lens[b] through the page
+    table, then run the paged decode kernel / jnp gather path over each
+    slot's pages.  Prefill (fresh sequences at position 0, marked by
+    page_state["prefill"] - a 1-token prompt is still a prefill): the
+    chunk attends causally to itself - the pages are storage only - and
+    K/V land at positions 0..S-1 of each row's page table.  Padded
+    prefill tails are later masked by seq_lens, and are overwritten in
+    place by subsequent appends.
+    """
+    from repro.kernels import paged_decode as paged_k
+    assert page_state is not None, "paged cache requires page_state"
+    pt = page_state["page_table"]
+    sl = page_state["seq_lens"]
+    if not page_state.get("prefill", False):
+        kp, vp = paged_k.append_kv(cache["k_pages"], cache["v_pages"],
+                                   k, v, pt, sl)
+        kv_lens = jnp.where(sl > 0, sl + 1, 0)
+        out = kops.paged_decode_attention(q, kp, vp, pt, kv_lens,
+                                          impl=_decode_impl(impl))
+    else:
+        kp, vp = paged_k.write_prefill_kv(cache["k_pages"],
+                                          cache["v_pages"], k, v, pt)
+        out = kops.multihead_attention(q, k, v, impl=impl, causal=causal,
+                                       block_q=cfg.attn_block,
+                                       block_kv=cfg.attn_block)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x_dtype))
+    return out, {"k_pages": kp, "v_pages": vp}
 
 
 def _decode_impl(impl: str) -> str:

@@ -217,5 +217,74 @@ class LM:
         return logits, out
 
 
+    # ------------------------------------------------ paged decode (serving)
+    def init_paged_cache(self, num_pages: int, page_size: int):
+        """Shared block-pool KV caches for continuous-batching decode.
+
+        Unlike :meth:`init_cache` there is no per-slot ``max_seq``
+        reservation: all slots draw pages from one pool via the
+        engine-owned page table.  RoPE-positioned attention-only stacks
+        (the positions come from per-slot seq_lens, not a global
+        cache_pos; learned/sinusoidal embeddings would need per-slot
+        embed offsets).
+        """
+        cfg = self.cfg
+        assert cfg.pos_emb == "rope", (
+            "paged serving requires rope positions, got %r" % cfg.pos_emb)
+        cdt = _dtype(cfg.compute_dtype)
+        return T.stack_init_paged_cache(cfg, num_pages, page_size, cdt)
+
+    def paged_prefill(self, params, layers, tokens, page_table,
+                      last_pos=None):
+        """Prefill fresh sequences into paged KV storage.
+
+        tokens: (B, L) full-length rows (the engine prefills per request
+        or per equal-length group, padded up to a page multiple - padded
+        tail KV is masked by seq_lens and overwritten by later appends).
+        page_table: (B, J) rows pre-allocated for ceil(L/page) pages.
+        last_pos: optional (B,) int32 - each row's last *real* prompt
+        position; when given, the LM head runs only there and logits are
+        (B, 1, V) (the padded-vocab projection over every padded
+        position is the dominant prefill cost at full scale).  Without
+        it, logits cover all positions: (B, L, V).
+        Returns (logits, new layer caches).
+        """
+        cfg = self.cfg
+        cdt = _dtype(cfg.compute_dtype)
+        x = self._embed_in(params, tokens, cdt, pos0=0)
+        x = constrain(x, ("batch", "seq", "embed"))
+        ps = {"page_table": page_table, "prefill": True,
+              "seq_lens": jnp.zeros((tokens.shape[0],), jnp.int32)}
+        x, new_layers, _ = T.stack_apply(
+            params["layers"], x, cfg, caches=layers, cache_pos=0,
+            page_state=ps, causal=True)
+        if last_pos is not None:
+            x = jnp.take_along_axis(x, last_pos[:, None, None].astype(
+                jnp.int32), axis=1)
+        x = T._norm_apply(cfg, params["final_norm"], x)
+        return self._head(params, x), new_layers
+
+    def paged_decode_step(self, params, layers, tokens, page_table,
+                          seq_lens):
+        """One continuous-batching decode step across every slot.
+
+        tokens: (B, 1) next input token per slot; seq_lens: (B,) int32
+        current length per slot (0 = free slot: its write is dropped and
+        its logits are garbage to be ignored).  Appends each active
+        token's KV at position seq_lens[b] and returns
+        (logits (B, 1, V), new layer caches).
+        """
+        cfg = self.cfg
+        cdt = _dtype(cfg.compute_dtype)
+        x = self._embed_in(params, tokens, cdt, pos0=0)
+        x = constrain(x, ("batch", None, "embed"))
+        ps = {"page_table": page_table, "seq_lens": seq_lens}
+        x, new_layers, _ = T.stack_apply(
+            params["layers"], x, cfg, positions=seq_lens[:, None],
+            caches=layers, page_state=ps, causal=True)
+        x = T._norm_apply(cfg, params["final_norm"], x)
+        return self._head(params, x), new_layers
+
+
 def build_model(cfg: ModelConfig) -> LM:
     return LM(cfg)

@@ -77,15 +77,21 @@ def block_init(key, cfg, kind: str, ffn_kind: str, dtype, cross: bool = False):
 
 def block_apply(p, x, cfg, *, kind: str, ffn_kind: str,
                 positions=None, cache=None, cache_pos=None,
-                enc_cache=None, causal: bool = True):
+                enc_cache=None, causal: bool = True, page_state=None):
     """Returns (x, new_cache, aux_losses)."""
     aux: dict[str, jax.Array] = {}
     h = _norm_apply(cfg, p["norm1"], x)
     if kind == "attn":
-        attn_cache = None if cache is None else {"k": cache["k"], "v": cache["v"]}
+        if cache is None:
+            attn_cache = None
+        elif "k_pages" in cache:
+            attn_cache = {"k_pages": cache["k_pages"],
+                          "v_pages": cache["v_pages"]}
+        else:
+            attn_cache = {"k": cache["k"], "v": cache["v"]}
         y, new_attn_cache = L.attention_apply(
             p["mixer"], h, cfg, positions=positions, cache=attn_cache,
-            cache_pos=cache_pos, causal=causal)
+            cache_pos=cache_pos, causal=causal, page_state=page_state)
         new_cache = dict(cache) if cache is not None else None
         if new_attn_cache is not None and new_cache is not None:
             new_cache.update(new_attn_cache)
@@ -172,8 +178,12 @@ def stack_init(key, cfg, dtype, cross: bool = False):
 
 def stack_apply(params, x, cfg, *, positions=None, caches=None,
                 cache_pos=None, enc_caches=None, causal=True,
-                dropout_rng=None):
+                dropout_rng=None, page_state=None):
     """Scan over layer groups. caches/enc_caches are stacked (groups, ...).
+
+    ``page_state`` ({"page_table", "seq_lens"}, shared by every layer) is
+    closed over rather than scanned - all layers of one step read the
+    same tables.
 
     Returns (x, new_caches, aux_sum).
     """
@@ -189,7 +199,7 @@ def stack_apply(params, x, cfg, *, positions=None, caches=None,
             x, nc, aux = block_apply(
                 gp[f"l{i}"], x, cfg, kind=kinds[i], ffn_kind=ffns[i],
                 positions=positions, cache=cache_i, cache_pos=cache_pos,
-                enc_cache=enc_i, causal=causal)
+                enc_cache=enc_i, causal=causal, page_state=page_state)
             if new_gcache is not None:
                 new_gcache[f"l{i}"] = nc
             for k, v in aux.items():
@@ -221,6 +231,27 @@ def stack_apply(params, x, cfg, *, positions=None, caches=None,
     if outs and outs[0] is not None:
         new_caches = jax.tree.map(lambda *a: jnp.stack(a), *outs)
     return x, new_caches, aux
+
+
+def stack_init_paged_cache(cfg, num_pages: int, page_size: int, dtype):
+    """Paged block-pool caches, stacked (groups, P, page, Hkv, dh).
+
+    One shared pool per layer; sequences address it through the
+    engine-owned page table, so no per-slot ``max_seq`` is reserved.
+    Attention-only stacks for now (Mamba/hybrid state is per-slot and
+    dense; cross caches are tied to a fixed batch).
+    """
+    kinds, _, period = period_pattern(cfg)
+    groups = cfg.n_layers // period
+    assert all(k == "attn" for k in kinds), (
+        "paged KV cache supports attention-only stacks, got %r" % (kinds,))
+
+    def one_layer():
+        shape = (groups, num_pages, page_size, cfg.n_kv_heads, cfg.d_head)
+        return {"k_pages": jnp.zeros(shape, dtype),
+                "v_pages": jnp.zeros(shape, dtype)}
+
+    return {f"l{i}": one_layer() for i in range(period)}
 
 
 def stack_init_cache(cfg, batch: int, max_seq: int, dtype, cross: bool = False,

@@ -21,13 +21,27 @@ pattern.
 from __future__ import annotations
 
 import functools
+import inspect
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.kernels import decode as dk
+
+try:                                     # jax >= 0.6
+    from jax import shard_map as _shard_map_impl
+except ImportError:                      # older jax: experimental home
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+
+def shard_map(*args, **kwargs):
+    """shard_map across jax versions: translate the ``check_vma`` kwarg
+    to its pre-rename spelling ``check_rep`` when needed."""
+    params = inspect.signature(_shard_map_impl).parameters
+    if "check_vma" in kwargs and "check_vma" not in params:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _shard_map_impl(*args, **kwargs)
 
 
 def shardmap_decode_attention(

@@ -1,0 +1,16 @@
+"""Paged KV-cache + continuous-batching serving subsystem.
+
+paged_cache.py   host-side block pool: pages, page tables, slot lifecycle
+scheduler.py     request admission / preemption / retirement
+engine.py        ServingEngine: jitted paged prefill/decode over the model
+
+Device-side pieces live next to the kernels they pair with
+(:mod:`repro.kernels.paged_decode`) and in the model facade
+(:meth:`repro.models.model.LM.paged_decode_step`).
+"""
+from repro.serving.engine import ServingEngine
+from repro.serving.paged_cache import PagedKVCache
+from repro.serving.scheduler import FinishedRequest, Request, Scheduler
+
+__all__ = ["PagedKVCache", "Request", "FinishedRequest", "Scheduler",
+           "ServingEngine"]

@@ -1,0 +1,203 @@
+"""ServingEngine: continuous-batching greedy decode over paged KV.
+
+One engine step = admit+prefill new arrivals, then a single batched
+decode step over every running slot:
+
+  * prefill runs per admitted request (exact KV, padded to a page
+    multiple so jit retraces are bounded by pages_per_seq shapes), and
+    its last-position logits yield the first generated token;
+  * decode is one jitted call over all ``max_batch`` slots - free slots
+    ride along masked (seq_lens == 0), so the trace is unique and
+    requests join/leave without recompilation;
+  * sequences that outgrow the page pool are preempted back to the
+    scheduler queue and resumed later by replaying their tokens.
+
+Greedy argmax happens on-device inside the jitted step; only the
+(max_batch,) token vector crosses to the host per step.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.serving.paged_cache import PagedKVCache
+from repro.serving.scheduler import FinishedRequest, Request, Scheduler
+
+
+def _serving_jits(model):
+    """Jitted greedy prefill/decode, cached on the model so every engine
+    over the same model shares one compile cache (benchmarks and tests
+    spin up several engines).  Cache donation is skipped on CPU, where
+    it is unsupported and only adds dispatch overhead."""
+    jits = getattr(model, "_serving_jits", None)
+    if jits is not None:
+        return jits
+
+    def prefill_fn(params, layers, tokens, page_table, last_pos):
+        logits, layers = model.paged_prefill(params, layers, tokens,
+                                             page_table, last_pos)
+        return (jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32),
+                layers)
+
+    def decode_fn(params, layers, tokens, page_table, seq_lens):
+        logits, layers = model.paged_decode_step(
+            params, layers, tokens, page_table, seq_lens)
+        return (jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32),
+                layers)
+
+    donate = (1,) if jax.default_backend() != "cpu" else ()
+    jits = (jax.jit(prefill_fn, donate_argnums=donate),
+            jax.jit(decode_fn, donate_argnums=donate))
+    model._serving_jits = jits
+    return jits
+
+
+class ServingEngine:
+    def __init__(self, model, params, *, max_batch: int = 8,
+                 page_size: int = 16, num_pages: int | None = None,
+                 max_seq: int | None = None):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.model = model
+        self.params = params
+        self.page_size = page_size
+        self.max_batch = max_batch
+        max_seq = max_seq if max_seq is not None else model.cfg.max_seq
+        self.pages_per_seq = -(-max_seq // page_size)
+        if num_pages is None:
+            num_pages = max_batch * self.pages_per_seq
+        self.cache = PagedKVCache(num_pages, page_size, max_batch,
+                                  self.pages_per_seq)
+        self.sched = Scheduler(self.cache)
+        self.layers = model.init_paged_cache(num_pages, page_size)
+        self._next_tok = np.zeros((max_batch,), np.int32)
+        self.stats = {"steps": 0, "prefills": 0, "prefill_tokens": 0,
+                      "generated_tokens": 0, "preemptions": 0}
+        self._prefill, self._decode = _serving_jits(model)
+
+    # ------------------------------------------------------------- intake
+    def submit(self, req: Request) -> None:
+        limit = self.pages_per_seq * self.page_size
+        need = len(req.prompt) + req.max_new_tokens
+        if need > limit:
+            raise ValueError(
+                f"request {req.rid}: prompt+budget {need} exceeds the "
+                f"per-sequence ceiling {limit} (pages_per_seq * page_size)")
+        self.sched.submit(req)
+
+    # -------------------------------------------------------------- step
+    def step(self) -> list[FinishedRequest]:
+        """Admit + prefill arrivals, run one decode step; returns the
+        requests that finished during this step."""
+        finished = []
+        # Running slots claim their next page BEFORE arrivals are
+        # admitted - otherwise a new request can grab the last free
+        # pages and evict an in-flight sequence into a costly
+        # prompt+generated replay (recompute-preemption thrash).
+        for slot in sorted(self.sched.running):
+            if not self.cache.ensure_append_capacity(slot):
+                self.sched.preempt(slot)
+                self.stats["preemptions"] += 1
+
+        groups: dict[int, list[tuple[int, list[int]]]] = {}
+        for slot, tokens in self.sched.admit():
+            npages = self.cache.pages_for(len(tokens))
+            groups.setdefault(npages, []).append((slot, tokens))
+        for npages, grp in sorted(groups.items()):
+            self._prefill_group(npages, grp, finished)
+
+        # Second (idempotent) capacity pass: newly admitted slots also
+        # append a token this step, and a prompt ending exactly on a
+        # page boundary needs its next page before the decode scatter.
+        for slot in sorted(self.sched.running):
+            if not self.cache.ensure_append_capacity(slot):
+                self.sched.preempt(slot)
+                self.stats["preemptions"] += 1
+
+        if self.sched.running:
+            toks = jnp.asarray(self._next_tok[:, None])
+            nxt, self.layers = self._decode(
+                self.params, self.layers, toks,
+                jnp.asarray(self.cache.page_table[:, :self._table_width()]),
+                jnp.asarray(self.cache.seq_lens))
+            nxt = np.asarray(nxt)
+            for slot in sorted(self.sched.running):
+                self.cache.advance(slot)
+                tok = int(nxt[slot])
+                self.stats["generated_tokens"] += 1
+                status = self.sched.record_token(slot, tok)
+                if status == "running":
+                    self._next_tok[slot] = tok
+                else:
+                    finished.append(self.sched.retire(slot, status))
+        self.stats["steps"] += 1
+        return finished
+
+    def _table_width(self) -> int:
+        """Page-table width for this decode step: enough pages for the
+        longest running sequence (incl. the token being appended),
+        rounded up to a power of two so jit sees a handful of shapes.
+
+        This is where paging pays on the compute side too: attention
+        covers only the KV that exists, not the max_seq reservation the
+        dense cache burns every step.
+        """
+        need = max(self.cache.pages_for(int(self.cache.seq_lens[s]) + 1)
+                   for s in self.sched.running)
+        width = 1
+        while width < need:
+            width *= 2
+        return min(width, self.pages_per_seq)
+
+    def _prefill_group(self, npages: int, grp: list, finished: list):
+        """One batched prefill for all admitted requests spanning the
+        same page count (they pad to the same length => one jit trace
+        per (group size, page count) pair)."""
+        lpad = npages * self.page_size
+        bsz = len(grp)
+        toks = np.zeros((bsz, lpad), np.int32)
+        rows = np.zeros((bsz, self.pages_per_seq), np.int32)
+        last = np.zeros((bsz,), np.int32)
+        for i, (slot, tokens) in enumerate(grp):
+            toks[i, :len(tokens)] = tokens
+            rows[i] = self.cache.page_table[slot]
+            last[i] = len(tokens) - 1
+        greedy, self.layers = self._prefill(
+            self.params, self.layers, jnp.asarray(toks), jnp.asarray(rows),
+            jnp.asarray(last))
+        greedy = np.asarray(greedy)
+        self.stats["prefills"] += 1
+        for i, (slot, tokens) in enumerate(grp):
+            self.stats["prefill_tokens"] += len(tokens)
+            tok = int(greedy[i])
+            self.stats["generated_tokens"] += 1
+            status = self.sched.record_token(slot, tok)
+            if status == "running":
+                self._next_tok[slot] = tok
+            else:
+                finished.append(self.sched.retire(slot, status))
+
+    # --------------------------------------------------------------- run
+    def run(self, arrivals: list[tuple[int, Request]],
+            max_steps: int | None = None) -> list[FinishedRequest]:
+        """Drive to completion. arrivals: [(arrival_step, request)]."""
+        pending = sorted(arrivals, key=lambda a: a[0])
+        finished: list[FinishedRequest] = []
+        step = 0
+        while pending or self.sched.has_work:
+            while pending and pending[0][0] <= step:
+                self.submit(pending.pop(0)[1])
+            before = self.stats["generated_tokens"]
+            finished.extend(self.step())
+            step += 1
+            if max_steps is not None and step >= max_steps:
+                break
+            if (self.stats["generated_tokens"] == before
+                    and not self.sched.running and not pending
+                    and self.sched.waiting):
+                raise RuntimeError(
+                    "serving stalled: page pool too small for the "
+                    "smallest waiting request")
+        return finished

@@ -1,0 +1,128 @@
+"""Host-side block-pool manager for the paged KV cache.
+
+Pure numpy/python bookkeeping: which pages belong to which slot, what
+each slot's current length is, and the ``(max_batch, pages_per_seq)``
+page table the device kernels consume.  The actual KV pools are jax
+arrays owned by the engine (``LM.init_paged_cache``); this class never
+touches them - freeing a slot just returns its page ids to the free
+list, and stale KV in those pages is overwritten by the next owner
+(positions are always written before they become visible via seq_lens).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class PagedKVCache:
+    """Fixed-size page pool + per-slot page tables (alloc/append/free)."""
+
+    def __init__(self, num_pages: int, page_size: int, max_batch: int,
+                 pages_per_seq: int):
+        assert num_pages >= 1 and page_size >= 1
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.max_batch = max_batch
+        self.pages_per_seq = pages_per_seq
+        self.page_table = np.zeros((max_batch, pages_per_seq), np.int32)
+        self.seq_lens = np.zeros((max_batch,), np.int32)
+        self._free_pages: list[int] = list(range(num_pages - 1, -1, -1))
+        self._free_slots: list[int] = list(range(max_batch - 1, -1, -1))
+        self._slot_pages: dict[int, list[int]] = {}
+
+    # ------------------------------------------------------------ queries
+    @property
+    def free_page_count(self) -> int:
+        return len(self._free_pages)
+
+    @property
+    def free_slot_count(self) -> int:
+        return len(self._free_slots)
+
+    @property
+    def active_slots(self) -> list[int]:
+        return sorted(self._slot_pages)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def can_admit(self, prompt_len: int) -> bool:
+        need = self.pages_for(prompt_len)
+        return bool(self._free_slots and need <= self.pages_per_seq
+                    and need <= len(self._free_pages))
+
+    # ---------------------------------------------------------- lifecycle
+    def alloc_slot(self, prompt_len: int) -> int:
+        """Claim a slot + pages for a ``prompt_len``-token prefill.
+
+        seq_lens is set to prompt_len: the engine writes those positions
+        during prefill.  Raises if :meth:`can_admit` is False.
+        """
+        if prompt_len < 1:
+            # seq_lens == 0 is the stack-wide "free slot" sentinel; an
+            # active slot must own at least one token.
+            raise ValueError(f"prompt_len must be >= 1, got {prompt_len}")
+        if not self.can_admit(prompt_len):
+            raise RuntimeError(
+                f"cannot admit prompt of {prompt_len} tokens "
+                f"(free slots {self.free_slot_count}, "
+                f"free pages {self.free_page_count})")
+        slot = self._free_slots.pop()
+        pages = [self._free_pages.pop()
+                 for _ in range(self.pages_for(prompt_len))]
+        self._slot_pages[slot] = pages
+        self.page_table[slot] = 0
+        self.page_table[slot, :len(pages)] = pages
+        self.seq_lens[slot] = prompt_len
+        return slot
+
+    def ensure_append_capacity(self, slot: int) -> bool:
+        """Make room for one more token in ``slot``.
+
+        The next token lands at position seq_lens[slot]; if that crosses
+        into an unallocated page, grab one.  Returns False (slot left
+        untouched) when the pool is exhausted or the sequence is at the
+        pages_per_seq ceiling - the caller preempts or retires.
+        """
+        pages = self._slot_pages[slot]
+        need = self.pages_for(int(self.seq_lens[slot]) + 1)
+        if need <= len(pages):
+            return True
+        if need > self.pages_per_seq or not self._free_pages:
+            return False
+        page = self._free_pages.pop()
+        pages.append(page)
+        self.page_table[slot, len(pages) - 1] = page
+        return True
+
+    def advance(self, slot: int) -> None:
+        """Record that one token's KV was appended to ``slot``."""
+        assert self.pages_for(int(self.seq_lens[slot]) + 1) <= len(
+            self._slot_pages[slot]), "advance() without capacity"
+        self.seq_lens[slot] += 1
+
+    def free_slot(self, slot: int) -> None:
+        """Retire a slot: recycle its pages, zero its table row."""
+        pages = self._slot_pages.pop(slot)
+        self._free_pages.extend(reversed(pages))
+        self._free_slots.append(slot)
+        self.page_table[slot] = 0
+        self.seq_lens[slot] = 0
+
+    # ---------------------------------------------------------- integrity
+    def check_invariants(self) -> None:
+        """Raises AssertionError if the pool bookkeeping is inconsistent."""
+        used = [p for pages in self._slot_pages.values() for p in pages]
+        assert len(used) == len(set(used)), "page owned by two slots"
+        free = set(self._free_pages)
+        assert len(free) == len(self._free_pages), "duplicate free page"
+        assert not (free & set(used)), "page both free and owned"
+        assert len(free) + len(used) == self.num_pages, "page leak"
+        assert not (set(self._free_slots) & set(self._slot_pages)), \
+            "slot both free and active"
+        assert len(self._free_slots) + len(self._slot_pages) == \
+            self.max_batch, "slot leak"
+        for slot, pages in self._slot_pages.items():
+            assert len(pages) >= self.pages_for(int(self.seq_lens[slot]))
+            assert list(self.page_table[slot, :len(pages)]) == pages
+        for slot in self._free_slots:
+            assert self.seq_lens[slot] == 0

@@ -1,0 +1,106 @@
+"""Continuous-batching request scheduler over a PagedKVCache.
+
+Lifecycle: submit -> (waiting) -> admit/prefill -> (running) -> one
+token per engine step -> retire on EOS / length budget, or preempt back
+to waiting when the page pool runs dry (progress is kept: the resumed
+prefill replays prompt + generated-so-far, vLLM-style recompute
+preemption).  Pure host logic - fully testable without jax.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+from repro.serving.paged_cache import PagedKVCache
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    eos_id: int | None = None
+
+
+@dataclasses.dataclass
+class FinishedRequest:
+    rid: int
+    prompt: list[int]
+    tokens: list[int]          # generated tokens (includes eos if hit)
+    reason: str                # "eos" | "length"
+    preemptions: int = 0
+
+
+@dataclasses.dataclass
+class _Running:
+    req: Request
+    generated: list[int]
+    preemptions: int = 0
+
+
+class Scheduler:
+    """Admission / preemption / retirement; token progress per request."""
+
+    def __init__(self, cache: PagedKVCache):
+        self.cache = cache
+        self.waiting: deque[_Running] = deque()
+        self.running: dict[int, _Running] = {}     # slot -> state
+
+    # ------------------------------------------------------------ intake
+    def submit(self, req: Request) -> None:
+        assert len(req.prompt) >= 1, "empty prompt"
+        assert req.max_new_tokens >= 1
+        self.waiting.append(_Running(req, []))
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    # --------------------------------------------------------- admission
+    def admit(self) -> list[tuple[int, list[int]]]:
+        """Admit waiting requests while slots + pages allow (FCFS).
+
+        Returns [(slot, tokens_to_prefill)]: prompt plus any generated
+        tokens carried over from a preemption - replaying them rebuilds
+        the KV state the evicted sequence had.
+        """
+        out = []
+        while self.waiting:
+            st = self.waiting[0]
+            tokens = st.req.prompt + st.generated
+            if not self.cache.can_admit(len(tokens)):
+                break
+            self.waiting.popleft()
+            slot = self.cache.alloc_slot(len(tokens))
+            self.running[slot] = st
+            out.append((slot, tokens))
+        return out
+
+    # ------------------------------------------------------- progression
+    def record_token(self, slot: int, tok: int) -> str:
+        """Append a generated token; returns "running"|"eos"|"length"."""
+        st = self.running[slot]
+        st.generated.append(tok)
+        if st.req.eos_id is not None and tok == st.req.eos_id:
+            return "eos"
+        if len(st.generated) >= st.req.max_new_tokens:
+            return "length"
+        return "running"
+
+    def preempt(self, slot: int) -> None:
+        """Evict a running sequence (page-pool pressure); keep progress.
+
+        Re-queued at the *front*: oldest work resumes first, and a
+        preempted sequence never starves behind new arrivals.
+        """
+        st = self.running.pop(slot)
+        st.preemptions += 1
+        self.cache.free_slot(slot)
+        self.waiting.appendleft(st)
+
+    def retire(self, slot: int, reason: str) -> FinishedRequest:
+        st = self.running.pop(slot)
+        self.cache.free_slot(slot)
+        return FinishedRequest(rid=st.req.rid, prompt=st.req.prompt,
+                               tokens=st.generated, reason=reason,
+                               preemptions=st.preemptions)

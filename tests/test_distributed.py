@@ -94,7 +94,7 @@ def test_shardmap_decode_merge_matches_reference():
     out = _run("""
 import jax, numpy as np, jax.numpy as jnp, functools
 from jax.sharding import NamedSharding, PartitionSpec as P
-from jax import shard_map
+from repro.parallel.collectives import shard_map
 from repro.kernels import decode as dk
 from repro.core import reference as cref
 

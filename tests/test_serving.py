@@ -1,0 +1,394 @@
+"""Paged KV-cache + continuous-batching serving subsystem tests.
+
+Covers, per the subsystem spec:
+  * paged_decode Pallas kernel (interpret mode) vs the dense decode
+    kernel / exact reference, float and HFA datapaths;
+  * page scatter/gather ops;
+  * PagedKVCache alloc/free/reuse invariants (randomized trace);
+  * Scheduler admission/preemption/retirement (randomized trace, no jax);
+  * model-level paged vs dense logits parity and engine-level greedy
+    token parity under churn + preemption.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode, ops
+from repro.kernels import paged_decode as paged
+from repro.serving import PagedKVCache, Request, Scheduler, ServingEngine
+
+
+def _rand(shape, seed, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+def _paged_setup(seed, *, b=3, hkv=2, g=4, d=32, page=16, pages_each=4,
+                 extra_pages=3, dtype=jnp.float32):
+    """Random pools + a shuffled page table + ragged per-seq lengths."""
+    rng = np.random.default_rng(seed)
+    num_pages = b * pages_each + extra_pages
+    q = _rand((b, hkv, g, d), seed + 1, dtype)
+    k_pages = _rand((num_pages, page, hkv, d), seed + 2, dtype)
+    v_pages = _rand((num_pages, page, hkv, d), seed + 3, dtype)
+    perm = rng.permutation(num_pages)[:b * pages_each]
+    page_table = jnp.asarray(perm.reshape(b, pages_each).astype(np.int32))
+    kv_lens = jnp.asarray(
+        rng.integers(1, pages_each * page + 1, b).astype(np.int32))
+    return q, k_pages, v_pages, page_table, kv_lens
+
+
+def _dense_view(k_pages, page_table):
+    return np.asarray(paged.gather_pages(k_pages, page_table))
+
+
+# ------------------------------------------------------------- kernel
+@pytest.mark.parametrize("seed", [0, 1])
+def test_paged_kernel_matches_dense_kernel_float(seed):
+    """Same KV through the paged kernel (page gather) and the dense
+    kernel (contiguous) must agree to float roundoff."""
+    q, kp, vp, pt, kvl = _paged_setup(seed)
+    o, m, l = paged.paged_decode_partial_pallas(q, kp, vp, pt, kvl,
+                                                interpret=True)
+    out = np.asarray(decode.finalize_decode(o, l))
+    k_dense = paged.gather_pages(kp, pt)
+    v_dense = paged.gather_pages(vp, pt)
+    for i in range(q.shape[0]):     # dense kernel takes one kv_len at a time
+        od, md, ld = decode.decode_partial_pallas(
+            q[i], jnp.swapaxes(k_dense[i], 0, 1),
+            jnp.swapaxes(v_dense[i], 0, 1),
+            block_kv=16, kv_len=int(kvl[i]))
+        gold = np.asarray(decode.finalize_decode(od, ld))
+        np.testing.assert_allclose(out[i], gold, atol=1e-5)
+
+
+@pytest.mark.parametrize("seed", [2, 3])
+def test_paged_kernel_hfa_error_envelope(seed):
+    """HFA paged decode carries the same quantization-error envelope as
+    the dense HFA decode kernel (vs the exact float reference)."""
+    q, kp, vp, pt, kvl = _paged_setup(seed)
+    o, m, l = paged.paged_decode_partial_pallas(q, kp, vp, pt, kvl,
+                                                use_hfa=True,
+                                                interpret=True)
+    out = np.asarray(decode.finalize_decode(o, l, use_hfa=True))
+    k_dense = paged.gather_pages(kp, pt)
+    v_dense = paged.gather_pages(vp, pt)
+    for i in range(q.shape[0]):
+        kvl_i = int(kvl[i])
+        ki = k_dense[i, :kvl_i]
+        vi = v_dense[i, :kvl_i]
+        s = np.asarray(jnp.einsum("hgd,shd->hgs", q[i], ki)) / np.sqrt(
+            q.shape[-1])
+        p = np.exp(s - s.max(-1, keepdims=True))
+        gold = np.einsum("hgs,shd->hgd", p / p.sum(-1, keepdims=True),
+                         np.asarray(vi))
+        od, md, ld = decode.decode_partial_pallas(
+            q[i], jnp.swapaxes(k_dense[i], 0, 1),
+            jnp.swapaxes(v_dense[i], 0, 1),
+            block_kv=16, kv_len=kvl_i, use_hfa=True)
+        dense_hfa = np.asarray(decode.finalize_decode(od, ld, use_hfa=True))
+        err_paged = np.abs(out[i] - gold).max()
+        err_dense = np.abs(dense_hfa - gold).max()
+        # same envelope as the dense HFA decode kernel: the paged walk
+        # must not amplify the PWL/FIX16 quantization error
+        assert err_paged <= max(2.0 * err_dense, 1e-3), \
+            (err_paged, err_dense)
+        assert err_paged < 2e-1     # absolute sanity cap
+
+
+def test_paged_kernel_free_slot_zero():
+    q, kp, vp, pt, kvl = _paged_setup(7)
+    kvl = kvl.at[1].set(0)
+    o, m, l = paged.paged_decode_partial_pallas(q, kp, vp, pt, kvl,
+                                                interpret=True)
+    out = np.asarray(decode.finalize_decode(o, l))
+    assert np.all(out[1] == 0.0)
+    assert np.all(np.asarray(l)[1] == 0.0)
+
+
+@pytest.mark.parametrize("use_hfa", [False, True])
+def test_ops_paged_jnp_matches_pallas(use_hfa):
+    """The jnp gather path (CPU serving) == the Pallas kernel path."""
+    q, kp, vp, pt, kvl = _paged_setup(11)
+    b, hkv, g, d = q.shape
+    q4 = q.reshape(b, 1, hkv * g, d)
+    impl = "hfa_pallas" if use_hfa else "fa2_pallas"
+    a = np.asarray(ops.paged_decode_attention(q4, kp, vp, pt, kvl,
+                                              impl=impl, force_pallas=True))
+    jj = np.asarray(ops.paged_decode_attention(q4, kp, vp, pt, kvl,
+                                               impl=impl))
+    tol = 2e-2 if use_hfa else 1e-5
+    np.testing.assert_allclose(a, jj, atol=tol)
+
+
+def test_ops_paged_matches_dense_decode():
+    """ops.paged_decode_attention == ops.decode_attention on the same KV."""
+    q, kp, vp, pt, kvl = _paged_setup(13)
+    b, hkv, g, d = q.shape
+    q4 = q.reshape(b, 1, hkv * g, d)
+    out = np.asarray(ops.paged_decode_attention(q4, kp, vp, pt, kvl,
+                                                impl="fa2"))
+    k_dense = paged.gather_pages(kp, pt)
+    v_dense = paged.gather_pages(vp, pt)
+    for i in range(b):
+        gold = np.asarray(ops.decode_attention(
+            q4[i:i + 1], k_dense[i:i + 1], v_dense[i:i + 1], impl="fa2",
+            kv_len=int(kvl[i])))
+        np.testing.assert_allclose(out[i], gold[0], atol=1e-5)
+
+
+# ------------------------------------------------------ page cache ops
+def test_append_and_prefill_write_roundtrip():
+    page, hkv, d = 8, 2, 16
+    kp = jnp.zeros((6, page, hkv, d))
+    vp = jnp.zeros((6, page, hkv, d))
+    pt = jnp.asarray(np.array([[4, 1, 3], [5, 0, 2]], np.int32))
+    k_new = _rand((2, 11, hkv, d), 21)
+    v_new = _rand((2, 11, hkv, d), 22)
+    kp, vp = paged.write_prefill_kv(kp, vp, k_new, v_new, pt)
+    got = _dense_view(kp, pt)
+    np.testing.assert_allclose(got[:, :11], np.asarray(k_new))
+    assert np.all(got[:, 11:] == 0.0)
+
+    # append one token per row at position 11
+    k1 = _rand((2, 1, hkv, d), 23)
+    v1 = _rand((2, 1, hkv, d), 24)
+    sl = jnp.asarray(np.array([11, 11], np.int32))
+    kp2, vp2 = paged.append_kv(kp, vp, k1, v1, pt, sl)
+    got = _dense_view(kp2, pt)
+    np.testing.assert_allclose(got[:, 11], np.asarray(k1[:, 0]))
+    np.testing.assert_allclose(got[:, :11], np.asarray(k_new))
+
+    # free slot (seq_len 0): write must be dropped entirely
+    sl0 = jnp.asarray(np.array([0, 12], np.int32))
+    kp3, _ = paged.append_kv(kp2, vp2, k1, v1, pt, sl0)
+    np.testing.assert_allclose(_dense_view(kp3, pt)[0],
+                               _dense_view(kp2, pt)[0])
+
+
+# ------------------------------------------------- host page bookkeeping
+def test_paged_cache_alloc_free_reuse():
+    c = PagedKVCache(num_pages=8, page_size=4, max_batch=3, pages_per_seq=4)
+    s0 = c.alloc_slot(5)            # 2 pages
+    s1 = c.alloc_slot(9)            # 3 pages
+    c.check_invariants()
+    assert c.free_page_count == 3
+    assert not c.can_admit(16)      # would need 4 pages, only 3 free
+    assert c.can_admit(12)
+    with pytest.raises(RuntimeError):
+        c.alloc_slot(16)
+    # growth across a page boundary
+    assert c.ensure_append_capacity(s0)     # pos 5 fits page 2
+    c.advance(s0)
+    for _ in range(2):
+        assert c.ensure_append_capacity(s0)
+        c.advance(s0)
+    assert int(c.seq_lens[s0]) == 8
+    assert c.ensure_append_capacity(s0)     # pos 8 -> needs page 3
+    c.check_invariants()
+    # exhaustion: grow s1 until the pool dries up
+    grown = 0
+    while c.ensure_append_capacity(s1):
+        c.advance(s1)
+        grown += 1
+        if grown > 64:
+            raise AssertionError("never exhausted")
+    c.check_invariants()
+    # free recycles everything
+    c.free_slot(s0)
+    c.free_slot(s1)
+    c.check_invariants()
+    assert c.free_page_count == 8 and c.free_slot_count == 3
+    assert np.all(c.page_table == 0) and np.all(c.seq_lens == 0)
+
+
+def test_paged_cache_randomized_trace():
+    rng = np.random.default_rng(0)
+    c = PagedKVCache(num_pages=24, page_size=4, max_batch=6,
+                     pages_per_seq=6)
+    live: list[int] = []
+    for _ in range(400):
+        op = rng.random()
+        if op < 0.35 and c.free_slot_count:
+            plen = int(rng.integers(1, 17))
+            if c.can_admit(plen):
+                live.append(c.alloc_slot(plen))
+        elif op < 0.75 and live:
+            slot = live[rng.integers(len(live))]
+            if c.ensure_append_capacity(slot):
+                c.advance(slot)
+        elif live:
+            live.remove(slot := live[rng.integers(len(live))])
+            c.free_slot(slot)
+        c.check_invariants()
+
+
+def test_scheduler_randomized_trace():
+    """Admission/preemption/retirement over a random request stream,
+    driven without any model - pure host logic."""
+    rng = np.random.default_rng(1)
+    cache = PagedKVCache(num_pages=10, page_size=4, max_batch=3,
+                         pages_per_seq=5)
+    sched = Scheduler(cache)
+    n_req = 25
+    for i in range(n_req):
+        sched.submit(Request(rid=i, prompt=[1] * int(rng.integers(1, 9)),
+                             max_new_tokens=int(rng.integers(1, 8)),
+                             eos_id=7))
+    finished = []
+    for step in range(500):
+        if not sched.has_work:
+            break
+        for slot, tokens in sched.admit():
+            st = sched.record_token(slot, int(rng.integers(0, 9)))
+            if st != "running":
+                finished.append(sched.retire(slot, st))
+        for slot in sorted(sched.running):
+            if not cache.ensure_append_capacity(slot):
+                sched.preempt(slot)
+        for slot in sorted(sched.running):
+            cache.advance(slot)
+            st = sched.record_token(slot, int(rng.integers(0, 9)))
+            if st != "running":
+                finished.append(sched.retire(slot, st))
+        cache.check_invariants()
+    assert sorted(f.rid for f in finished) == list(range(n_req))
+    for f in finished:
+        assert f.reason in ("eos", "length")
+        if f.reason == "eos":
+            assert f.tokens[-1] == 7
+        else:
+            assert len(f.tokens) >= 1
+    cache.check_invariants()
+
+
+# ------------------------------------------------------- model + engine
+@pytest.fixture(scope="module")
+def qwen_smoke():
+    from repro.configs import get_config
+    from repro.models.model import build_model
+    cfg = get_config("qwen3-1.7b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.mark.parametrize("attn_impl", ["fa2", "hfa"])
+def test_model_paged_matches_dense_logits(qwen_smoke, attn_impl):
+    """paged prefill+decode logits == dense prefill+decode logits."""
+    import dataclasses
+    cfg, model, params = qwen_smoke
+    if attn_impl != cfg.attn_impl:
+        from repro.models.model import build_model
+        cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
+        model = build_model(cfg)
+    rng = np.random.default_rng(3)
+    b, l = 2, 7
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size, (b, l)), jnp.int32)
+    nxt = jnp.asarray(rng.integers(1, cfg.vocab_size, (b, 1)), jnp.int32)
+
+    cache = model.init_cache(params, b, 32)
+    lg_d, cache = model.prefill(params, cache, toks)
+    lg_d2, _ = model.decode_step(params, cache, nxt)
+
+    layers = model.init_paged_cache(num_pages=8, page_size=4)
+    pt = jnp.asarray(np.array([[3, 5, 1], [2, 6, 0]], np.int32))
+    lg_p, layers = model.paged_prefill(params, layers, toks, pt)
+    sl = jnp.full((b,), l, jnp.int32)
+    lg_p2, _ = model.paged_decode_step(params, layers, nxt, pt, sl)
+
+    tol = 1e-4 if attn_impl == "hfa" else 1e-5
+    np.testing.assert_allclose(np.asarray(lg_p[:, -1:]), np.asarray(lg_d),
+                               atol=tol)
+    np.testing.assert_allclose(np.asarray(lg_p2), np.asarray(lg_d2),
+                               atol=tol)
+
+
+def test_engine_matches_dense_generation_under_churn(qwen_smoke):
+    """Greedy tokens from the continuous-batching engine == a dense
+    fixed-cache loop per request, across churn and preemptions."""
+    cfg, model, params = qwen_smoke
+    rng = np.random.default_rng(5)
+    engine = ServingEngine(model, params, max_batch=3, page_size=4,
+                           num_pages=9, max_seq=40)
+    reqs = []
+    for i in range(6):
+        plen = int(rng.integers(2, 9))
+        reqs.append(Request(rid=i,
+                            prompt=rng.integers(
+                                1, cfg.vocab_size, plen).tolist(),
+                            max_new_tokens=int(rng.integers(3, 9))))
+    finished = engine.run([(i, r) for i, r in enumerate(reqs)])
+    engine.cache.check_invariants()
+    assert engine.cache.free_page_count == engine.cache.num_pages
+    assert sorted(f.rid for f in finished) == list(range(6))
+
+    dec = jax.jit(model.decode_step)
+    pre = jax.jit(model.prefill)
+    for f in finished:
+        req = reqs[f.rid]
+        cache = model.init_cache(params, 1, 40)
+        lg, cache = pre(params, cache,
+                        jnp.asarray([req.prompt], jnp.int32))
+        want = [int(jnp.argmax(lg[0, -1]))]
+        for _ in range(req.max_new_tokens - 1):
+            lg, cache = dec(params, cache,
+                            jnp.asarray([[want[-1]]], jnp.int32))
+            want.append(int(jnp.argmax(lg[0, -1])))
+        assert f.tokens == want, (f.rid, f.preemptions)
+
+
+def test_paged_prefill_single_token_prompt(qwen_smoke):
+    """A 1-token prompt is a PREFILL (even though S == 1): its KV must
+    land in the pages and its logits must match the dense path."""
+    cfg, model, params = qwen_smoke
+    rng = np.random.default_rng(9)
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size, (1, 1)), jnp.int32)
+
+    cache = model.init_cache(params, 1, 8)
+    lg_d, cache = model.prefill(params, cache, toks)
+    nxt = jnp.asarray(rng.integers(1, cfg.vocab_size, (1, 1)), jnp.int32)
+    lg_d2, _ = model.decode_step(params, cache, nxt)
+
+    layers = model.init_paged_cache(num_pages=4, page_size=1)
+    pt = jnp.asarray(np.array([[2, 1, 3]], np.int32))
+    lg_p, layers = model.paged_prefill(params, layers, toks, pt)
+    assert float(jnp.abs(layers["l0"]["k_pages"]).sum()) > 0.0, \
+        "prefill KV never written to the pages"
+    lg_p2, _ = model.paged_decode_step(params, layers, nxt, pt,
+                                       jnp.asarray([1], jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg_p[:, -1:]), np.asarray(lg_d),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(lg_p2), np.asarray(lg_d2),
+                               atol=1e-5)
+
+
+def test_engine_page_boundary_prompt(qwen_smoke):
+    """Prompt length == a page multiple: the first decode append needs a
+    fresh page; generation must still match the dense loop."""
+    cfg, model, params = qwen_smoke
+    rng = np.random.default_rng(11)
+    engine = ServingEngine(model, params, max_batch=2, page_size=4,
+                           max_seq=24)
+    prompt = rng.integers(1, cfg.vocab_size, 8).tolist()   # 2 full pages
+    [fin] = engine.run([(0, Request(rid=0, prompt=prompt,
+                                    max_new_tokens=5))])
+    cache = model.init_cache(params, 1, 24)
+    lg, cache = model.prefill(params, cache,
+                              jnp.asarray([prompt], jnp.int32))
+    want = [int(jnp.argmax(lg[0, -1]))]
+    for _ in range(4):
+        lg, cache = model.decode_step(
+            params, cache, jnp.asarray([[want[-1]]], jnp.int32))
+        want.append(int(jnp.argmax(lg[0, -1])))
+    assert fin.tokens == want
+
+
+def test_engine_rejects_oversized_request(qwen_smoke):
+    _, model, params = qwen_smoke
+    engine = ServingEngine(model, params, max_batch=2, page_size=4,
+                           max_seq=16)
+    with pytest.raises(ValueError):
+        engine.submit(Request(rid=0, prompt=[1] * 10, max_new_tokens=10))
