@@ -1,15 +1,33 @@
-"""Serving throughput benchmark: paged continuous batching vs dense
-fixed-batch, on a churn workload (staggered arrivals, variable output
-lengths, retirements every few steps).
+"""Serving benchmarks: paged continuous batching vs dense fixed-batch.
 
-The dense baseline processes requests in fixed batches of ``--batch``:
-every batch runs until its *longest* request finishes, so short requests
-hold slots idle (head-of-line blocking).  The paged engine refills slots
-the step they free up and allocates KV by the page, so the same hardware
-budget serves the same requests in fewer steps.  Both paths run the
-identical model + greedy decode; tok/s counts useful generated tokens.
+Workloads:
+
+  churn (default): staggered arrivals, variable output lengths,
+    retirements every few steps.  The dense baseline processes requests
+    in fixed batches of ``--batch``: every batch runs until its
+    *longest* request finishes, so short requests hold slots idle
+    (head-of-line blocking).  The paged engine refills slots the step
+    they free up and allocates KV by the page.
+
+  shared-prefix: every request opens with the same system prompt and
+    adds a unique tail, and every third request drags in a long unique
+    prompt (the prompt-churn stressor).  This exercises the two serving
+    pillars this benchmark is the scoreboard for:
+      (a) *chunked prefill*: with ``--prefill-budget`` the long prompts
+          stream in bounded chunks, so running decodes never stall -
+          the harness counts steps where a decoding slot produced no
+          token ("decode stalls") and expects zero;
+      (b) *prefix caching*: the shared system prompt's full pages are
+          claimed from the cache's chain-hash table instead of being
+          recomputed - ``prefill_tokens`` (computed) drops well below
+          the total prompt tokens submitted.
+
+Both paths run the identical model + greedy decode; tok/s counts useful
+generated tokens.
 
   PYTHONPATH=src python benchmarks/serving.py [--arch qwen3-1.7b] [--n 16]
+  PYTHONPATH=src python benchmarks/serving.py --workload shared-prefix
+  PYTHONPATH=src python benchmarks/serving.py --smoke       # CI gate
 """
 from __future__ import annotations
 
@@ -24,8 +42,24 @@ import numpy as np
 def make_workload(n, prompt_len, vocab, seed=0):
     """n requests, fixed prompt length, variable decode budgets."""
     rng = np.random.default_rng(seed)
-    prompts = rng.integers(1, vocab, (n, prompt_len)).astype(np.int32)
+    prompts = [rng.integers(1, vocab, prompt_len).tolist() for _ in range(n)]
     budgets = rng.integers(4, 24, n).astype(int)
+    return prompts, budgets
+
+
+def make_shared_prefix_workload(n, sys_len, uniq_len, long_len, vocab,
+                                seed=0):
+    """n requests sharing one system prompt; every 3rd has a long
+    unique prompt instead (long-prompt churn)."""
+    rng = np.random.default_rng(seed)
+    sysp = rng.integers(1, vocab, sys_len).tolist()
+    prompts = []
+    for i in range(n):
+        if i % 3 == 2:
+            prompts.append(rng.integers(1, vocab, long_len).tolist())
+        else:
+            prompts.append(sysp + rng.integers(1, vocab, uniq_len).tolist())
+    budgets = rng.integers(4, 16, n).astype(int)
     return prompts, budgets
 
 
@@ -40,18 +74,32 @@ def _dense_jits(model):
 
 
 def run_dense(model, params, prompts, budgets, batch, max_seq):
-    """Fixed-batch greedy loop: each batch runs to its longest budget."""
+    """Fixed-batch greedy loop: each batch runs to its longest budget.
+    Prompts are right-padded to the batch max (dense caches can't share
+    or chunk them); prompts that don't fit the max_seq reservation are
+    skipped outright - the dense baseline's equivalent of the paged
+    engine's reason="rejected"."""
     prefill, decode = _dense_jits(model)
+    keep = [i for i in range(len(prompts)) if len(prompts[i]) < max_seq]
+    if len(keep) < len(prompts):
+        print(f"dense baseline: skipping {len(prompts) - len(keep)} "
+              f"oversized prompt(s)")
+    prompts = [prompts[i] for i in keep]
+    budgets = np.asarray(budgets)[keep]
     n = len(prompts)
     useful = 0
     t0 = time.perf_counter()
     for start in range(0, n, batch):
-        p = prompts[start:start + batch]
+        grp = prompts[start:start + batch]
         b = budgets[start:start + batch]
-        if len(p) < batch:     # ragged tail still occupies a full batch
-            pad = batch - len(p)
-            p = np.concatenate([p, np.repeat(p[-1:], pad, 0)])
+        if len(grp) < batch:   # ragged tail still occupies a full batch
+            pad = batch - len(grp)
+            grp = grp + [grp[-1]] * pad
             b = np.concatenate([b, np.zeros(pad, int)])
+        lmax = max(len(p) for p in grp)
+        p = np.zeros((batch, lmax), np.int32)
+        for i, row in enumerate(grp):
+            p[i, :len(row)] = row
         cache = model.init_cache(params, batch, max_seq)
         logits, cache = prefill(params, cache, jnp.asarray(p))
         tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
@@ -64,19 +112,56 @@ def run_dense(model, params, prompts, budgets, batch, max_seq):
     return useful, time.perf_counter() - t0
 
 
-def run_paged(model, params, prompts, budgets, batch, max_seq, page_size):
-    from repro.serving import Request, ServingEngine
+def run_paged(model, params, prompts, budgets, batch, max_seq, page_size,
+              prefill_budget=None):
+    """Continuous batching with chunked prefill + prefix caching.
+
+    Drives the engine step by step (same policy as ``engine.run``) so it
+    can count decode stalls: steps where at least one slot was decoding
+    but no token came out - the latency spike chunked prefill removes.
+    """
+    from repro.serving import FinishedRequest, Request, ServingEngine
     engine = ServingEngine(model, params, max_batch=batch,
-                           page_size=page_size, max_seq=max_seq)
-    arrivals = [(i, Request(rid=i, prompt=prompts[i].tolist(),
-                            max_new_tokens=int(budgets[i])))
-                for i in range(len(prompts))]
+                           page_size=page_size, max_seq=max_seq,
+                           prefill_budget=prefill_budget)
+    pending = [(i, Request(rid=i, prompt=list(prompts[i]),
+                           max_new_tokens=int(budgets[i])))
+               for i in range(len(prompts))]
+    finished = []
+    stalls = 0
+    step = 0
     t0 = time.perf_counter()
-    finished = engine.run(arrivals)
+    while pending or engine.sched.has_work:
+        while pending and pending[0][0] <= step:
+            _, req = pending.pop(0)
+            try:
+                engine.submit(req)
+            except ValueError:      # over the per-sequence ceiling:
+                engine.stats["rejected"] += 1       # mirror engine.run
+                finished.append(FinishedRequest(
+                    rid=req.rid, prompt=req.prompt, tokens=[],
+                    reason="rejected"))
+        # Per-slot stall check: every sequence that was decoding at step
+        # start must have one more token after the step, wherever it
+        # ended up (still running, preempted back to waiting, finished).
+        # An aggregate token-count delta would hide a stalled decode
+        # behind another request's prefill completion.
+        before = {st.req.rid: len(st.generated)
+                  for st in engine.sched.running.values() if st.decoding}
+        finished.extend(engine.step())
+        after = {st.req.rid: len(st.generated)
+                 for st in engine.sched.running.values()}
+        after.update((st.req.rid, len(st.generated))
+                     for st in engine.sched.waiting)
+        after.update((f.rid, len(f.tokens)) for f in finished)
+        stalls += sum(1 for rid, n in before.items()
+                      if after.get(rid, n) <= n)
+        step += 1
+        assert step < 100000, "benchmark runaway"
     dt = time.perf_counter() - t0
     engine.cache.check_invariants()
     assert len(finished) == len(prompts)
-    return engine.stats["generated_tokens"], dt, engine.stats
+    return engine.stats["generated_tokens"], dt, engine.stats, stalls
 
 
 def main():
@@ -84,14 +169,32 @@ def main():
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--full", action="store_true",
                     help="full-size config (default: reduced smoke scale)")
+    ap.add_argument("--workload", choices=("churn", "shared-prefix"),
+                    default="churn")
     ap.add_argument("--n", type=int, default=16, help="total requests")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--sys-len", type=int, default=32,
+                    help="shared system prompt length (shared-prefix)")
+    ap.add_argument("--long-len", type=int, default=64,
+                    help="long churn prompt length (shared-prefix)")
     ap.add_argument("--max-seq", type=int, default=256,
                     help="dense reserves this per slot up front; paged "
                          "allocates pages on demand - the gap is the win")
     ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="prefill token budget per engine step (chunked "
+                         "prefill); default: unbounded")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: reduced shared-prefix run asserting "
+                         "zero decode stalls + prefix-cache reuse")
     args = ap.parse_args()
+    if args.smoke:
+        args.workload = "shared-prefix"
+        args.full = False
+        args.n = min(args.n, 9)
+        if args.prefill_budget is None:
+            args.prefill_budget = 16
 
     from repro.configs import get_config
     from repro.models.model import build_model
@@ -101,29 +204,52 @@ def main():
         cfg = cfg.reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    prompts, budgets = make_workload(args.n, args.prompt_len,
-                                     cfg.vocab_size)
+    if args.workload == "shared-prefix":
+        prompts, budgets = make_shared_prefix_workload(
+            args.n, args.sys_len, args.prompt_len, args.long_len,
+            cfg.vocab_size)
+    else:
+        prompts, budgets = make_workload(args.n, args.prompt_len,
+                                         cfg.vocab_size)
 
     # Warm both paths with the identical workload so every jit shape
     # (prefill group sizes, resumed lengths) compiles outside the timed
     # region; engines share one compile cache via the model.
     run_dense(model, params, prompts, budgets, args.batch, args.max_seq)
     run_paged(model, params, prompts, budgets, args.batch, args.max_seq,
-              args.page_size)
+              args.page_size, args.prefill_budget)
 
     d_tok, d_dt = run_dense(model, params, prompts, budgets, args.batch,
                             args.max_seq)
-    p_tok, p_dt, stats = run_paged(model, params, prompts, budgets,
-                                   args.batch, args.max_seq,
-                                   args.page_size)
+    p_tok, p_dt, stats, stalls = run_paged(
+        model, params, prompts, budgets, args.batch, args.max_seq,
+        args.page_size, args.prefill_budget)
     d_tps = d_tok / d_dt
     p_tps = p_tok / p_dt
+    total_prompt = sum(len(p) for p in prompts)
     print(f"dense fixed-batch:  {d_tok} tok in {d_dt:.2f}s -> "
           f"{d_tps:.1f} tok/s")
     print(f"paged continuous:   {p_tok} tok in {p_dt:.2f}s -> "
           f"{p_tps:.1f} tok/s  (steps={stats['steps']}, "
+          f"chunks={stats['prefill_chunks']}, "
           f"preemptions={stats['preemptions']})")
+    print(f"prefill tokens:     {stats['prefill_tokens']} computed / "
+          f"{total_prompt} submitted "
+          f"({stats['cached_prefill_tokens']} reused from prefix cache)")
+    print(f"decode stalls:      {stalls} steps")
     print(f"speedup paged/dense: {p_tps / d_tps:.2f}x")
+
+    if args.smoke:
+        ok = True
+        if stalls != 0:
+            print("SMOKE FAIL: decode stalled during chunked prefill")
+            ok = False
+        if stats["cached_prefill_tokens"] == 0 or \
+                stats["prefill_tokens"] >= total_prompt:
+            print("SMOKE FAIL: prefix cache reused nothing")
+            ok = False
+        print("smoke:", "OK" if ok else "FAIL")
+        return ok
     return p_tps >= d_tps
 
 

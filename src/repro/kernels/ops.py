@@ -29,6 +29,7 @@ from repro.kernels import fa2 as fa2_k
 from repro.kernels import hfa as hfa_k
 from repro.kernels import hfa_datapath as dp_k
 from repro.kernels import paged_decode as paged_k
+from repro.kernels import paged_prefill as paged_pf_k
 
 IMPLS = ("exact", "fa2", "hfa", "fa2_pallas", "hfa_pallas", "hfa_datapath")
 
@@ -220,8 +221,9 @@ def decode_attention(
 
 def _decode_jnp_grouped(qg, k_cache, v_cache, kv_len, *, scale, use_hfa,
                         acc_dtype):
-    """Grouped-GQA single-token decode, shared by the dense and paged
-    jnp paths.
+    """Grouped-GQA single-token decode: the L == 1 case of
+    :func:`_prefill_jnp_grouped` (the single query sits at position
+    ``kv_len - 1``, so the causal mask degenerates to ``< kv_len``).
 
     No head repeat and no f32 cache copy: the score/PV einsums read the
     bf16 ring directly with f32 accumulation - essential for the
@@ -233,33 +235,111 @@ def _decode_jnp_grouped(qg, k_cache, v_cache, kv_len, *, scale, use_hfa,
     qg: (B, Hkv, G, d); k_cache/v_cache: (B, S, Hkv, d).
     Returns (B, Hkv, G, d) float32.
     """
-    b, _, _, d = qg.shape
+    b = qg.shape[0]
+    s_len = k_cache.shape[1]
+    if kv_len is None:
+        kvl = jnp.full((b,), s_len, jnp.int32)
+    else:
+        kvl = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
+    out = _prefill_jnp_grouped(qg[:, :, :, None, :], k_cache, v_cache,
+                               kvl[:, None] - 1, kvl, scale=scale,
+                               use_hfa=use_hfa, acc_dtype=acc_dtype)
+    return out[:, :, :, 0, :]
+
+
+def _prefill_jnp_grouped(qg, k_cache, v_cache, q_pos, kv_lens, *, scale,
+                         use_hfa, acc_dtype):
+    """Grouped-GQA chunked-prefill attention over a gathered dense view.
+
+    The chunk's queries attend causally against everything already
+    written for their sequence (shared prefix pages, earlier chunks,
+    and the chunk itself).  Full-softmax per query row in f32 - the
+    result is independent of how the prompt was cut into chunks, which
+    is what makes chunked prefill token-exact.
+
+    qg: (B, Hkv, G, L, d); k_cache/v_cache: (B, S, Hkv, d);
+    q_pos: (B, L) absolute position per chunk row; kv_lens: (B,) valid
+    KV length (chunk rows at q_pos >= kv_lens are padding - their
+    output is garbage the caller ignores).
+    Returns (B, Hkv, G, L, d) float32.
+    """
+    b, _, _, _, d = qg.shape
     s_len = k_cache.shape[1]
     scale_v = (1.0 / d ** 0.5) if scale is None else scale
-    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+    s = jnp.einsum("bhgld,bshd->bhgls", qg, k_cache,
                    preferred_element_type=jnp.float32) * scale_v
-    mask = None
-    if kv_len is not None:
-        kvl = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
-        mask = jnp.arange(s_len)[None, :] < kvl[:, None]     # (B, S)
-        s = jnp.where(mask[:, None, None, :], s, -1e30)
+    kv_ids = jnp.arange(s_len, dtype=jnp.int32)
+    mask = (kv_ids[None, None, :] <= q_pos[:, :, None]) & \
+        (kv_ids[None, None, :] < kv_lens.astype(jnp.int32)[:, None, None])
+    s = jnp.where(mask[:, None, None, :, :], s, -1e30)
+    live = jnp.any(mask, axis=-1)                              # (B, L)
     if use_hfa:
         from repro.kernels import bitmath
         m = jnp.max(s, axis=-1, keepdims=True)
         p = bitmath.exp2_hfa_rail(bitmath.quant_rail(s - m))
-        if mask is not None:
-            p = jnp.where(mask[:, None, None, :], p, 0.0)
+        p = jnp.where(mask[:, None, None, :, :], p, 0.0)
         l = jnp.sum(p, axis=-1)
-        o = jnp.einsum("bhgs,bshd->bhgd", p.astype(acc_dtype), v_cache,
+        o = jnp.einsum("bhgls,bshd->bhgld", p.astype(acc_dtype), v_cache,
                        preferred_element_type=jnp.float32)
-        return decode_k.finalize_decode(o, l, use_hfa=True)
-    p = jax.nn.softmax(s, axis=-1)
-    if mask is not None:
-        # Zero fully-masked rows (free slots) instead of a uniform softmax
-        # over garbage.
-        p = jnp.where(jnp.any(mask, 1)[:, None, None, None], p, 0.0)
-    return jnp.einsum("bhgs,bshd->bhgd", p.astype(acc_dtype), v_cache,
-                      preferred_element_type=jnp.float32)
+        out = decode_k.finalize_decode(o, l, use_hfa=True)
+    else:
+        p = jax.nn.softmax(s, axis=-1)
+        p = jnp.where(live[:, None, None, :, None], p, 0.0)
+        out = jnp.einsum("bhgls,bshd->bhgld", p.astype(acc_dtype), v_cache,
+                         preferred_element_type=jnp.float32)
+    # Fully-masked rows (free slots / padding): their pages may hold
+    # junk (donated buffers), and even with p == 0 the PV einsum turns
+    # NaN/Inf into 0 * NaN = NaN - force the row's output to zero (this
+    # also covers the l == 0 row under use_hfa, which would otherwise
+    # reach finalize_decode's divide with garbage o).
+    return jnp.where(live[:, None, None, :, None], out, 0.0)
+
+
+def paged_prefill_attention(
+    q: jax.Array,           # (B, L, H, d) one prefill chunk per sequence
+    k_pages: jax.Array,     # (P, page, Hkv, d) shared block pool
+    v_pages: jax.Array,     # (P, page, Hkv, d)
+    page_table: jax.Array,  # (B, pages_per_seq) int32
+    start_pos: jax.Array,   # (B,) int32 chunk start position
+    chunk_lens: jax.Array,  # (B,) int32 real (unpadded) chunk length
+    *,
+    impl: str = "fa2",
+    scale: float | None = None,
+    force_pallas: bool = False,
+) -> jax.Array:
+    """Chunked-prefill attention against a paged KV cache.
+
+    The chunk's K/V must already be scattered into the pools
+    (:func:`repro.kernels.paged_prefill.write_chunk_kv`); queries then
+    attend causally to KV positions ``<= start_pos[b] + i``.  On TPU the
+    paged-prefill Pallas kernel walks the page table with scalar
+    prefetch and finalizes with LogDiv for the H-FA impls; elsewhere a
+    jnp path gathers the pages into a dense view (the CPU CI path).
+    ``force_pallas`` pins the kernel (interpret mode off-TPU) for
+    parity tests.
+    """
+    b, l, h, d = q.shape
+    hkv = k_pages.shape[2]
+    g = h // hkv
+    use_hfa = impl.startswith("hfa")
+    kv_lens = (start_pos + chunk_lens).astype(jnp.int32)
+    # (B, L, H, d) -> (B, Hkv, G, L, d): heads are kv-major (GQA repeat).
+    qg = jnp.swapaxes(q, 1, 2).reshape(b, hkv, g, l, d)
+    if force_pallas or (_on_tpu() and impl in ("fa2_pallas", "hfa_pallas")):
+        o, m, ell = paged_pf_k.paged_prefill_partial_pallas(
+            qg, k_pages, v_pages, page_table, start_pos, kv_lens,
+            scale=scale, use_hfa=use_hfa, interpret=not _on_tpu())
+        out = decode_k.finalize_decode(o, ell, use_hfa=use_hfa)
+    else:
+        k_cache = paged_k.gather_pages(k_pages, page_table)
+        v_cache = paged_k.gather_pages(v_pages, page_table)
+        q_pos = start_pos.astype(jnp.int32)[:, None] + \
+            jnp.arange(l, dtype=jnp.int32)[None]
+        out = _prefill_jnp_grouped(qg, k_cache, v_cache, q_pos, kv_lens,
+                                   scale=scale, use_hfa=use_hfa,
+                                   acc_dtype=q.dtype)
+    # (B, Hkv, G, L, d) -> (B, L, H, d)
+    return jnp.swapaxes(out.reshape(b, h, l, d), 1, 2).astype(q.dtype)
 
 
 def paged_decode_attention(

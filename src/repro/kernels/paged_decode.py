@@ -150,9 +150,13 @@ def paged_decode_partial_pallas(
 # ------------------------------------------------------- page cache ops
 def _flat_write_pos(page_table, positions, page_size):
     """Pool-flat write index for (b, position): table[b, pos//page] * page
-    + pos % page.  positions: (B,) or (B, L)."""
-    pidx = jnp.take_along_axis(page_table, positions // page_size, axis=1)
-    return pidx * page_size + positions % page_size
+    + pos % page.  positions: (B,) or (B, L).  Page indices are clamped
+    to the table width so padded positions past the allocation resolve
+    to a (wrong but in-bounds) page - callers that can produce them
+    (write_chunk_kv) drop those writes explicitly."""
+    pidx = jnp.minimum(positions // page_size, page_table.shape[1] - 1)
+    page = jnp.take_along_axis(page_table, pidx, axis=1)
+    return page * page_size + positions % page_size
 
 
 def append_kv(k_pages, v_pages, k_new, v_new, page_table, seq_lens):

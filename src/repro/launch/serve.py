@@ -29,6 +29,11 @@ def main():
     ap.add_argument("--requests", type=int, default=0,
                     help="total requests (paged mode; default 2x batch)")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="prefill token budget per engine step (chunked "
+                         "prefill, Sarathi-style); default: unbounded")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable shared-prefix page reuse")
     ap.add_argument("--dense", action="store_true",
                     help="legacy fixed-batch loop over a contiguous cache")
     args = ap.parse_args()
@@ -60,7 +65,9 @@ def main():
         [pipe.batch(s)["tokens"] for s in range((n_req + args.batch - 1)
                                                 // args.batch)])[:n_req]
     engine = ServingEngine(model, params, max_batch=args.batch,
-                           page_size=args.page_size, max_seq=args.max_seq)
+                           page_size=args.page_size, max_seq=args.max_seq,
+                           prefill_budget=args.prefill_budget,
+                           prefix_caching=not args.no_prefix_cache)
     # one new arrival per step: requests join and leave mid-flight
     arrivals = [(i, Request(rid=i, prompt=prompts[i].tolist(),
                             max_new_tokens=args.steps))
@@ -71,7 +78,10 @@ def main():
     engine.cache.check_invariants()
     st = engine.stats
     print(f"served {len(finished)} requests in {st['steps']} steps "
-          f"({st['preemptions']} preemptions, page_size={args.page_size})")
+          f"({st['prefill_chunks']} prefill chunks, "
+          f"{st['preemptions']} preemptions, page_size={args.page_size})")
+    print(f"prefill: {st['prefill_tokens']} tokens computed, "
+          f"{st['cached_prefill_tokens']} reused from prefix cache")
     print(f"generated {st['generated_tokens']} tokens in {dt:.2f} s "
           f"-> {st['generated_tokens']/dt:.1f} tok/s")
     print("sample:", finished[0].tokens[:12])

@@ -228,23 +228,36 @@ def _paged_attention(p, q, k, v, cfg, cache, page_state, *, impl, causal,
 
     Decode: append the new token's K/V at seq_lens[b] through the page
     table, then run the paged decode kernel / jnp gather path over each
-    slot's pages.  Prefill (fresh sequences at position 0, marked by
-    page_state["prefill"] - a 1-token prompt is still a prefill): the
-    chunk attends causally to itself - the pages are storage only - and
-    K/V land at positions 0..S-1 of each row's page table.  Padded
-    prefill tails are later masked by seq_lens, and are overwritten in
-    place by subsequent appends.
+    slot's pages.  Chunked prefill (page_state carries "start_pos"):
+    scatter the chunk's K/V at positions start_pos[b].. (padding rows
+    dropped, so shared copy-on-write pages stay intact), then attend the
+    chunk causally against everything materialized for its sequence -
+    shared prefix pages, earlier chunks, and the chunk itself.  Legacy
+    fresh prefill (no "start_pos": whole prompt at position 0 - a
+    1-token prompt is still a prefill): the chunk attends causally to
+    itself - the pages are storage only - and K/V land at positions
+    0..S-1 of each row's page table; padded prefill tails are later
+    masked by seq_lens, and are overwritten in place by later appends.
     """
     from repro.kernels import paged_decode as paged_k
+    from repro.kernels import paged_prefill as paged_pf_k
     assert page_state is not None, "paged cache requires page_state"
     pt = page_state["page_table"]
-    sl = page_state["seq_lens"]
     if not page_state.get("prefill", False):
+        sl = page_state["seq_lens"]
         kp, vp = paged_k.append_kv(cache["k_pages"], cache["v_pages"],
                                    k, v, pt, sl)
         kv_lens = jnp.where(sl > 0, sl + 1, 0)
         out = kops.paged_decode_attention(q, kp, vp, pt, kv_lens,
                                           impl=_decode_impl(impl))
+    elif "start_pos" in page_state:
+        sp = page_state["start_pos"]
+        cl = page_state["chunk_lens"]
+        kp, vp = paged_pf_k.write_chunk_kv(cache["k_pages"],
+                                           cache["v_pages"], k, v, pt,
+                                           sp, cl)
+        out = kops.paged_prefill_attention(q, kp, vp, pt, sp, cl,
+                                           impl=_decode_impl(impl))
     else:
         kp, vp = paged_k.write_prefill_kv(cache["k_pages"],
                                           cache["v_pages"], k, v, pt)

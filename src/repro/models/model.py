@@ -235,29 +235,54 @@ class LM:
         return T.stack_init_paged_cache(cfg, num_pages, page_size, cdt)
 
     def paged_prefill(self, params, layers, tokens, page_table,
-                      last_pos=None):
-        """Prefill fresh sequences into paged KV storage.
+                      last_pos=None, start_pos=None):
+        """Prefill sequences into paged KV storage.
 
-        tokens: (B, L) full-length rows (the engine prefills per request
-        or per equal-length group, padded up to a page multiple - padded
-        tail KV is masked by seq_lens and overwritten by later appends).
-        page_table: (B, J) rows pre-allocated for ceil(L/page) pages.
-        last_pos: optional (B,) int32 - each row's last *real* prompt
-        position; when given, the LM head runs only there and logits are
-        (B, 1, V) (the padded-vocab projection over every padded
-        position is the dominant prefill cost at full scale).  Without
-        it, logits cover all positions: (B, L, V).
+        tokens: (B, L) token rows padded to a common length L.
+        page_table: (B, J) rows with pages allocated for the positions
+        being written.
+        last_pos: optional (B,) int32 - each row's last *real* position
+        within ``tokens``; when given, the LM head runs only there and
+        logits are (B, 1, V) (the padded-vocab projection over every
+        padded position is the dominant prefill cost at full scale).
+        Without it, logits cover all positions: (B, L, V).
+        start_pos: optional (B,) int32 - *chunked* prefill: row b is a
+        chunk of ``last_pos[b] + 1`` real tokens starting at absolute
+        position ``start_pos[b]`` (pos > 0 resumes a paused or
+        budget-bounded prefill).  The chunk attends causally against all
+        KV already written for its sequence (shared prefix pages +
+        earlier chunks + itself); padding rows are never written.
+        Requires ``last_pos``.  Without it, the legacy whole-prompt
+        fresh prefill at position 0 runs (padded tail KV is masked by
+        seq_lens and overwritten by later appends).
         Returns (logits, new layer caches).
         """
         cfg = self.cfg
         cdt = _dtype(cfg.compute_dtype)
         x = self._embed_in(params, tokens, cdt, pos0=0)
         x = constrain(x, ("batch", "seq", "embed"))
-        ps = {"page_table": page_table, "prefill": True,
-              "seq_lens": jnp.zeros((tokens.shape[0],), jnp.int32)}
+        if start_pos is None:
+            positions = None
+            ps = {"page_table": page_table, "prefill": True,
+                  "seq_lens": jnp.zeros((tokens.shape[0],), jnp.int32)}
+        else:
+            assert last_pos is not None, "chunked prefill needs last_pos"
+            # Positions reach attention via `positions`, which only RoPE
+            # consumes; learned/sinusoidal embeds would need a per-row
+            # embedding offset (pos0 is scalar) and silently misplace
+            # any chunk at start_pos > 0.
+            assert cfg.pos_emb == "rope", (
+                "chunked paged prefill requires rope positions, got %r"
+                % cfg.pos_emb)
+            start_pos = start_pos.astype(jnp.int32)
+            positions = start_pos[:, None] + jnp.arange(
+                tokens.shape[1], dtype=jnp.int32)[None]
+            ps = {"page_table": page_table, "prefill": True,
+                  "start_pos": start_pos,
+                  "chunk_lens": last_pos.astype(jnp.int32) + 1}
         x, new_layers, _ = T.stack_apply(
-            params["layers"], x, cfg, caches=layers, cache_pos=0,
-            page_state=ps, causal=True)
+            params["layers"], x, cfg, positions=positions, caches=layers,
+            cache_pos=0, page_state=ps, causal=True)
         if last_pos is not None:
             x = jnp.take_along_axis(x, last_pos[:, None, None].astype(
                 jnp.int32), axis=1)

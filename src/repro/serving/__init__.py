@@ -10,7 +10,8 @@ Device-side pieces live next to the kernels they pair with
 """
 from repro.serving.engine import ServingEngine
 from repro.serving.paged_cache import PagedKVCache
-from repro.serving.scheduler import FinishedRequest, Request, Scheduler
+from repro.serving.scheduler import (FinishedRequest, PrefillChunk, Request,
+                                     Scheduler)
 
-__all__ = ["PagedKVCache", "Request", "FinishedRequest", "Scheduler",
-           "ServingEngine"]
+__all__ = ["PagedKVCache", "PrefillChunk", "Request", "FinishedRequest",
+           "Scheduler", "ServingEngine"]

@@ -1,16 +1,26 @@
 """ServingEngine: continuous-batching greedy decode over paged KV.
 
-One engine step = admit+prefill new arrivals, then a single batched
-decode step over every running slot:
+One engine step = one token-budget step that *mixes* prefill chunks with
+the batched decode (Sarathi-style):
 
-  * prefill runs per admitted request (exact KV, padded to a page
-    multiple so jit retraces are bounded by pages_per_seq shapes), and
-    its last-position logits yield the first generated token;
-  * decode is one jitted call over all ``max_batch`` slots - free slots
-    ride along masked (seq_lens == 0), so the trace is unique and
-    requests join/leave without recompilation;
-  * sequences that outgrow the page pool are preempted back to the
-    scheduler queue and resumed later by replaying their tokens.
+  * prefill work is bounded by ``prefill_budget`` tokens per step and
+    handed out as chunks, so a long prompt streams in across steps
+    while every running decode keeps producing one token per step (no
+    prefill stall);
+  * admission claims the longest cached prompt prefix (full pages, via
+    the cache's chain-hash table) instead of recomputing it -
+    shared-system-prompt workloads prefill only their unique tail;
+  * decode is one jitted call over all ``max_batch`` slots - free and
+    mid-prefill slots ride along masked (length 0), so the trace is
+    unique and requests join/leave without recompilation;
+  * under page pressure, mid-prefill sequences pause in place (keep
+    pages, resume at pos > 0) and decode-append pressure preempts the
+    *least-advanced* sequence (cheapest replay) - whose published
+    prefix pages stay claimable, so the replay usually skips straight
+    to the last full page;
+  * copy-on-write page copies (fork / shared-page divergence) are
+    drained from the cache and applied to the device pools before any
+    write.
 
 Greedy argmax happens on-device inside the jitted step; only the
 (max_batch,) token vector crosses to the host per step.
@@ -22,22 +32,25 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import paged_prefill as paged_pf_k
 from repro.serving.paged_cache import PagedKVCache
-from repro.serving.scheduler import FinishedRequest, Request, Scheduler
+from repro.serving.scheduler import (FinishedRequest, PrefillChunk, Request,
+                                     Scheduler)
 
 
 def _serving_jits(model):
-    """Jitted greedy prefill/decode, cached on the model so every engine
-    over the same model shares one compile cache (benchmarks and tests
-    spin up several engines).  Cache donation is skipped on CPU, where
-    it is unsupported and only adds dispatch overhead."""
+    """Jitted greedy prefill/decode/copy, cached on the model so every
+    engine over the same model shares one compile cache (benchmarks and
+    tests spin up several engines).  Cache donation is skipped on CPU,
+    where it is unsupported and only adds dispatch overhead."""
     jits = getattr(model, "_serving_jits", None)
     if jits is not None:
         return jits
 
-    def prefill_fn(params, layers, tokens, page_table, last_pos):
+    def prefill_fn(params, layers, tokens, page_table, start_pos, last_pos):
         logits, layers = model.paged_prefill(params, layers, tokens,
-                                             page_table, last_pos)
+                                             page_table, last_pos=last_pos,
+                                             start_pos=start_pos)
         return (jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32),
                 layers)
 
@@ -47,9 +60,16 @@ def _serving_jits(model):
         return (jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32),
                 layers)
 
-    donate = (1,) if jax.default_backend() != "cpu" else ()
-    jits = (jax.jit(prefill_fn, donate_argnums=donate),
-            jax.jit(decode_fn, donate_argnums=donate))
+    def copy_fn(layers, src, dst):
+        # Layer pools are stacked (groups, P, page, Hkv, d): page axis 1.
+        return jax.tree.map(
+            lambda pool: paged_pf_k.copy_pages(pool, src, dst, axis=1),
+            layers)
+
+    cpu = jax.default_backend() == "cpu"
+    jits = (jax.jit(prefill_fn, donate_argnums=() if cpu else (1,)),
+            jax.jit(decode_fn, donate_argnums=() if cpu else (1,)),
+            jax.jit(copy_fn, donate_argnums=() if cpu else (0,)))
     model._serving_jits = jits
     return jits
 
@@ -57,13 +77,20 @@ def _serving_jits(model):
 class ServingEngine:
     def __init__(self, model, params, *, max_batch: int = 8,
                  page_size: int = 16, num_pages: int | None = None,
-                 max_seq: int | None = None):
+                 max_seq: int | None = None,
+                 prefill_budget: int | None = None,
+                 prefix_caching: bool = True):
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if prefill_budget is not None and prefill_budget < 1:
+            raise ValueError(
+                f"prefill_budget must be >= 1, got {prefill_budget}")
         self.model = model
         self.params = params
         self.page_size = page_size
         self.max_batch = max_batch
+        self.prefill_budget = prefill_budget
+        self.prefix_caching = prefix_caching
         max_seq = max_seq if max_seq is not None else model.cfg.max_seq
         self.pages_per_seq = -(-max_seq // page_size)
         if num_pages is None:
@@ -73,9 +100,11 @@ class ServingEngine:
         self.sched = Scheduler(self.cache)
         self.layers = model.init_paged_cache(num_pages, page_size)
         self._next_tok = np.zeros((max_batch,), np.int32)
-        self.stats = {"steps": 0, "prefills": 0, "prefill_tokens": 0,
-                      "generated_tokens": 0, "preemptions": 0}
-        self._prefill, self._decode = _serving_jits(model)
+        self.stats = {"steps": 0, "prefills": 0, "prefill_chunks": 0,
+                      "prefill_tokens": 0, "cached_prefill_tokens": 0,
+                      "generated_tokens": 0, "preemptions": 0,
+                      "cow_copies": 0, "rejected": 0}
+        self._prefill, self._decode, self._copy = _serving_jits(model)
 
     # ------------------------------------------------------------- intake
     def submit(self, req: Request) -> None:
@@ -89,106 +118,196 @@ class ServingEngine:
 
     # -------------------------------------------------------------- step
     def step(self) -> list[FinishedRequest]:
-        """Admit + prefill arrivals, run one decode step; returns the
-        requests that finished during this step."""
-        finished = []
-        # Running slots claim their next page BEFORE arrivals are
-        # admitted - otherwise a new request can grab the last free
-        # pages and evict an in-flight sequence into a costly
-        # prompt+generated replay (recompute-preemption thrash).
-        for slot in sorted(self.sched.running):
-            if not self.cache.ensure_append_capacity(slot):
-                self.sched.preempt(slot)
+        """One token-budget step: continue/admit prefill chunks, run one
+        batched decode over every decoding slot; returns the requests
+        that finished during this step."""
+        finished: list[FinishedRequest] = []
+        # Decoding slots claim their next page BEFORE prefill work is
+        # scheduled - otherwise a prompt chunk can grab the last free
+        # pages and evict an in-flight decode into a costly replay.
+        self._capacity_pass()
+
+        chunks, reused = self.sched.schedule_prefill(self.prefill_budget)
+        if not chunks and not self.sched.decoding_slots() \
+                and self.sched.running:
+            # Gridlock: every running slot is a paused prefill and the
+            # pool is dry.  Free the least-advanced one (cheapest
+            # replay; its published pages stay claimable) so the rest
+            # can finish, then re-plan.
+            victim = self.sched.choose_victim()
+            if victim is not None:
+                self.sched.preempt(victim)
                 self.stats["preemptions"] += 1
+                chunks, r2 = self.sched.schedule_prefill(
+                    self.prefill_budget)
+                reused += r2
+        self.stats["cached_prefill_tokens"] += reused
 
-        groups: dict[int, list[tuple[int, list[int]]]] = {}
-        for slot, tokens in self.sched.admit():
-            npages = self.cache.pages_for(len(tokens))
-            groups.setdefault(npages, []).append((slot, tokens))
-        for npages, grp in sorted(groups.items()):
-            self._prefill_group(npages, grp, finished)
-
-        # Second (idempotent) capacity pass: newly admitted slots also
-        # append a token this step, and a prompt ending exactly on a
-        # page boundary needs its next page before the decode scatter.
-        for slot in sorted(self.sched.running):
-            if not self.cache.ensure_append_capacity(slot):
-                self.sched.preempt(slot)
-                self.stats["preemptions"] += 1
-
-        if self.sched.running:
-            toks = jnp.asarray(self._next_tok[:, None])
-            nxt, self.layers = self._decode(
-                self.params, self.layers, toks,
-                jnp.asarray(self.cache.page_table[:, :self._table_width()]),
-                jnp.asarray(self.cache.seq_lens))
-            nxt = np.asarray(nxt)
-            for slot in sorted(self.sched.running):
-                self.cache.advance(slot)
-                tok = int(nxt[slot])
-                self.stats["generated_tokens"] += 1
-                status = self.sched.record_token(slot, tok)
-                if status == "running":
-                    self._next_tok[slot] = tok
-                else:
-                    finished.append(self.sched.retire(slot, status))
+        self._apply_pending_copies()
+        self._run_chunks(chunks, finished)
+        # Second (idempotent) capacity pass: slots that finished their
+        # prefill this step also append a token below, and a prompt
+        # ending exactly on a page boundary needs its next page before
+        # the decode scatter.
+        self._capacity_pass()
+        self._apply_pending_copies()
+        self._run_decode(finished)
         self.stats["steps"] += 1
         return finished
 
-    def _table_width(self) -> int:
-        """Page-table width for this decode step: enough pages for the
-        longest running sequence (incl. the token being appended),
-        rounded up to a power of two so jit sees a handful of shapes.
+    # ---------------------------------------------------------- capacity
+    def _capacity_pass(self) -> None:
+        """Guarantee every decoding slot can append one token, preempting
+        the least-advanced running sequence under pool pressure."""
+        for slot in self.sched.decoding_slots():
+            if slot not in self.sched.running:
+                continue                    # already evicted as a victim
+            while not self.cache.ensure_append_capacity(slot):
+                at_ceiling = self.cache.pages_for(
+                    int(self.cache.seq_lens[slot]) + 1) \
+                    > self.cache.pages_per_seq
+                victim = slot if at_ceiling else self.sched.choose_victim()
+                self.sched.preempt(victim)
+                self.stats["preemptions"] += 1
+                if victim == slot:
+                    break
 
-        This is where paging pays on the compute side too: attention
-        covers only the KV that exists, not the max_seq reservation the
-        dense cache burns every step.
+    def _apply_pending_copies(self) -> None:
+        """Apply queued copy-on-write page copies to the device pools.
+
+        Padded to a power-of-two batch (dropped out-of-range writes) so
+        jit sees a handful of shapes.
         """
-        need = max(self.cache.pages_for(int(self.cache.seq_lens[s]) + 1)
-                   for s in self.sched.running)
-        width = 1
-        while width < need:
-            width *= 2
-        return min(width, self.pages_per_seq)
+        copies = self.cache.take_pending_copies()
+        if not copies:
+            return
+        self.stats["cow_copies"] += len(copies)
+        n = 1
+        while n < len(copies):
+            n *= 2
+        src = np.zeros((n,), np.int32)
+        dst = np.full((n,), self.cache.num_pages, np.int32)   # dropped
+        for i, (s, d) in enumerate(copies):
+            src[i], dst[i] = s, d
+        self.layers = self._copy(self.layers, jnp.asarray(src),
+                                 jnp.asarray(dst))
 
-    def _prefill_group(self, npages: int, grp: list, finished: list):
-        """One batched prefill for all admitted requests spanning the
-        same page count (they pad to the same length => one jit trace
-        per (group size, page count) pair)."""
-        lpad = npages * self.page_size
-        bsz = len(grp)
-        toks = np.zeros((bsz, lpad), np.int32)
-        rows = np.zeros((bsz, self.pages_per_seq), np.int32)
-        last = np.zeros((bsz,), np.int32)
-        for i, (slot, tokens) in enumerate(grp):
-            toks[i, :len(tokens)] = tokens
-            rows[i] = self.cache.page_table[slot]
-            last[i] = len(tokens) - 1
-        greedy, self.layers = self._prefill(
-            self.params, self.layers, jnp.asarray(toks), jnp.asarray(rows),
-            jnp.asarray(last))
-        greedy = np.asarray(greedy)
-        self.stats["prefills"] += 1
-        for i, (slot, tokens) in enumerate(grp):
-            self.stats["prefill_tokens"] += len(tokens)
-            tok = int(greedy[i])
+    # ----------------------------------------------------------- prefill
+    def _run_chunks(self, chunks: list[PrefillChunk], finished: list):
+        """Run this step's prefill chunks, batched by padded length (one
+        jit trace per (group size, padded length) pair).  Final chunks
+        yield the sequence's first new token and flip it into decode."""
+        groups: dict[int, list[PrefillChunk]] = {}
+        for ck in chunks:
+            lpad = -(-len(ck.tokens) // self.page_size) * self.page_size
+            groups.setdefault(lpad, []).append(ck)
+        for lpad, grp in sorted(groups.items()):
+            bsz = len(grp)
+            width = self._pow2_width(max(
+                self.cache.pages_for(ck.start + len(ck.tokens))
+                for ck in grp))
+            toks = np.zeros((bsz, lpad), np.int32)
+            rows = np.zeros((bsz, width), np.int32)
+            start = np.zeros((bsz,), np.int32)
+            last = np.zeros((bsz,), np.int32)
+            for i, ck in enumerate(grp):
+                toks[i, :len(ck.tokens)] = ck.tokens
+                rows[i] = self.cache.page_table[ck.slot, :width]
+                start[i] = ck.start
+                last[i] = len(ck.tokens) - 1
+            greedy, self.layers = self._prefill(
+                self.params, self.layers, jnp.asarray(toks),
+                jnp.asarray(rows), jnp.asarray(start), jnp.asarray(last))
+            greedy = np.asarray(greedy)
+            self.stats["prefills"] += 1
+            for i, ck in enumerate(grp):
+                self.stats["prefill_chunks"] += 1
+                self.stats["prefill_tokens"] += len(ck.tokens)
+                self.sched.complete_chunk(ck)
+                if self.prefix_caching:
+                    self.cache.register_pages(
+                        ck.slot, self.sched.running[ck.slot].tokens())
+                if not ck.is_final:
+                    continue
+                tok = int(greedy[i])
+                self.stats["generated_tokens"] += 1
+                status = self.sched.record_token(ck.slot, tok)
+                if status == "running":
+                    self._next_tok[ck.slot] = tok
+                else:
+                    finished.append(self.sched.retire(ck.slot, status))
+
+    # ------------------------------------------------------------ decode
+    def _run_decode(self, finished: list) -> None:
+        dslots = self.sched.decoding_slots()
+        if not dslots:
+            return
+        # Mid-prefill and free slots ride along masked (length 0): their
+        # KV write is dropped and their logits ignored.
+        dl = np.zeros((self.max_batch,), np.int32)
+        for slot in dslots:
+            dl[slot] = self.cache.seq_lens[slot]
+        width = self._pow2_width(max(
+            self.cache.pages_for(int(self.cache.seq_lens[s]) + 1)
+            for s in dslots))
+        toks = jnp.asarray(self._next_tok[:, None])
+        nxt, self.layers = self._decode(
+            self.params, self.layers, toks,
+            jnp.asarray(self.cache.page_table[:, :width]),
+            jnp.asarray(dl))
+        nxt = np.asarray(nxt)
+        for slot in dslots:
+            self.cache.advance(slot)
+            tok = int(nxt[slot])
             self.stats["generated_tokens"] += 1
             status = self.sched.record_token(slot, tok)
+            if self.prefix_caching and \
+                    int(self.cache.seq_lens[slot]) % self.page_size == 0:
+                # A page just filled: publish it so an identical prefix
+                # (or this sequence's own replay after a preemption) can
+                # claim it instead of recomputing.
+                self.cache.register_pages(
+                    slot, self.sched.running[slot].tokens())
             if status == "running":
                 self._next_tok[slot] = tok
             else:
                 finished.append(self.sched.retire(slot, status))
 
+    def _pow2_width(self, need: int) -> int:
+        """Page-table width covering ``need`` pages, rounded up to a
+        power of two so jit sees a handful of shapes.
+
+        This is where paging pays on the compute side too: decode and
+        prefill-chunk attention cover only the KV that exists, not the
+        max_seq reservation the dense cache burns every step.
+        """
+        width = 1
+        while width < need:
+            width *= 2
+        return min(width, self.pages_per_seq)
+
     # --------------------------------------------------------------- run
     def run(self, arrivals: list[tuple[int, Request]],
             max_steps: int | None = None) -> list[FinishedRequest]:
-        """Drive to completion. arrivals: [(arrival_step, request)]."""
+        """Drive to completion. arrivals: [(arrival_step, request)].
+
+        A request whose prompt + budget cannot ever fit a sequence's
+        page allowance is rejected (``reason="rejected"``) instead of
+        killing the serving loop.
+        """
         pending = sorted(arrivals, key=lambda a: a[0])
         finished: list[FinishedRequest] = []
         step = 0
         while pending or self.sched.has_work:
             while pending and pending[0][0] <= step:
-                self.submit(pending.pop(0)[1])
+                _, req = pending.pop(0)
+                try:
+                    self.submit(req)
+                except ValueError:
+                    self.stats["rejected"] += 1
+                    finished.append(FinishedRequest(
+                        rid=req.rid, prompt=req.prompt, tokens=[],
+                        reason="rejected"))
             before = self.stats["generated_tokens"]
             finished.extend(self.step())
             step += 1

@@ -4,17 +4,45 @@ Pure numpy/python bookkeeping: which pages belong to which slot, what
 each slot's current length is, and the ``(max_batch, pages_per_seq)``
 page table the device kernels consume.  The actual KV pools are jax
 arrays owned by the engine (``LM.init_paged_cache``); this class never
-touches them - freeing a slot just returns its page ids to the free
-list, and stale KV in those pages is overwritten by the next owner
-(positions are always written before they become visible via seq_lens).
+touches them - it only hands the engine a list of pending page copies
+(copy-on-write) to apply before the next device write.
+
+Sharing model (vLLM-style prefix caching + COW):
+
+  * Every page carries a refcount = number of slot page tables that
+    reference it.  ``fork`` clones a slot by bumping refcounts instead
+    of copying KV; a write into a shared page triggers copy-on-write
+    (fresh page + a pending device copy + table swap).
+  * Full pages whose token content is known are registered in a
+    chain-hash table (hash of (parent_hash, page_tokens)), so a new
+    prompt can claim the longest already-materialized prefix and skip
+    recomputing it.
+  * When the last reference to a *registered* page is dropped the page
+    is parked in a cached-LRU pool instead of being scrubbed: it is
+    still claimable by a later prompt with the same prefix, and it is
+    evicted (hash entries dropped) only when the allocator runs out of
+    strictly-free pages.
+  * Admission reserves room for one decode append beyond the prompt
+    (``can_admit`` checks ``pages_for(n + 1)``): a prompt that exactly
+    fills its pages would otherwise prefill, fail to append, and be
+    preempted into a full replay - a quadratic livelock under a tight
+    pool.
 """
 from __future__ import annotations
+
+from collections import OrderedDict
 
 import numpy as np
 
 
 class PagedKVCache:
-    """Fixed-size page pool + per-slot page tables (alloc/append/free)."""
+    """Fixed-size page pool + per-slot page tables.
+
+    Lifecycle: alloc (optionally claiming shared prefix pages and
+    optionally lazy, for chunked prefill) -> ensure_capacity/advance/
+    mark_prefilled as KV is written -> free.  ``check_invariants``
+    validates the full refcount/hash/LRU state.
+    """
 
     def __init__(self, num_pages: int, page_size: int, max_batch: int,
                  pages_per_seq: int):
@@ -28,11 +56,28 @@ class PagedKVCache:
         self._free_pages: list[int] = list(range(num_pages - 1, -1, -1))
         self._free_slots: list[int] = list(range(max_batch - 1, -1, -1))
         self._slot_pages: dict[int, list[int]] = {}
+        # -- sharing state ------------------------------------------------
+        self._refcount = np.zeros((num_pages,), np.int32)
+        self._page_hash: dict[int, int] = {}     # page id -> chain hash
+        self._hash_page: dict[int, int] = {}     # chain hash -> page id
+        self._cached: OrderedDict[int, None] = OrderedDict()  # LRU, ref==0
+        self._pending_copies: list[tuple[int, int]] = []      # (src, dst)
+        # Per-slot prefix of already-examined chain hashes, so the
+        # register_pages calls the engine makes after every chunk / page
+        # fill stay O(new pages) instead of rehashing from position 0
+        # (quadratic over a long sequence's lifetime).
+        self._slot_chain: dict[int, list[int]] = {}
 
     # ------------------------------------------------------------ queries
     @property
     def free_page_count(self) -> int:
+        """Strictly free pages (no reusable content)."""
         return len(self._free_pages)
+
+    @property
+    def available_page_count(self) -> int:
+        """Pages the allocator can hand out: free + evictable cached."""
+        return len(self._free_pages) + len(self._cached)
 
     @property
     def free_slot_count(self) -> int:
@@ -45,54 +90,259 @@ class PagedKVCache:
     def pages_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page_size)
 
-    def can_admit(self, prompt_len: int) -> bool:
-        need = self.pages_for(prompt_len)
-        return bool(self._free_slots and need <= self.pages_per_seq
-                    and need <= len(self._free_pages))
+    def refcount(self, page: int) -> int:
+        return int(self._refcount[page])
 
-    # ---------------------------------------------------------- lifecycle
-    def alloc_slot(self, prompt_len: int) -> int:
-        """Claim a slot + pages for a ``prompt_len``-token prefill.
+    def token_capacity(self, slot: int) -> int:
+        """Tokens the slot's currently-allocated pages can hold."""
+        return len(self._slot_pages[slot]) * self.page_size
 
-        seq_lens is set to prompt_len: the engine writes those positions
-        during prefill.  Raises if :meth:`can_admit` is False.
+    def writable_token_capacity(self, slot: int) -> int:
+        """Tokens the slot can hold without allocating OR copying: the
+        allocation capacity truncated at the first *shared* page at or
+        after seq_lens.  Writing into a refcount > 1 page needs a
+        copy-on-write, so after a failed ``ensure_capacity`` a shrunk
+        chunk must stop here, not at :meth:`token_capacity` - otherwise
+        it would scatter K/V into a page a forked sibling still reads.
+        (A published refcount-1 page does not truncate: COW retracts its
+        hash without allocating, which cannot fail.)"""
+        pages = self._slot_pages[slot]
+        for idx in range(int(self.seq_lens[slot]) // self.page_size,
+                         len(pages)):
+            if self._refcount[pages[idx]] > 1:
+                return idx * self.page_size
+        return len(pages) * self.page_size
+
+    def can_admit(self, n_tokens: int, shared: tuple[int, ...] = ()) -> bool:
+        """True if a ``n_tokens`` sequence (with ``len(shared)`` leading
+        prefix pages already materialized) can be admitted.
+
+        Reserves one decode-append slot past the prompt: the first
+        generated token must have somewhere to land, otherwise admission
+        guarantees an immediate preemption (full-replay livelock on a
+        tight pool).
         """
-        if prompt_len < 1:
-            # seq_lens == 0 is the stack-wide "free slot" sentinel; an
-            # active slot must own at least one token.
-            raise ValueError(f"prompt_len must be >= 1, got {prompt_len}")
-        if not self.can_admit(prompt_len):
-            raise RuntimeError(
-                f"cannot admit prompt of {prompt_len} tokens "
-                f"(free slots {self.free_slot_count}, "
-                f"free pages {self.free_page_count})")
-        slot = self._free_slots.pop()
-        pages = [self._free_pages.pop()
-                 for _ in range(self.pages_for(prompt_len))]
-        self._slot_pages[slot] = pages
-        self.page_table[slot] = 0
-        self.page_table[slot, :len(pages)] = pages
-        self.seq_lens[slot] = prompt_len
-        return slot
+        need_total = self.pages_for(n_tokens + 1)
+        need_new = need_total - len(shared)
+        shared_cached = sum(1 for p in shared if p in self._cached)
+        avail = len(self._free_pages) + len(self._cached) - shared_cached
+        return bool(self._free_slots and need_total <= self.pages_per_seq
+                    and need_new <= avail)
 
-    def ensure_append_capacity(self, slot: int) -> bool:
-        """Make room for one more token in ``slot``.
+    # ------------------------------------------------------- prefix cache
+    def _chain_hashes(self, tokens: list[int]) -> list[int]:
+        """Chain hash per full page of ``tokens`` (page i covers tokens
+        [i*page, (i+1)*page)); h_i = hash((h_{i-1}, page_tokens))."""
+        out = []
+        h = 0
+        for i in range(len(tokens) // self.page_size):
+            h = hash((h, tuple(
+                tokens[i * self.page_size:(i + 1) * self.page_size])))
+            out.append(h)
+        return out
 
-        The next token lands at position seq_lens[slot]; if that crosses
-        into an unallocated page, grab one.  Returns False (slot left
-        untouched) when the pool is exhausted or the sequence is at the
-        pages_per_seq ceiling - the caller preempts or retires.
+    def lookup_prefix(self, tokens: list[int]) -> tuple[int, ...]:
+        """Longest already-materialized prefix of ``tokens``, as page ids.
+
+        Only full pages are shared, and at least one token is always
+        left to compute (its logits produce the next token), so the
+        match is capped at ``(len(tokens) - 1) // page_size`` pages.
+        """
+        out = []
+        for h in self._chain_hashes(tokens[:len(tokens) - 1]):
+            page = self._hash_page.get(h)
+            if page is None:
+                break
+            out.append(page)
+        return tuple(out)
+
+    def register_pages(self, slot: int, tokens: list[int]) -> int:
+        """Publish ``slot``'s full, already-written pages to the prefix
+        table.  ``tokens`` is the slot's token stream; only pages fully
+        covered by both ``tokens`` and ``seq_lens[slot]`` (KV actually
+        on device) are eligible.  Each page is examined once per slot
+        lifetime (the hash chain is cached and only extends); returns
+        #pages registered.
         """
         pages = self._slot_pages[slot]
-        need = self.pages_for(int(self.seq_lens[slot]) + 1)
-        if need <= len(pages):
+        chain = self._slot_chain.setdefault(slot, [])
+        n_full = min(len(tokens), int(self.seq_lens[slot])) \
+            // self.page_size
+        registered = 0
+        h = chain[-1] if chain else 0
+        for i in range(len(chain), n_full):
+            h = hash((h, tuple(
+                tokens[i * self.page_size:(i + 1) * self.page_size])))
+            chain.append(h)
+            page = pages[i]
+            if page in self._page_hash:
+                continue          # already published (or claimed shared)
+            if h in self._hash_page:
+                continue          # identical content already canonical
+            self._page_hash[page] = h
+            self._hash_page[h] = page
+            registered += 1
+        return registered
+
+    def _unregister(self, page: int) -> None:
+        h = self._page_hash.pop(page, None)
+        if h is not None:
+            self._hash_page.pop(h, None)
+
+    # ----------------------------------------------------------- allocator
+    def _take_page(self) -> int:
+        """Pop a strictly-free page, else evict the LRU cached page."""
+        if self._free_pages:
+            return self._free_pages.pop()
+        if self._cached:
+            page, _ = self._cached.popitem(last=False)
+            self._unregister(page)
+            return page
+        raise RuntimeError("page pool exhausted")
+
+    def _claim(self, page: int) -> None:
+        """Take one reference on a shared/cached page."""
+        if self._refcount[page] == 0:
+            assert page in self._cached, f"claim of free page {page}"
+            del self._cached[page]
+        self._refcount[page] += 1
+
+    def take_pending_copies(self) -> list[tuple[int, int]]:
+        """Drain (src, dst) page copies the engine must apply to the
+        device pools before the next write."""
+        out, self._pending_copies = self._pending_copies, []
+        return out
+
+    # ---------------------------------------------------------- lifecycle
+    def alloc_slot(self, n_tokens: int, shared: tuple[int, ...] = (),
+                   lazy: bool = False) -> int:
+        """Claim a slot for an ``n_tokens`` sequence.
+
+        ``shared`` are prefix pages (from :meth:`lookup_prefix`) claimed
+        by reference - their KV is already on device, so ``seq_lens``
+        starts at ``len(shared) * page_size``.  With ``lazy=False`` the
+        remaining pages for all ``n_tokens`` are allocated up front and
+        ``seq_lens`` is set to ``n_tokens`` (the caller prefills them in
+        one shot).  With ``lazy=True`` (chunked prefill) no fresh pages
+        are allocated yet; :meth:`ensure_capacity` grows the slot chunk
+        by chunk and :meth:`mark_prefilled` advances ``seq_lens``.
+        """
+        if n_tokens < 1:
+            # seq_lens == 0 is the stack-wide "free slot" sentinel; an
+            # active slot must own at least one token.
+            raise ValueError(f"n_tokens must be >= 1, got {n_tokens}")
+        if not self.can_admit(n_tokens, shared):
+            raise RuntimeError(
+                f"cannot admit sequence of {n_tokens} tokens "
+                f"(free slots {self.free_slot_count}, "
+                f"available pages {self.available_page_count}, "
+                f"shared {len(shared)})")
+        assert len(shared) * self.page_size < n_tokens, \
+            "shared prefix must leave at least one token to compute"
+        assert lazy or not shared, \
+            "eager alloc would overwrite the shared prefix pages"
+        slot = self._free_slots.pop()
+        pages = []
+        for p in shared:
+            self._claim(p)
+            pages.append(p)
+        if not lazy:
+            while len(pages) < self.pages_for(n_tokens):
+                page = self._take_page()
+                self._refcount[page] = 1
+                pages.append(page)
+        self._slot_pages[slot] = pages
+        # Seed the hash chain with the claimed prefix (all registered),
+        # so later register_pages calls only hash new pages.
+        self._slot_chain[slot] = [self._page_hash[p] for p in shared]
+        self.page_table[slot] = 0
+        self.page_table[slot, :len(pages)] = pages
+        self.seq_lens[slot] = (len(shared) * self.page_size if lazy
+                               else n_tokens)
+        return slot
+
+    def fork(self, slot: int) -> int:
+        """Clone ``slot`` into a fresh slot sharing every page (beam /
+        parallel-sampling style).  No KV is copied; the first divergent
+        append into a shared page triggers copy-on-write."""
+        if not self._free_slots:
+            raise RuntimeError("no free slot to fork into")
+        pages = self._slot_pages[slot]
+        new = self._free_slots.pop()
+        for p in pages:
+            self._refcount[p] += 1
+        self._slot_pages[new] = list(pages)
+        self._slot_chain[new] = list(self._slot_chain.get(slot, []))
+        self.page_table[new] = 0
+        self.page_table[new, :len(pages)] = pages
+        self.seq_lens[new] = self.seq_lens[slot]
+        return new
+
+    def _cow(self, slot: int, idx: int) -> bool:
+        """Make page ``idx`` of ``slot`` exclusively owned (copy-on-write).
+        Returns False when no page can be allocated for the copy."""
+        pages = self._slot_pages[slot]
+        old = pages[idx]
+        if self._refcount[old] == 1 and old not in self._page_hash:
             return True
-        if need > self.pages_per_seq or not self._free_pages:
+        if self._refcount[old] == 1:
+            # Sole owner but published: writes would corrupt the cached
+            # prefix other requests may claim, so retract it instead of
+            # copying (content diverges from the registered hash).
+            self._unregister(old)
+            return True
+        try:
+            new = self._take_page()
+        except RuntimeError:
             return False
-        page = self._free_pages.pop()
-        pages.append(page)
-        self.page_table[slot, len(pages) - 1] = page
+        self._refcount[old] -= 1
+        self._refcount[new] = 1
+        self._pending_copies.append((old, new))
+        pages[idx] = new
+        self.page_table[slot, idx] = new
         return True
+
+    def ensure_capacity(self, slot: int, n_tokens: int) -> bool:
+        """Back ``slot`` with writable pages for ``n_tokens`` total
+        tokens.  Positions in ``[seq_lens, n_tokens)`` are about to be
+        written, so any shared (or published) page in that range is
+        copy-on-write'd and missing tail pages are allocated.
+
+        Allocates as much as it can before giving up: on False the slot
+        keeps whatever pages it gained (``token_capacity`` tells the
+        caller how far a shrunk chunk can still go).
+        """
+        pages = self._slot_pages[slot]
+        need = self.pages_for(n_tokens)
+        if need > self.pages_per_seq:
+            return False
+        # COW any existing page the write range touches (only the page
+        # holding seq_lens can be shared mid-page - full shared prefix
+        # pages sit strictly below seq_lens).
+        first_write = int(self.seq_lens[slot]) // self.page_size
+        for idx in range(first_write, min(need, len(pages))):
+            if not self._cow(slot, idx):
+                return False
+        while len(pages) < need:
+            try:
+                page = self._take_page()
+            except RuntimeError:
+                return False
+            self._refcount[page] = 1
+            pages.append(page)
+            self.page_table[slot, len(pages) - 1] = page
+        return True
+
+    def ensure_append_capacity(self, slot: int) -> bool:
+        """Make room for one more token in ``slot`` (decode append).
+
+        The next token lands at position seq_lens[slot]; if that crosses
+        into an unallocated page, grab one, and if it lands in a shared
+        page, copy-on-write it.  Returns False (slot keeps its pages)
+        when the pool is exhausted or the sequence is at the
+        pages_per_seq ceiling - the caller preempts or retires.
+        """
+        return self.ensure_capacity(slot, int(self.seq_lens[slot]) + 1)
 
     def advance(self, slot: int) -> None:
         """Record that one token's KV was appended to ``slot``."""
@@ -100,10 +350,31 @@ class PagedKVCache:
             self._slot_pages[slot]), "advance() without capacity"
         self.seq_lens[slot] += 1
 
+    def mark_prefilled(self, slot: int, n_tokens: int) -> None:
+        """Record that KV for positions [seq_lens, n_tokens) was written
+        (one chunked-prefill step)."""
+        assert n_tokens >= int(self.seq_lens[slot])
+        assert n_tokens == int(self.seq_lens[slot]) or \
+            n_tokens <= self.writable_token_capacity(slot), \
+            "mark_prefilled() into an unallocated or still-shared page"
+        self.seq_lens[slot] = n_tokens
+
     def free_slot(self, slot: int) -> None:
-        """Retire a slot: recycle its pages, zero its table row."""
+        """Retire a slot: drop its page references, zero its table row.
+
+        A page whose last reference drops is recycled - into the cached
+        LRU when it is a published prefix page (claimable by a later
+        identical prompt), onto the free list otherwise.
+        """
         pages = self._slot_pages.pop(slot)
-        self._free_pages.extend(reversed(pages))
+        self._slot_chain.pop(slot, None)
+        for p in pages:
+            self._refcount[p] -= 1
+            if self._refcount[p] == 0:
+                if p in self._page_hash:
+                    self._cached[p] = None       # most-recently used
+                else:
+                    self._free_pages.append(p)
         self._free_slots.append(slot)
         self.page_table[slot] = 0
         self.seq_lens[slot] = 0
@@ -111,18 +382,38 @@ class PagedKVCache:
     # ---------------------------------------------------------- integrity
     def check_invariants(self) -> None:
         """Raises AssertionError if the pool bookkeeping is inconsistent."""
-        used = [p for pages in self._slot_pages.values() for p in pages]
-        assert len(used) == len(set(used)), "page owned by two slots"
+        refs: dict[int, int] = {}
+        for pages in self._slot_pages.values():
+            for p in pages:
+                refs[p] = refs.get(p, 0) + 1
+        # refcount conservation: stored refcounts == table references
+        for p in range(self.num_pages):
+            assert int(self._refcount[p]) == refs.get(p, 0), \
+                f"page {p}: refcount {int(self._refcount[p])} != " \
+                f"{refs.get(p, 0)} table references"
         free = set(self._free_pages)
+        cached = set(self._cached)
+        owned = set(refs)
         assert len(free) == len(self._free_pages), "duplicate free page"
-        assert not (free & set(used)), "page both free and owned"
-        assert len(free) + len(used) == self.num_pages, "page leak"
+        assert not (free & owned), "page both free and owned"
+        assert not (cached & owned), "page both cached and owned"
+        assert not (free & cached), "page both free and cached"
+        assert len(free) + len(cached) + len(owned) == self.num_pages, \
+            "page leak"
+        for p in cached:
+            assert p in self._page_hash, "cached page without a hash"
+        for p in free:
+            assert p not in self._page_hash, "free page still published"
+        assert {p: h for h, p in self._hash_page.items()} == \
+            self._page_hash, "hash table not a bijection"
         assert not (set(self._free_slots) & set(self._slot_pages)), \
             "slot both free and active"
         assert len(self._free_slots) + len(self._slot_pages) == \
             self.max_batch, "slot leak"
         for slot, pages in self._slot_pages.items():
             assert len(pages) >= self.pages_for(int(self.seq_lens[slot]))
+            assert len(pages) <= self.pages_per_seq
             assert list(self.page_table[slot, :len(pages)]) == pages
+            assert not any(self.page_table[slot, len(pages):])
         for slot in self._free_slots:
             assert self.seq_lens[slot] == 0

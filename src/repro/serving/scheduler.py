@@ -1,10 +1,23 @@
 """Continuous-batching request scheduler over a PagedKVCache.
 
-Lifecycle: submit -> (waiting) -> admit/prefill -> (running) -> one
-token per engine step -> retire on EOS / length budget, or preempt back
-to waiting when the page pool runs dry (progress is kept: the resumed
-prefill replays prompt + generated-so-far, vLLM-style recompute
-preemption).  Pure host logic - fully testable without jax.
+Lifecycle: submit -> (waiting) -> admit -> chunked prefill (one bounded
+token-budget chunk per engine step, Sarathi-style, so a long prompt
+never stalls running decodes) -> (decoding) -> one token per engine
+step -> retire on EOS / length budget.
+
+Under page-pool pressure:
+
+  * a mid-prefill sequence *pauses in place* - it keeps its slot and
+    pages and simply schedules no chunk until pages free up, then
+    resumes prefill at pos > 0 (no recompute);
+  * a decoding sequence that cannot append forces a preemption: the
+    victim is the running sequence with the *least accumulated work*
+    (fewest KV tokens materialized - cheapest replay), its pages are
+    freed (published prefix pages stay claimable in the cache's LRU,
+    so the replay usually resumes from the last full prompt page) and
+    it re-queues at the front, vLLM recompute-style.
+
+Pure host logic - fully testable without jax.
 """
 from __future__ import annotations
 
@@ -27,7 +40,7 @@ class FinishedRequest:
     rid: int
     prompt: list[int]
     tokens: list[int]          # generated tokens (includes eos if hit)
-    reason: str                # "eos" | "length"
+    reason: str                # "eos" | "length" | "rejected"
     preemptions: int = 0
 
 
@@ -35,16 +48,48 @@ class FinishedRequest:
 class _Running:
     req: Request
     generated: list[int]
+    seq_no: int = 0            # admission order (FCFS tie-break)
+    computed: int = 0          # KV tokens materialized (incl. reused prefix)
+    decoding: bool = False     # prefill complete, generating
     preemptions: int = 0
+
+    def __post_init__(self):
+        # Maintained incrementally by record_token: tokens() is on the
+        # per-step scheduling/registration path, and rebuilding the
+        # concatenation there would cost O(len) per call.
+        self._stream = list(self.req.prompt) + list(self.generated)
+
+    def tokens(self) -> list[int]:
+        """Token stream whose KV backs this sequence: prompt plus any
+        generated tokens carried over a preemption (replaying them
+        rebuilds the KV state the evicted sequence had).  Shared
+        internal list - callers must not mutate it."""
+        return self._stream
+
+    @property
+    def target(self) -> int:
+        return len(self.req.prompt) + len(self.generated)
+
+
+@dataclasses.dataclass
+class PrefillChunk:
+    """One bounded prefill chunk: write KV for ``tokens`` at positions
+    [start, start + len(tokens)) of ``slot``.  The final chunk's
+    last-position logits yield the sequence's next token."""
+    slot: int
+    tokens: list[int]
+    start: int
+    is_final: bool
 
 
 class Scheduler:
-    """Admission / preemption / retirement; token progress per request."""
+    """Admission / chunked prefill / preemption / retirement."""
 
     def __init__(self, cache: PagedKVCache):
         self.cache = cache
         self.waiting: deque[_Running] = deque()
         self.running: dict[int, _Running] = {}     # slot -> state
+        self._seq_no = 0
 
     # ------------------------------------------------------------ intake
     def submit(self, req: Request) -> None:
@@ -56,24 +101,117 @@ class Scheduler:
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)
 
-    # --------------------------------------------------------- admission
-    def admit(self) -> list[tuple[int, list[int]]]:
-        """Admit waiting requests while slots + pages allow (FCFS).
+    def decoding_slots(self) -> list[int]:
+        return sorted(s for s, st in self.running.items() if st.decoding)
 
-        Returns [(slot, tokens_to_prefill)]: prompt plus any generated
-        tokens carried over from a preemption - replaying them rebuilds
-        the KV state the evicted sequence had.
+    def prefilling_slots(self) -> list[int]:
+        return sorted(s for s, st in self.running.items() if not st.decoding)
+
+    # --------------------------------------------------------- admission
+    def schedule_prefill(self, budget: int | None) -> tuple[
+            list[PrefillChunk], int]:
+        """Plan this step's prefill work under a token ``budget``
+        (None = unbounded).
+
+        In-flight prefills continue first (oldest admission first), then
+        waiting requests are admitted FCFS while budget, a slot, and
+        pages for prompt + one decode append remain - each admission
+        claims the longest cached prompt prefix (full pages) instead of
+        recomputing it.  A sequence whose next chunk cannot get pages is
+        paused in place (no chunk, keeps pages).
+
+        Returns (chunks, prefix_tokens_reused_by_new_admissions).
+        """
+        chunks: list[PrefillChunk] = []
+        left = budget if budget is not None else None
+        reused = 0
+        live = [(st.seq_no, slot) for slot, st in self.running.items()
+                if not st.decoding]
+        for _, slot in sorted(live):
+            if left is not None and left <= 0:
+                return chunks, reused
+            ck = self._chunk_for(slot, left)
+            if ck is not None:
+                chunks.append(ck)
+                if left is not None:
+                    left -= len(ck.tokens)
+        while self.waiting and (left is None or left > 0):
+            st = self.waiting[0]
+            toks = st.tokens()
+            shared = self.cache.lookup_prefix(toks)
+            if not self.cache.can_admit(len(toks), shared):
+                break                      # FCFS: head blocks the queue
+            self.waiting.popleft()
+            slot = self.cache.alloc_slot(len(toks), shared, lazy=True)
+            st.computed = len(shared) * self.cache.page_size
+            st.decoding = False
+            st.seq_no = self._seq_no
+            self._seq_no += 1
+            self.running[slot] = st
+            reused += st.computed
+            ck = self._chunk_for(slot, left)
+            if ck is not None:
+                chunks.append(ck)
+                if left is not None:
+                    left -= len(ck.tokens)
+        return chunks, reused
+
+    def _chunk_for(self, slot: int, left: int | None) -> PrefillChunk | None:
+        """Next prefill chunk for ``slot`` under the remaining budget,
+        shrunk to the pages actually obtainable (pause-in-place when the
+        pool is dry)."""
+        st = self.running[slot]
+        toks = st.tokens()
+        remaining = st.target - st.computed
+        n = remaining if left is None else min(remaining, left)
+        if n <= 0:
+            return None
+        if not self.cache.ensure_capacity(slot, st.computed + n):
+            # Shrink to pages that are actually writable - a shared page
+            # whose copy-on-write failed for lack of a free page must
+            # NOT be written (a forked sibling still reads it).
+            n = min(n, self.cache.writable_token_capacity(slot)
+                    - st.computed)
+            if n <= 0:
+                return None                # paused in place, pages kept
+        return PrefillChunk(
+            slot=slot, tokens=toks[st.computed:st.computed + n],
+            start=st.computed, is_final=(st.computed + n == st.target))
+
+    def complete_chunk(self, chunk: PrefillChunk) -> None:
+        """Record that ``chunk``'s KV is on device; the final chunk
+        flips the sequence into the decode phase."""
+        st = self.running[chunk.slot]
+        assert st.computed == chunk.start, (st.computed, chunk.start)
+        st.computed += len(chunk.tokens)
+        self.cache.mark_prefilled(chunk.slot, st.computed)
+        if chunk.is_final:
+            assert st.computed == st.target
+            st.decoding = True
+
+    def admit(self) -> list[tuple[int, list[int]]]:
+        """Legacy all-at-once admission (no chunking): admit waiting
+        requests while slots + pages allow (FCFS), allocating every page
+        up front.  Returns [(slot, tokens_to_prefill)].
+
+        Kept for host-only scheduler tests; the engine admits through
+        :meth:`schedule_prefill`.  Both paths share ``can_admit`` (the
+        decode-page reserve) and ``alloc_slot``.
         """
         out = []
         while self.waiting:
             st = self.waiting[0]
-            tokens = st.req.prompt + st.generated
-            if not self.cache.can_admit(len(tokens)):
+            toks = st.tokens()
+            if not self.cache.can_admit(len(toks)):
                 break
             self.waiting.popleft()
-            slot = self.cache.alloc_slot(len(tokens))
+            slot = self.cache.alloc_slot(len(toks))
+            st.computed = st.target
+            st.decoding = True
+            st.seq_no = self._seq_no
+            self._seq_no += 1
             self.running[slot] = st
-            out.append((slot, tokens))
+            out.append((slot, toks))
         return out
 
     # ------------------------------------------------------- progression
@@ -81,20 +219,35 @@ class Scheduler:
         """Append a generated token; returns "running"|"eos"|"length"."""
         st = self.running[slot]
         st.generated.append(tok)
+        st._stream.append(tok)
         if st.req.eos_id is not None and tok == st.req.eos_id:
             return "eos"
         if len(st.generated) >= st.req.max_new_tokens:
             return "length"
         return "running"
 
+    def choose_victim(self) -> int | None:
+        """Preemption victim: the running sequence with the least
+        accumulated work (fewest materialized KV tokens - cheapest to
+        replay); newest admission loses ties (FCFS fairness)."""
+        if not self.running:
+            return None
+        return min(self.running,
+                   key=lambda s: (int(self.cache.seq_lens[s]),
+                                  -self.running[s].seq_no))
+
     def preempt(self, slot: int) -> None:
-        """Evict a running sequence (page-pool pressure); keep progress.
+        """Evict a running sequence (page-pool pressure); progress is
+        kept as tokens: the resumed prefill replays prompt + generated
+        (minus whatever prefix pages are still cached).
 
         Re-queued at the *front*: oldest work resumes first, and a
         preempted sequence never starves behind new arrivals.
         """
         st = self.running.pop(slot)
         st.preemptions += 1
+        st.computed = 0
+        st.decoding = False
         self.cache.free_slot(slot)
         self.waiting.appendleft(st)
 

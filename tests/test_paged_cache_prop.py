@@ -1,0 +1,165 @@
+"""Property-based tests for PagedKVCache sharing semantics.
+
+Drives the block pool through random admit / chunked-prefill / append /
+fork / free traces - including prefix claiming and copy-on-write - and
+asserts after every op that ``check_invariants`` holds (which includes
+refcount conservation: stored per-page refcounts must equal the number
+of page-table references across slots) and that pages never leak:
+free + cached + owned always partitions the pool.
+
+Pure host logic, no jax.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional 'hypothesis' dep")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serving import PagedKVCache  # noqa: E402
+
+PAGE = 4
+NUM_PAGES = 24
+MAX_BATCH = 5
+PAGES_PER_SEQ = 6
+
+# A small base sequence: prompts are prefixes of it plus a random tail,
+# which makes hash-chain prefix hits (and thus page sharing) common.
+BASE = list(range(100, 100 + PAGES_PER_SEQ * PAGE))
+
+op_strategy = st.lists(
+    st.tuples(st.integers(0, 5), st.integers(0, 10 ** 6)),
+    min_size=1, max_size=80)
+
+
+class _Driver:
+    """Mirrors the engine's use of the cache; tracks the token stream
+    backing every slot so register_pages stays content-consistent."""
+
+    def __init__(self):
+        self.c = PagedKVCache(NUM_PAGES, PAGE, MAX_BATCH, PAGES_PER_SEQ)
+        self.streams: dict[int, list[int]] = {}     # slot -> token stream
+
+    def check(self):
+        self.c.check_invariants()
+        # drained copies must reference distinct, in-range pages
+        for src, dst in self.c.take_pending_copies():
+            assert 0 <= src < NUM_PAGES and 0 <= dst < NUM_PAGES
+            assert src != dst
+        assert self.c.free_page_count + len(self.c._cached) + \
+            len({p for ps in self.c._slot_pages.values() for p in ps}) \
+            == NUM_PAGES
+
+    # ------------------------------------------------------------- ops
+    def admit(self, rng):
+        n_shared = int(rng.integers(0, len(BASE)))
+        tail_len = int(rng.integers(1, 6))
+        toks = BASE[:n_shared] + rng.integers(0, 50, tail_len).tolist()
+        toks = toks[:PAGES_PER_SEQ * PAGE - 1]
+        shared = self.c.lookup_prefix(toks)
+        # claimed prefix tokens must match the stream by construction
+        assert len(shared) * PAGE < len(toks)
+        if not self.c.can_admit(len(toks), shared):
+            return
+        # eager alloc would overwrite shared pages: claimed prefixes
+        # force the lazy (chunked) path, like the scheduler
+        lazy = bool(shared) or bool(rng.integers(0, 2))
+        slot = self.c.alloc_slot(len(toks), shared, lazy=lazy)
+        self.streams[slot] = toks
+        want = len(shared) * PAGE if lazy else len(toks)
+        assert int(self.c.seq_lens[slot]) == want
+
+    def prefill_chunk(self, rng):
+        slots = [s for s in self.streams
+                 if int(self.c.seq_lens[s]) < len(self.streams[s])]
+        if not slots:
+            return
+        slot = slots[int(rng.integers(len(slots)))]
+        done = int(self.c.seq_lens[slot])
+        remaining = len(self.streams[slot]) - done
+        n = int(rng.integers(1, remaining + 1))
+        if not self.c.ensure_capacity(slot, done + n):
+            # mirror the scheduler: only WRITABLE capacity may be used
+            # (a shared page whose COW failed must not be written)
+            n = self.c.writable_token_capacity(slot) - done
+            if n <= 0:
+                return                      # paused in place
+        self.c.mark_prefilled(slot, done + n)
+        self.c.register_pages(slot, self.streams[slot])
+
+    def append(self, rng):
+        if not self.streams:
+            return
+        slots = list(self.streams)
+        slot = slots[int(rng.integers(len(slots)))]
+        if int(self.c.seq_lens[slot]) < len(self.streams[slot]):
+            return                          # mid-prefill: no decode yet
+        if not self.c.ensure_append_capacity(slot):
+            return
+        self.c.advance(slot)
+        self.streams[slot].append(int(rng.integers(0, 50)))
+        if int(self.c.seq_lens[slot]) % PAGE == 0:
+            self.c.register_pages(slot, self.streams[slot])
+
+    def fork(self, rng):
+        if not self.streams or not self.c.free_slot_count:
+            return
+        slots = list(self.streams)
+        slot = slots[int(rng.integers(len(slots)))]
+        new = self.c.fork(slot)
+        self.streams[new] = list(self.streams[slot])
+
+    def free(self, rng):
+        if not self.streams:
+            return
+        slots = list(self.streams)
+        slot = slots[int(rng.integers(len(slots)))]
+        del self.streams[slot]
+        self.c.free_slot(slot)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=op_strategy)
+def test_paged_cache_random_share_trace(ops):
+    d = _Driver()
+    dispatch = [d.admit, d.prefill_chunk, d.append, d.append, d.fork,
+                d.free]
+    for code, seed in ops:
+        dispatch[code](np.random.default_rng(seed))
+        d.check()
+    # teardown: everything frees cleanly and nothing leaks
+    for slot in list(d.streams):
+        d.c.free_slot(slot)
+    d.c.check_invariants()
+    assert d.c.available_page_count == NUM_PAGES
+    assert d.c.free_slot_count == MAX_BATCH
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10 ** 6))
+def test_refcount_conservation_under_fork_churn(seed):
+    """Heavy fork/free/COW churn: sum of refcounts always equals the
+    total number of slot page-table references (checked inside
+    check_invariants), and COW never splits a page both slots still
+    share for reading."""
+    rng = np.random.default_rng(seed)
+    c = PagedKVCache(NUM_PAGES, PAGE, MAX_BATCH, PAGES_PER_SEQ)
+    slots = [c.alloc_slot(int(rng.integers(1, 10)))]
+    for _ in range(60):
+        op = rng.random()
+        if op < 0.35 and c.free_slot_count and slots:
+            slots.append(c.fork(slots[int(rng.integers(len(slots)))]))
+        elif op < 0.7 and slots:
+            s = slots[int(rng.integers(len(slots)))]
+            if c.ensure_append_capacity(s):
+                c.advance(s)
+        elif slots:
+            s = slots.pop(int(rng.integers(len(slots))))
+            c.free_slot(s)
+        c.check_invariants()
+        total_refs = sum(len(ps) for ps in c._slot_pages.values())
+        assert int(c._refcount.sum()) == total_refs
+    for s in slots:
+        c.free_slot(s)
+    c.check_invariants()
+    assert c.available_page_count == NUM_PAGES

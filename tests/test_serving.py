@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.kernels import decode, ops
 from repro.kernels import paged_decode as paged
+from repro.kernels import paged_prefill as paged_pf
 from repro.serving import PagedKVCache, Request, Scheduler, ServingEngine
 
 
@@ -175,8 +176,11 @@ def test_paged_cache_alloc_free_reuse():
     s1 = c.alloc_slot(9)            # 3 pages
     c.check_invariants()
     assert c.free_page_count == 3
-    assert not c.can_admit(16)      # would need 4 pages, only 3 free
-    assert c.can_admit(12)
+    assert not c.can_admit(16)      # would need 5 pages > pages_per_seq
+    assert c.can_admit(11)
+    # 12 tokens exactly fill 3 pages: admission reserves the decode
+    # append's page too, so with only 3 free this must be refused.
+    assert not c.can_admit(12)
     with pytest.raises(RuntimeError):
         c.alloc_slot(16)
     # growth across a page boundary
@@ -322,7 +326,9 @@ def test_engine_matches_dense_generation_under_churn(qwen_smoke):
                             max_new_tokens=int(rng.integers(3, 9))))
     finished = engine.run([(i, r) for i, r in enumerate(reqs)])
     engine.cache.check_invariants()
-    assert engine.cache.free_page_count == engine.cache.num_pages
+    # Retired sequences' published prefix pages park in the cached LRU
+    # (claimable by identical prompts); nothing is leaked outright.
+    assert engine.cache.available_page_count == engine.cache.num_pages
     assert sorted(f.rid for f in finished) == list(range(6))
 
     dec = jax.jit(model.decode_step)
@@ -392,3 +398,481 @@ def test_engine_rejects_oversized_request(qwen_smoke):
                            max_seq=16)
     with pytest.raises(ValueError):
         engine.submit(Request(rid=0, prompt=[1] * 10, max_new_tokens=10))
+
+
+def test_engine_run_survives_oversized_request(qwen_smoke):
+    """An oversized request arriving mid-trace is finished as
+    reason="rejected" instead of killing the serving loop."""
+    cfg, model, params = qwen_smoke
+    rng = np.random.default_rng(17)
+    engine = ServingEngine(model, params, max_batch=2, page_size=4,
+                           max_seq=16)
+    good = lambda rid: Request(
+        rid=rid, prompt=rng.integers(1, cfg.vocab_size, 4).tolist(),
+        max_new_tokens=4)
+    arrivals = [(0, good(0)), (1, Request(rid=1, prompt=[1] * 10,
+                                          max_new_tokens=10)),
+                (2, good(2))]
+    finished = engine.run(arrivals)
+    assert sorted(f.rid for f in finished) == [0, 1, 2]
+    by_rid = {f.rid: f for f in finished}
+    assert by_rid[1].reason == "rejected" and by_rid[1].tokens == []
+    for rid in (0, 2):
+        assert by_rid[rid].reason in ("eos", "length")
+        assert len(by_rid[rid].tokens) == 4
+    assert engine.stats["rejected"] == 1
+
+
+# --------------------------------------------------- chunked prefill
+def _golden_greedy(model, params, req, max_seq):
+    """Dense fixed-cache greedy loop: the token-exactness oracle."""
+    cache = model.init_cache(params, 1, max_seq)
+    lg, cache = model.prefill(params, cache,
+                              jnp.asarray([req.prompt], jnp.int32))
+    want = [int(jnp.argmax(lg[0, -1]))]
+    for _ in range(req.max_new_tokens - 1):
+        lg, cache = model.decode_step(params, cache,
+                                      jnp.asarray([[want[-1]]], jnp.int32))
+        want.append(int(jnp.argmax(lg[0, -1])))
+    return want
+
+
+def _chunk_setup(seed, *, b=2, hkv=2, g=2, d=16, page=4, pages_each=6,
+                 hist=(8, 5), chunk=(7, 4)):
+    """Pools holding per-seq history of ``hist`` tokens, plus a written
+    chunk of ``chunk`` tokens starting right after; returns the dense
+    full K/V for the oracle."""
+    rng = np.random.default_rng(seed)
+    num_pages = b * pages_each + 2
+    kp = jnp.zeros((num_pages, page, hkv, d), jnp.float32)
+    vp = jnp.zeros((num_pages, page, hkv, d), jnp.float32)
+    pt = jnp.asarray(rng.permutation(num_pages)[:b * pages_each]
+                     .reshape(b, pages_each).astype(np.int32))
+    start = np.asarray(hist, np.int32)
+    cl = np.asarray(chunk, np.int32)
+    total = start + cl
+    lmax = int(cl.max())
+    k_full = rng.standard_normal((b, int(total.max()), hkv, d)) \
+        .astype(np.float32)
+    v_full = rng.standard_normal((b, int(total.max()), hkv, d)) \
+        .astype(np.float32)
+    kp, vp = paged_pf.write_chunk_kv(
+        kp, vp, jnp.asarray(k_full[:, :int(start.max())]),
+        jnp.asarray(v_full[:, :int(start.max())]), pt,
+        jnp.zeros((b,), jnp.int32), jnp.asarray(start))
+    k_ch = np.zeros((b, lmax, hkv, d), np.float32)
+    v_ch = np.zeros_like(k_ch)
+    for i in range(b):
+        k_ch[i, :cl[i]] = k_full[i, start[i]:total[i]]
+        v_ch[i, :cl[i]] = v_full[i, start[i]:total[i]]
+    kp, vp = paged_pf.write_chunk_kv(kp, vp, jnp.asarray(k_ch),
+                                     jnp.asarray(v_ch), pt,
+                                     jnp.asarray(start), jnp.asarray(cl))
+    q = _rand((b, lmax, hkv * g, d), seed + 1)
+    return q, kp, vp, pt, start, cl, k_full, v_full
+
+
+def test_write_chunk_kv_is_position_exact():
+    """Chunk writes land at start_pos.. and padding rows are DROPPED -
+    pages outside the chunk (shared prefixes, later pages) are never
+    touched, unlike the fresh-prefill padded scatter."""
+    q, kp, vp, pt, start, cl, k_full, v_full = _chunk_setup(31)
+    got = _dense_view(kp, pt)
+    for b in range(q.shape[0]):
+        total = int(start[b] + cl[b])
+        np.testing.assert_allclose(got[b, :total], k_full[b, :total])
+        assert np.all(got[b, total:] == 0.0), "padding row was written"
+
+
+@pytest.mark.parametrize("seed", [41, 42])
+def test_paged_prefill_kernel_matches_oracle(seed):
+    """Chunk queries at pos start..start+L-1 attending causally over the
+    paged history: Pallas kernel (interpret) == jnp gather path == per-row
+    dense softmax oracle."""
+    q, kp, vp, pt, start, cl, k_full, v_full = _chunk_setup(seed)
+    b, lmax, h, d = q.shape
+    hkv = kp.shape[2]
+    g = h // hkv
+    out_jnp = np.asarray(ops.paged_prefill_attention(
+        q, kp, vp, pt, jnp.asarray(start), jnp.asarray(cl), impl="fa2"))
+    out_pl = np.asarray(ops.paged_prefill_attention(
+        q, kp, vp, pt, jnp.asarray(start), jnp.asarray(cl),
+        impl="fa2_pallas", force_pallas=True))
+    qn = np.asarray(q)
+    for i in range(b):
+        for li in range(int(cl[i])):
+            pos = int(start[i]) + li
+            for hh in range(h):
+                hk = hh // g
+                s = (qn[i, li, hh] @ k_full[i, :pos + 1, hk].T) / np.sqrt(d)
+                p = np.exp(s - s.max())
+                gold = (p / p.sum()) @ v_full[i, :pos + 1, hk]
+                np.testing.assert_allclose(out_jnp[i, li, hh], gold,
+                                           atol=1e-5)
+                np.testing.assert_allclose(out_pl[i, li, hh], gold,
+                                           atol=1e-5)
+
+
+def test_paged_prefill_kernel_hfa_rowwise_matches_decode_kernel():
+    """Each chunk row through the H-FA paged-prefill kernel is
+    bit-identical to the same query through the H-FA paged-decode
+    kernel (same page walk, same FIX16 datapath) - the chunk dimension
+    must not perturb the quantized numerics."""
+    q, kp, vp, pt, start, cl, _, _ = _chunk_setup(43)
+    b, lmax, h, d = q.shape
+    hkv = kp.shape[2]
+    g = h // hkv
+    qg = jnp.swapaxes(q, 1, 2).reshape(b, hkv, g, lmax, d)
+    o, m, l = paged_pf.paged_prefill_partial_pallas(
+        qg, kp, vp, pt, jnp.asarray(start), jnp.asarray(start + cl),
+        use_hfa=True, interpret=True)
+    out = np.asarray(decode.finalize_decode(o, l, use_hfa=True))
+    for i in range(b):
+        for li in range(int(cl[i])):
+            pos = int(start[i]) + li
+            od, md, ld = paged.paged_decode_partial_pallas(
+                qg[i:i + 1, :, :, li, :], kp, vp, pt[i:i + 1],
+                jnp.asarray([pos + 1], jnp.int32), use_hfa=True,
+                interpret=True)
+            gold = np.asarray(decode.finalize_decode(od, ld, use_hfa=True))
+            np.testing.assert_array_equal(out[i, :, :, li], gold[0])
+
+
+@pytest.mark.parametrize("attn_impl", ["fa2", "hfa"])
+def test_model_chunked_prefill_matches_dense(qwen_smoke, attn_impl):
+    """paged_prefill in two chunks (the second at pos > 0) must agree
+    with the dense whole-prompt prefill: same last logits and same
+    subsequent decode logits."""
+    import dataclasses
+    cfg, model, params = qwen_smoke
+    if attn_impl != cfg.attn_impl:
+        from repro.models.model import build_model
+        cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
+        model = build_model(cfg)
+    rng = np.random.default_rng(23)
+    b, l, cut = 2, 7, 4
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size, (b, l)), jnp.int32)
+    nxt = jnp.asarray(rng.integers(1, cfg.vocab_size, (b, 1)), jnp.int32)
+
+    cache = model.init_cache(params, b, 32)
+    lg_d, cache = model.prefill(params, cache, toks)
+    lg_d2, _ = model.decode_step(params, cache, nxt)
+
+    layers = model.init_paged_cache(num_pages=8, page_size=4)
+    pt = jnp.asarray(np.array([[3, 5, 1], [2, 6, 0]], np.int32))
+    zeros = jnp.zeros((b,), jnp.int32)
+    _, layers = model.paged_prefill(
+        params, layers, toks[:, :cut], pt,
+        last_pos=jnp.full((b,), cut - 1, jnp.int32), start_pos=zeros)
+    lg_p, layers = model.paged_prefill(
+        params, layers, toks[:, cut:], pt,
+        last_pos=jnp.full((b,), l - cut - 1, jnp.int32),
+        start_pos=jnp.full((b,), cut, jnp.int32))
+    sl = jnp.full((b,), l, jnp.int32)
+    lg_p2, _ = model.paged_decode_step(params, layers, nxt, pt, sl)
+
+    # fa2 paths share exact-softmax math.  The H-FA chunked path applies
+    # the FIX16 quantization in a different accumulation order than the
+    # dense emulation, so logits agree only within the quantization
+    # envelope (amplified by wo + lm_head); greedy argmax must hold.
+    tol = 5e-1 if attn_impl == "hfa" else 1e-4
+    np.testing.assert_allclose(np.asarray(lg_p[:, -1:]), np.asarray(lg_d),
+                               atol=tol)
+    np.testing.assert_allclose(np.asarray(lg_p2), np.asarray(lg_d2),
+                               atol=tol)
+    assert np.array_equal(np.argmax(np.asarray(lg_p[:, -1:]), -1),
+                          np.argmax(np.asarray(lg_d), -1))
+    assert np.array_equal(np.argmax(np.asarray(lg_p2), -1),
+                          np.argmax(np.asarray(lg_d2), -1))
+
+
+def test_engine_chunked_prefill_token_exact(qwen_smoke):
+    """For one arrival trace, every prefill chunk budget produces
+    greedy outputs identical to the unchunked engine and to the dense
+    per-request loop."""
+    cfg, model, params = qwen_smoke
+    rng = np.random.default_rng(29)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        int(rng.integers(2, 11))).tolist(),
+                    max_new_tokens=int(rng.integers(2, 7)))
+            for i in range(4)]
+    gold = {r.rid: _golden_greedy(model, params, r, 48) for r in reqs}
+    for budget in (None, 3, 8):
+        engine = ServingEngine(model, params, max_batch=3, page_size=4,
+                               max_seq=48, prefill_budget=budget)
+        finished = engine.run([(i, r) for i, r in enumerate(reqs)])
+        engine.cache.check_invariants()
+        assert sorted(f.rid for f in finished) == list(range(4))
+        for f in finished:
+            assert f.tokens == gold[f.rid], (budget, f.rid, f.preemptions)
+
+
+def test_decode_keeps_running_while_long_prompt_prefills(qwen_smoke):
+    """A long prompt streaming in under a small chunk budget must not
+    stall the running decode: every step during the multi-step prefill
+    still yields a decode token."""
+    cfg, model, params = qwen_smoke
+    rng = np.random.default_rng(37)
+    engine = ServingEngine(model, params, max_batch=2, page_size=4,
+                           max_seq=64, prefill_budget=4)
+    engine.submit(Request(rid=0,
+                          prompt=rng.integers(1, cfg.vocab_size, 4).tolist(),
+                          max_new_tokens=20))
+    engine.step()                        # rid 0 prefilled + decoding
+    assert engine.sched.decoding_slots()
+    engine.submit(Request(rid=1,
+                          prompt=rng.integers(1, cfg.vocab_size,
+                                              20).tolist(),
+                          max_new_tokens=5))
+
+    def rid1_prefilling():
+        return any(st.req.rid == 1 and not st.decoding
+                   for st in engine.sched.running.values()) or \
+            any(st.req.rid == 1 for st in engine.sched.waiting)
+
+    prefill_steps = 0
+    engine.step()                        # rid 1 admitted, first chunk
+    prefill_steps += 1
+    while rid1_prefilling():
+        before = engine.stats["generated_tokens"]
+        engine.step()
+        assert engine.stats["generated_tokens"] > before, \
+            "decode stalled during chunked prefill"
+        prefill_steps += 1
+        assert prefill_steps < 20
+    # 20 prompt tokens at 4 tokens/step: the prefill really was chunked
+    # across multiple steps while rid 0 kept decoding.
+    assert prefill_steps >= 5
+
+
+def test_admission_reserves_decode_page_no_livelock(qwen_smoke):
+    """Regression: a prompt that exactly fills the free pages used to be
+    admitted, prefilled (wasted work), preempted on its first decode
+    append, and re-admitted next step - quadratic replay thrash.  Now
+    admission reserves the decode-append page: the infeasible request is
+    never admitted (zero wasted prefills) and the stall is reported."""
+    cfg, model, params = qwen_smoke
+    rng = np.random.default_rng(43)
+    prompt = rng.integers(1, cfg.vocab_size, 8).tolist()   # 2 full pages
+    engine = ServingEngine(model, params, max_batch=1, page_size=4,
+                           num_pages=2, max_seq=16)
+    with pytest.raises(RuntimeError, match="stalled"):
+        engine.run([(0, Request(rid=0, prompt=prompt, max_new_tokens=4))],
+                   max_steps=50)
+    assert engine.stats["prefills"] == 0, "wasted prefill before preempt"
+    assert engine.stats["preemptions"] == 0
+
+    # One page of headroom makes it feasible - and it must then complete
+    # without a single preemption (the old code thrashed even here when
+    # the pool later ran dry).
+    engine = ServingEngine(model, params, max_batch=1, page_size=4,
+                           num_pages=3, max_seq=16)
+    [fin] = engine.run([(0, Request(rid=0, prompt=prompt,
+                                    max_new_tokens=4))])
+    assert fin.reason in ("eos", "length") and len(fin.tokens) == 4
+    assert engine.stats["preemptions"] == 0
+
+
+def test_preemption_evicts_least_work_victim(qwen_smoke):
+    """Pool pressure must evict the sequence with the least accumulated
+    work (cheapest replay), not the lowest slot id: here slot 0 holds the
+    long-running sequence, so the old sorted()-first policy would evict
+    it at maximal replay cost."""
+    cfg, model, params = qwen_smoke
+    rng = np.random.default_rng(47)
+    long_req = Request(rid=0, prompt=rng.integers(1, cfg.vocab_size,
+                                                  8).tolist(),
+                       max_new_tokens=9)
+    short_req = Request(rid=1, prompt=rng.integers(1, cfg.vocab_size,
+                                                   4).tolist(),
+                        max_new_tokens=9)
+    engine = ServingEngine(model, params, max_batch=2, page_size=4,
+                           num_pages=5, max_seq=20, prefix_caching=False)
+    finished = engine.run([(0, long_req), (1, short_req)])
+    by_rid = {f.rid: f for f in finished}
+    assert engine.stats["preemptions"] >= 1
+    assert by_rid[0].preemptions == 0, \
+        "evicted the longest-running sequence (maximal replay cost)"
+    assert by_rid[1].preemptions >= 1
+    gold = {r.rid: _golden_greedy(model, params, r, 20)
+            for r in (long_req, short_req)}
+    for f in finished:
+        assert f.tokens == gold[f.rid]
+
+
+def test_scheduler_choose_victim_least_work():
+    """Host-level: choose_victim picks the fewest materialized KV tokens,
+    breaking ties toward the newest admission."""
+    cache = PagedKVCache(num_pages=16, page_size=4, max_batch=4,
+                         pages_per_seq=4)
+    sched = Scheduler(cache)
+    for rid, plen in ((0, 9), (1, 3), (2, 5)):
+        sched.submit(Request(rid=rid, prompt=[1] * plen, max_new_tokens=4))
+    admitted = sched.admit()
+    assert len(admitted) == 3
+    slots = {sched.running[s].req.rid: s for s, _ in admitted}
+    assert sched.choose_victim() == slots[1]          # 3 tokens: least work
+    # equal work: the newer admission loses
+    cache.seq_lens[slots[1]] = 5
+    assert sched.choose_victim() == slots[2]
+
+
+def test_engine_prefix_reuse_shared_system_prompt(qwen_smoke):
+    """Requests sharing a system prompt must reuse its full pages (fewer
+    prefill tokens computed) and still generate token-exact outputs."""
+    cfg, model, params = qwen_smoke
+    rng = np.random.default_rng(53)
+    sysp = rng.integers(1, cfg.vocab_size, 12).tolist()    # 3 full pages
+    reqs = [Request(rid=i,
+                    prompt=sysp + rng.integers(1, cfg.vocab_size,
+                                               3).tolist(),
+                    max_new_tokens=4)
+            for i in range(3)]
+    engine = ServingEngine(model, params, max_batch=2, page_size=4,
+                           max_seq=48)
+    finished = engine.run([(2 * i, r) for i, r in enumerate(reqs)])
+    engine.cache.check_invariants()
+    # first request prefills the system prompt; later ones claim it
+    assert engine.stats["cached_prefill_tokens"] >= 2 * len(sysp)
+    total_prompt = sum(len(r.prompt) for r in reqs)
+    assert engine.stats["prefill_tokens"] <= total_prompt - 2 * len(sysp)
+    for f in finished:
+        assert f.tokens == _golden_greedy(model, params, reqs[f.rid], 48)
+
+
+def test_paged_cache_fork_cow():
+    """fork shares every page by refcount; the first append into the
+    shared tail page copies it (pending device copy) and leaves the full
+    prefix pages shared."""
+    c = PagedKVCache(num_pages=8, page_size=4, max_batch=4, pages_per_seq=4)
+    s0 = c.alloc_slot(6)                     # 2 pages, partial tail
+    c.check_invariants()
+    s1 = c.fork(s0)
+    c.check_invariants()
+    assert int(c.seq_lens[s1]) == 6
+    assert c.refcount(int(c.page_table[s0, 0])) == 2
+    assert c.refcount(int(c.page_table[s0, 1])) == 2
+    assert not c.take_pending_copies()
+    assert c.ensure_append_capacity(s1)      # append into shared tail
+    copies = c.take_pending_copies()
+    assert len(copies) == 1
+    src, dst = copies[0]
+    assert src == int(c.page_table[s0, 1]) and dst == int(
+        c.page_table[s1, 1])
+    assert c.page_table[s1, 0] == c.page_table[s0, 0], \
+        "full prefix page must stay shared"
+    assert c.refcount(src) == 1 and c.refcount(dst) == 1
+    c.advance(s1)
+    c.check_invariants()
+    # the original owner's tail is now exclusive: no further copy
+    assert c.ensure_append_capacity(s0)
+    assert not c.take_pending_copies()
+    c.free_slot(s0)
+    c.free_slot(s1)
+    c.check_invariants()
+    assert c.free_page_count == 8
+
+
+def test_cow_failure_never_exposes_shared_page_for_writing():
+    """When copy-on-write cannot allocate (pool dry), the shrunk-chunk
+    capacity must exclude the still-shared page: writing it would
+    corrupt the forked sibling's KV."""
+    c = PagedKVCache(num_pages=2, page_size=4, max_batch=3, pages_per_seq=2)
+    s0 = c.alloc_slot(6)                     # both pages, partial tail
+    s1 = c.fork(s0)                          # tail page shared, pool dry
+    assert not c.ensure_append_capacity(s1), "COW without a free page?"
+    assert not c.take_pending_copies()
+    # allocation capacity still counts the shared page, but the
+    # *writable* capacity (what a shrunk prefill chunk may use) must
+    # stop before it - and stay below seq_lens, i.e. nothing writable.
+    assert c.token_capacity(s1) == 8
+    assert c.writable_token_capacity(s1) == 4
+    with pytest.raises(AssertionError):
+        c.mark_prefilled(s1, 7)              # would write the shared page
+    c.check_invariants()
+    c.free_slot(s0)
+    # sole owner again: append now succeeds without any copy
+    assert c.ensure_append_capacity(s1)
+    assert not c.take_pending_copies()
+    c.advance(s1)
+    c.check_invariants()
+
+
+def test_copy_pages_device_semantics():
+    """copy_pages duplicates page contents along the chosen axis, drops
+    padding entries (out-of-range dst), and leaves every other page
+    untouched - including on the stacked (groups, P, page, ...) layer
+    layout the engine uses (axis=1)."""
+    rng = np.random.default_rng(67)
+    pool = jnp.asarray(rng.standard_normal((6, 4, 2, 8)), jnp.float32)
+    out = np.asarray(paged_pf.copy_pages(
+        pool, jnp.asarray([2, 0], jnp.int32),
+        jnp.asarray([5, 6], jnp.int32)))          # dst 6 is padding
+    np.testing.assert_allclose(out[5], np.asarray(pool)[2])
+    np.testing.assert_allclose(out[:5], np.asarray(pool)[:5])
+
+    stacked = jnp.asarray(rng.standard_normal((2, 6, 4, 2, 8)), jnp.float32)
+    out = np.asarray(paged_pf.copy_pages(
+        stacked, jnp.asarray([1], jnp.int32), jnp.asarray([4], jnp.int32),
+        axis=1))
+    np.testing.assert_allclose(out[:, 4], np.asarray(stacked)[:, 1])
+    np.testing.assert_allclose(out[:, :4], np.asarray(stacked)[:, :4])
+
+
+def test_engine_applies_cow_copies_to_device_pools(qwen_smoke):
+    """fork + divergent append end-to-end at the engine layer: the
+    pending COW copy must be applied to every layer's device pools, so
+    the fork's pages read back identical KV to the original."""
+    cfg, model, params = qwen_smoke
+    rng = np.random.default_rng(71)
+    engine = ServingEngine(model, params, max_batch=3, page_size=4,
+                           max_seq=32)
+    engine.submit(Request(rid=0,
+                          prompt=rng.integers(1, cfg.vocab_size, 6).tolist(),
+                          max_new_tokens=8))
+    engine.step()                              # 6-token KV + partial tail
+    [slot] = engine.sched.decoding_slots()
+
+    def dense_kv(s):
+        pt = jnp.asarray(engine.cache.page_table[s:s + 1, :2])
+        return np.asarray(paged.gather_pages(
+            engine.layers["l0"]["k_pages"][0], pt))[0]
+
+    before = dense_kv(slot)
+    fork = engine.cache.fork(slot)             # tail page now shared
+    assert engine.cache.ensure_append_capacity(fork)
+    assert engine.cache._pending_copies       # COW queued, not yet applied
+    engine._apply_pending_copies()
+    assert engine.stats["cow_copies"] == 1
+    n = int(engine.cache.seq_lens[slot])
+    np.testing.assert_allclose(dense_kv(fork)[:n], before[:n])
+    np.testing.assert_allclose(dense_kv(slot)[:n], before[:n])
+    engine.cache.advance(fork)
+    engine.cache.check_invariants()
+
+
+def test_engine_hfa_free_slot_no_nan():
+    """H-FA jnp decode over a mixed free/active batch: junk (NaN/Inf) in
+    a free slot's pages must not leak NaN into any row (0 * NaN guard)."""
+    rng = np.random.default_rng(61)
+    b, hkv, g, d, page, J = 3, 2, 2, 16, 4, 3
+    num_pages = 10
+    kp = rng.standard_normal((num_pages, page, hkv, d)).astype(np.float32)
+    vp = rng.standard_normal((num_pages, page, hkv, d)).astype(np.float32)
+    pt = np.array([[1, 2, 3], [0, 0, 0], [4, 5, 6]], np.int32)
+    kvl = np.array([5, 0, 7], np.int32)          # slot 1 is free
+    q = _rand((b, 1, hkv * g, d), 62)
+    clean = {impl: np.asarray(ops.paged_decode_attention(
+        q, jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(pt),
+        jnp.asarray(kvl), impl=impl)) for impl in ("fa2", "hfa_pallas")}
+    kp[0] = np.nan                                # free slot's pages rot
+    vp[0] = np.inf
+    for impl in ("fa2", "hfa_pallas"):
+        out = np.asarray(ops.paged_decode_attention(
+            q, jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(pt),
+            jnp.asarray(kvl), impl=impl))
+        assert np.isfinite(out).all(), impl
+        assert np.all(out[1] == 0.0), "free slot row must be zero"
+        np.testing.assert_allclose(out[[0, 2]], clean[impl][[0, 2]],
+                                   atol=1e-6)
