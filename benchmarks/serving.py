@@ -113,19 +113,32 @@ def run_dense(model, params, prompts, budgets, batch, max_seq):
 
 
 def run_paged(model, params, prompts, budgets, batch, max_seq, page_size,
-              prefill_budget=None):
-    """Continuous batching with chunked prefill + prefix caching.
+              prefill_budget=None, spec_k=0, sampling=None):
+    """Continuous batching with chunked prefill + prefix caching, and
+    optionally self-speculative decode (``spec_k`` drafts per step) and
+    per-request stochastic sampling.
 
     Drives the engine step by step (same policy as ``engine.run``) so it
     can count decode stalls: steps where at least one slot was decoding
     but no token came out - the latency spike chunked prefill removes.
+    (A speculative step always yields >= 1 token per decoding slot, so
+    the stall gate holds for every spec_k.)
     """
-    from repro.serving import FinishedRequest, Request, ServingEngine
+    from repro.serving import (FinishedRequest, Request, SamplingParams,
+                               ServingEngine)
     engine = ServingEngine(model, params, max_batch=batch,
                            page_size=page_size, max_seq=max_seq,
-                           prefill_budget=prefill_budget)
+                           prefill_budget=prefill_budget, spec_k=spec_k)
+    def samp(i):
+        if sampling is None:
+            return None
+        return SamplingParams(temperature=sampling["temperature"],
+                              top_k=sampling["top_k"],
+                              top_p=sampling["top_p"],
+                              seed=sampling["seed"] + i)
     pending = [(i, Request(rid=i, prompt=list(prompts[i]),
-                           max_new_tokens=int(budgets[i])))
+                           max_new_tokens=int(budgets[i]),
+                           sampling=samp(i)))
                for i in range(len(prompts))]
     finished = []
     stalls = 0
@@ -185,9 +198,23 @@ def main():
     ap.add_argument("--prefill-budget", type=int, default=None,
                     help="prefill token budget per engine step (chunked "
                          "prefill); default: unbounded")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="max prompt-lookup draft tokens verified per "
+                         "decode step (0 = no speculation)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base sampling seed (request i uses seed + i)")
+    ap.add_argument("--decode-len", type=int, default=0,
+                    help="fixed per-request decode budget (0 = the "
+                         "workload's randomized 4..16/4..24 budgets)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI gate: reduced shared-prefix run asserting "
-                         "zero decode stalls + prefix-cache reuse")
+                         "zero decode stalls + prefix-cache reuse (and, "
+                         "with --spec-k, accept-rate > 0 and "
+                         "tokens/step >= 1)")
     args = ap.parse_args()
     if args.smoke:
         args.workload = "shared-prefix"
@@ -195,6 +222,20 @@ def main():
         args.n = min(args.n, 9)
         if args.prefill_budget is None:
             args.prefill_budget = 16
+        if args.spec_k and not args.decode_len:
+            # Speculation pays where output repeats itself: give the
+            # reduced random-weight model enough budget to fall into
+            # its greedy/low-temperature cycles.
+            args.decode_len = 48
+        if args.spec_k and args.temperature > 0 and not args.top_k \
+                and args.top_p >= 1.0:
+            # The reduced random-weight model is near-uniform over the
+            # vocab at temperature: untruncated sampling would accept a
+            # draft once in ~vocab_size tries, gating CI on a coin
+            # flip.  Truncating to the top few tokens keeps the stream
+            # stochastic while making prompt-lookup hits realistic -
+            # and exercises the temperature+top-k+categorical pipeline.
+            args.top_k = 4
 
     from repro.configs import get_config
     from repro.models.model import build_model
@@ -211,19 +252,25 @@ def main():
     else:
         prompts, budgets = make_workload(args.n, args.prompt_len,
                                          cfg.vocab_size)
+    if args.decode_len:
+        budgets = np.full(args.n, args.decode_len, int)
+    sampling = None
+    if args.temperature > 0 or args.top_k or args.top_p < 1.0:
+        sampling = {"temperature": args.temperature, "top_k": args.top_k,
+                    "top_p": args.top_p, "seed": args.seed}
 
     # Warm both paths with the identical workload so every jit shape
     # (prefill group sizes, resumed lengths) compiles outside the timed
     # region; engines share one compile cache via the model.
     run_dense(model, params, prompts, budgets, args.batch, args.max_seq)
     run_paged(model, params, prompts, budgets, args.batch, args.max_seq,
-              args.page_size, args.prefill_budget)
+              args.page_size, args.prefill_budget, args.spec_k, sampling)
 
     d_tok, d_dt = run_dense(model, params, prompts, budgets, args.batch,
                             args.max_seq)
     p_tok, p_dt, stats, stalls = run_paged(
         model, params, prompts, budgets, args.batch, args.max_seq,
-        args.page_size, args.prefill_budget)
+        args.page_size, args.prefill_budget, args.spec_k, sampling)
     d_tps = d_tok / d_dt
     p_tps = p_tok / p_dt
     total_prompt = sum(len(p) for p in prompts)
@@ -237,6 +284,17 @@ def main():
           f"{total_prompt} submitted "
           f"({stats['cached_prefill_tokens']} reused from prefix cache)")
     print(f"decode stalls:      {stalls} steps")
+    accept_rate = stats["draft_accepted"] / max(stats["draft_tokens"], 1)
+    # Accepted tokens per slot per decode step: 1.0 = plain decode,
+    # spec_k + 1 = every draft accepted every step.
+    tok_per_step = stats["decode_tokens"] / max(stats["decode_slot_steps"],
+                                                1)
+    if args.spec_k:
+        print(f"speculation:        {stats['draft_accepted']}/"
+              f"{stats['draft_tokens']} drafts accepted "
+              f"({accept_rate:.0%}), "
+              f"{tok_per_step:.2f} accepted tokens/step, "
+              f"{stats['rollbacks']} rollbacks")
     print(f"speedup paged/dense: {p_tps / d_tps:.2f}x")
 
     if args.smoke:
@@ -248,6 +306,18 @@ def main():
                 stats["prefill_tokens"] >= total_prompt:
             print("SMOKE FAIL: prefix cache reused nothing")
             ok = False
+        if args.spec_k:
+            if stats["draft_accepted"] == 0:
+                print("SMOKE FAIL: speculation accepted no draft")
+                ok = False
+            # >= 1.0 holds by construction (every verify step emits at
+            # least the correction token); the greedy run must show
+            # real draft-acceptance lift to catch proposer/accept
+            # regressions, while the sampled run only has to stay sane.
+            floor = 1.1 if args.temperature == 0 else 1.0
+            if tok_per_step < floor:
+                print(f"SMOKE FAIL: spec decode below {floor} tokens/step")
+                ok = False
         print("smoke:", "OK" if ok else "FAIL")
         return ok
     return p_tps >= d_tps

@@ -30,6 +30,7 @@ from repro.kernels import hfa as hfa_k
 from repro.kernels import hfa_datapath as dp_k
 from repro.kernels import paged_decode as paged_k
 from repro.kernels import paged_prefill as paged_pf_k
+from repro.kernels import paged_verify as paged_v_k
 
 IMPLS = ("exact", "fa2", "hfa", "fa2_pallas", "hfa_pallas", "hfa_datapath")
 
@@ -380,3 +381,52 @@ def paged_decode_attention(
     out = _decode_jnp_grouped(qg, k_cache, v_cache, kv_lens, scale=scale,
                               use_hfa=use_hfa, acc_dtype=q.dtype)
     return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def paged_verify_attention(
+    q: jax.Array,           # (B, K, H, d) K verify tokens per slot
+    k_pages: jax.Array,     # (P, page, Hkv, d) shared block pool
+    v_pages: jax.Array,     # (P, page, Hkv, d)
+    page_table: jax.Array,  # (B, pages_per_seq) int32
+    seq_lens: jax.Array,    # (B,) int32 pre-step KV length; 0 = free slot
+    chunk_lens: jax.Array,  # (B,) int32 real input count this step
+    *,
+    impl: str = "fa2",
+    scale: float | None = None,
+    force_pallas: bool = False,
+) -> jax.Array:
+    """Multi-query speculative-verify attention against a paged KV cache.
+
+    The step's K tokens (carry + drafts) must already be scattered into
+    the pools at positions ``seq_lens[b]..``; query row i attends
+    causally to KV ``<= seq_lens[b] + i`` (and ``< seq_lens[b] +
+    chunk_lens[b]``), so all K positions are scored in one page-table
+    walk.  With K == 1 this computes exactly
+    :func:`paged_decode_attention` on the post-append cache.  On TPU the
+    dedicated verify kernel walks the table with scalar prefetch;
+    elsewhere the jnp gather path reuses the grouped chunk math (same
+    numerics as the decode path, which is what makes k-step spec decode
+    token-exact).  Rows at ``i >= chunk_lens[b]`` are garbage the caller
+    ignores; ``chunk_lens[b] == 0`` rows come back zero.
+    """
+    b, kw, h, d = q.shape
+    hkv = k_pages.shape[2]
+    g = h // hkv
+    use_hfa = impl.startswith("hfa")
+    qg = jnp.swapaxes(q, 1, 2).reshape(b, hkv, g, kw, d)
+    if force_pallas or (_on_tpu() and impl in ("fa2_pallas", "hfa_pallas")):
+        o, m, l = paged_v_k.paged_verify_partial_pallas(
+            qg, k_pages, v_pages, page_table, seq_lens, chunk_lens,
+            scale=scale, use_hfa=use_hfa, interpret=not _on_tpu())
+        out = decode_k.finalize_decode(o, l, use_hfa=use_hfa)
+    else:
+        k_cache = paged_k.gather_pages(k_pages, page_table)
+        v_cache = paged_k.gather_pages(v_pages, page_table)
+        sl = seq_lens.astype(jnp.int32)
+        q_pos = sl[:, None] + jnp.arange(kw, dtype=jnp.int32)[None]
+        kv_lens = sl + chunk_lens.astype(jnp.int32)
+        out = _prefill_jnp_grouped(qg, k_cache, v_cache, q_pos, kv_lens,
+                                   scale=scale, use_hfa=use_hfa,
+                                   acc_dtype=q.dtype)
+    # (B, Hkv, G, K, d) -> (B, K, H, d)
+    return jnp.swapaxes(out.reshape(b, h, kw, d), 1, 2).astype(q.dtype)

@@ -34,6 +34,18 @@ def main():
                          "prefill, Sarathi-style); default: unbounded")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable shared-prefix page reuse")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="max prompt-lookup draft tokens verified per "
+                         "decode step (0 = no speculation)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k truncation (0 = disabled)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus truncation (1.0 = disabled)")
+    ap.add_argument("--repetition-penalty", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base sampling seed (request i uses seed + i)")
     ap.add_argument("--dense", action="store_true",
                     help="legacy fixed-batch loop over a contiguous cache")
     args = ap.parse_args()
@@ -58,7 +70,7 @@ def main():
         _serve_dense(model, params, cfg, batch, args)
         return
 
-    from repro.serving import Request, ServingEngine
+    from repro.serving import Request, SamplingParams, ServingEngine
 
     n_req = args.requests or 2 * args.batch
     prompts = np.concatenate(
@@ -67,10 +79,16 @@ def main():
     engine = ServingEngine(model, params, max_batch=args.batch,
                            page_size=args.page_size, max_seq=args.max_seq,
                            prefill_budget=args.prefill_budget,
-                           prefix_caching=not args.no_prefix_cache)
+                           prefix_caching=not args.no_prefix_cache,
+                           spec_k=args.spec_k)
     # one new arrival per step: requests join and leave mid-flight
     arrivals = [(i, Request(rid=i, prompt=prompts[i].tolist(),
-                            max_new_tokens=args.steps))
+                            max_new_tokens=args.steps,
+                            sampling=SamplingParams(
+                                temperature=args.temperature,
+                                top_k=args.top_k, top_p=args.top_p,
+                                repetition_penalty=args.repetition_penalty,
+                                seed=args.seed + i)))
                 for i in range(n_req)]
     t0 = time.perf_counter()
     finished = engine.run(arrivals)
@@ -84,6 +102,13 @@ def main():
           f"{st['cached_prefill_tokens']} reused from prefix cache")
     print(f"generated {st['generated_tokens']} tokens in {dt:.2f} s "
           f"-> {st['generated_tokens']/dt:.1f} tok/s")
+    if args.spec_k:
+        rate = st["draft_accepted"] / max(st["draft_tokens"], 1)
+        tps = st["decode_tokens"] / max(st["decode_slot_steps"], 1)
+        print(f"speculation: {st['draft_accepted']}/{st['draft_tokens']} "
+              f"drafts accepted ({rate:.0%}), "
+              f"{tps:.2f} accepted tokens/step, "
+              f"{st['rollbacks']} rollbacks")
     print("sample:", finished[0].tokens[:12])
 
 

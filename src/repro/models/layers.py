@@ -243,7 +243,19 @@ def _paged_attention(p, q, k, v, cfg, cache, page_state, *, impl, causal,
     from repro.kernels import paged_prefill as paged_pf_k
     assert page_state is not None, "paged cache requires page_state"
     pt = page_state["page_table"]
-    if not page_state.get("prefill", False):
+    if page_state.get("verify", False):
+        # Speculative multi-token verify: scatter the K step tokens at
+        # positions seq_lens[b].. (rows past chunk_lens are dropped, so
+        # shared pages stay intact), then score all K positions in one
+        # page-table walk.  K == 1 degenerates to the decode path.
+        sl = page_state["seq_lens"]
+        cl = page_state["chunk_lens"]
+        kp, vp = paged_pf_k.write_chunk_kv(cache["k_pages"],
+                                           cache["v_pages"], k, v, pt,
+                                           sl, cl)
+        out = kops.paged_verify_attention(q, kp, vp, pt, sl, cl,
+                                          impl=_decode_impl(impl))
+    elif not page_state.get("prefill", False):
         sl = page_state["seq_lens"]
         kp, vp = paged_k.append_kv(cache["k_pages"], cache["v_pages"],
                                    k, v, pt, sl)

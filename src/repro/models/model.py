@@ -289,6 +289,35 @@ class LM:
         x = T._norm_apply(cfg, params["final_norm"], x)
         return self._head(params, x), new_layers
 
+    def paged_verify_step(self, params, layers, tokens, page_table,
+                          seq_lens, chunk_lens):
+        """K-token speculative verify step across every slot.
+
+        tokens: (B, K) input tokens per slot - the carry token followed
+        by up to K-1 drafted continuations, landing at positions
+        ``seq_lens[b] + i``.  chunk_lens: (B,) int32 real input count
+        per slot (0 = free / mid-prefill slot: nothing is written and
+        its logits are garbage to be ignored; rows at i >= chunk_lens
+        are likewise garbage).  Writes KV for the real inputs and
+        returns (logits (B, K, V), new layer caches) - the logits at
+        every verify position, scored in one paged-attention call.
+        With K == 1 this is exactly :meth:`paged_decode_step`.
+        """
+        cfg = self.cfg
+        cdt = _dtype(cfg.compute_dtype)
+        x = self._embed_in(params, tokens, cdt, pos0=0)
+        x = constrain(x, ("batch", None, "embed"))
+        seq_lens = seq_lens.astype(jnp.int32)
+        positions = seq_lens[:, None] + jnp.arange(
+            tokens.shape[1], dtype=jnp.int32)[None]
+        ps = {"page_table": page_table, "seq_lens": seq_lens,
+              "chunk_lens": chunk_lens.astype(jnp.int32), "verify": True}
+        x, new_layers, _ = T.stack_apply(
+            params["layers"], x, cfg, positions=positions, caches=layers,
+            page_state=ps, causal=True)
+        x = T._norm_apply(cfg, params["final_norm"], x)
+        return self._head(params, x), new_layers
+
     def paged_decode_step(self, params, layers, tokens, page_table,
                           seq_lens):
         """One continuous-batching decode step across every slot.

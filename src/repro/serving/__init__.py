@@ -1,17 +1,22 @@
 """Paged KV-cache + continuous-batching serving subsystem.
 
 paged_cache.py   host-side block pool: pages, page tables, slot lifecycle
-scheduler.py     request admission / preemption / retirement
-engine.py        ServingEngine: jitted paged prefill/decode over the model
+scheduler.py     request admission / preemption / retirement + decode plans
+sampler.py       device-side temperature/top-k/top-p/penalty sampling
+spec.py          prompt-lookup draft proposer (self-speculation)
+engine.py        ServingEngine: jitted paged prefill/verify over the model
 
 Device-side pieces live next to the kernels they pair with
-(:mod:`repro.kernels.paged_decode`) and in the model facade
-(:meth:`repro.models.model.LM.paged_decode_step`).
+(:mod:`repro.kernels.paged_decode`, :mod:`repro.kernels.paged_verify`)
+and in the model facade (:meth:`repro.models.model.LM.paged_verify_step`).
 """
 from repro.serving.engine import ServingEngine
 from repro.serving.paged_cache import PagedKVCache
-from repro.serving.scheduler import (FinishedRequest, PrefillChunk, Request,
-                                     Scheduler)
+from repro.serving.sampler import SamplingParams
+from repro.serving.scheduler import (DecodeStep, FinishedRequest,
+                                     PrefillChunk, Request, Scheduler)
+from repro.serving.spec import propose_draft
 
-__all__ = ["PagedKVCache", "PrefillChunk", "Request", "FinishedRequest",
-           "Scheduler", "ServingEngine"]
+__all__ = ["DecodeStep", "PagedKVCache", "PrefillChunk", "Request",
+           "FinishedRequest", "SamplingParams", "Scheduler",
+           "ServingEngine", "propose_draft"]

@@ -1,29 +1,40 @@
-"""ServingEngine: continuous-batching greedy decode over paged KV.
+"""ServingEngine: continuous-batching sampled + speculative decode over
+paged KV.
 
 One engine step = one token-budget step that *mixes* prefill chunks with
 the batched decode (Sarathi-style):
 
   * prefill work is bounded by ``prefill_budget`` tokens per step and
     handed out as chunks, so a long prompt streams in across steps
-    while every running decode keeps producing one token per step (no
+    while every running decode keeps producing tokens per step (no
     prefill stall);
   * admission claims the longest cached prompt prefix (full pages, via
     the cache's chain-hash table) instead of recomputing it -
     shared-system-prompt workloads prefill only their unique tail;
-  * decode is one jitted call over all ``max_batch`` slots - free and
-    mid-prefill slots ride along masked (length 0), so the trace is
-    unique and requests join/leave without recompilation;
+  * decode is one jitted *verify* call over all ``max_batch`` slots and
+    ``spec_k + 1`` token columns: the carry token plus up to ``spec_k``
+    prompt-lookup drafts per slot are scored in a single page-table
+    walk (free and mid-prefill slots ride along masked), so the trace
+    is unique and requests join/leave without recompilation;
+  * sampling (temperature / top-k / top-p / repetition penalty) runs
+    *inside* the jitted step, seeded per request and keyed by stream
+    position (``jax.random.fold_in``), so a request's tokens are
+    identical whether it shares the step with 0 or 7 neighbors - and a
+    draft is accepted iff it equals the token the sampler would have
+    produced, which makes speculative decode lossless under both greedy
+    and stochastic sampling;
+  * rejected draft columns are rolled back on the host: ``seq_lens``
+    drops to the accepted prefix and now-empty tail pages return to the
+    pool (COW refcounts respected);
   * under page pressure, mid-prefill sequences pause in place (keep
     pages, resume at pos > 0) and decode-append pressure preempts the
-    *least-advanced* sequence (cheapest replay) - whose published
-    prefix pages stay claimable, so the replay usually skips straight
-    to the last full page;
+    *least-advanced* sequence (cheapest replay);
   * copy-on-write page copies (fork / shared-page divergence) are
     drained from the cache and applied to the device pools before any
     write.
 
-Greedy argmax happens on-device inside the jitted step; only the
-(max_batch,) token vector crosses to the host per step.
+Only the (max_batch, spec_k + 1) sampled-token matrix crosses to the
+host per step.
 """
 from __future__ import annotations
 
@@ -33,32 +44,76 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import paged_prefill as paged_pf_k
+from repro.serving import sampler
 from repro.serving.paged_cache import PagedKVCache
 from repro.serving.scheduler import (FinishedRequest, PrefillChunk, Request,
                                      Scheduler)
 
+# Placeholder for the presence bitmask on greedy (static-flag) traces:
+# the argmax branch never reads it, and shipping the real
+# (max_batch, padded_vocab) bool matrix to the device every step would
+# make the fast path pay for sampling it is not doing.
+_NO_PRESENCE = np.zeros((1, 1), bool)
+
 
 def _serving_jits(model):
-    """Jitted greedy prefill/decode/copy, cached on the model so every
+    """Jitted prefill/verify/copy steps, cached on the model so every
     engine over the same model shares one compile cache (benchmarks and
     tests spin up several engines).  Cache donation is skipped on CPU,
     where it is unsupported and only adds dispatch overhead."""
-    jits = getattr(model, "_serving_jits", None)
+    jits = getattr(model, "_serving_jits_v2", None)
     if jits is not None:
         return jits
 
-    def prefill_fn(params, layers, tokens, page_table, start_pos, last_pos):
+    # ``greedy`` is a static (trace-time) flag: when every row this call
+    # serves is argmax (temperature 0, no penalty), the whole sampling
+    # pipeline (sorts, nucleus scan, categorical) compiles away - the
+    # hot greedy decode step stays as lean as before sampling existed.
+    def prefill_fn(params, layers, tokens, page_table, start_pos, last_pos,
+                   seeds, positions, temp, top_k, top_p, rep_pen, presence,
+                   greedy):
         logits, layers = model.paged_prefill(params, layers, tokens,
                                              page_table, last_pos=last_pos,
                                              start_pos=start_pos)
-        return (jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32),
-                layers)
+        if greedy:
+            toks = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        else:
+            toks = sampler.sample_tokens(logits[:, 0], presence, seeds,
+                                         positions, temp, top_k, top_p,
+                                         rep_pen)
+        return toks, layers
 
-    def decode_fn(params, layers, tokens, page_table, seq_lens):
+    def decode_fn(params, layers, tokens, page_table, seq_lens, chunk_lens,
+                  seeds, temp, top_k, top_p, rep_pen, presence, greedy):
+        # spec_k == 0 fast path: the single-token decode attention
+        # (append + grouped decode) instead of the chunk-write verify.
         logits, layers = model.paged_decode_step(
             params, layers, tokens, page_table, seq_lens)
-        return (jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32),
-                layers)
+        if greedy:
+            toks = jnp.argmax(logits[:, :1], axis=-1).astype(jnp.int32)
+        else:
+            pos = seq_lens.astype(jnp.int32) + 1
+            toks = sampler.sample_tokens(
+                logits[:, 0], presence, seeds, pos, temp, top_k, top_p,
+                rep_pen)[:, None]
+        return toks, layers
+
+    def verify_fn(params, layers, tokens, page_table, seq_lens, chunk_lens,
+                  seeds, temp, top_k, top_p, rep_pen, presence, greedy):
+        logits, layers = model.paged_verify_step(
+            params, layers, tokens, page_table, seq_lens, chunk_lens)
+        b, kw, v = logits.shape
+        if greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), layers
+        pres = sampler.step_presence(presence, tokens)
+        # Sampled token i lands at stream index seq_lens + 1 + i.
+        pos = seq_lens.astype(jnp.int32)[:, None] + 1 + \
+            jnp.arange(kw, dtype=jnp.int32)[None]
+        rep = lambda x: jnp.repeat(x, kw, axis=0)  # noqa: E731
+        toks = sampler.sample_tokens(
+            logits.reshape(b * kw, v), pres.reshape(b * kw, -1), rep(seeds),
+            pos.reshape(-1), rep(temp), rep(top_k), rep(top_p), rep(rep_pen))
+        return toks.reshape(b, kw), layers
 
     def copy_fn(layers, src, dst):
         # Layer pools are stacked (groups, P, page, Hkv, d): page axis 1.
@@ -67,10 +122,13 @@ def _serving_jits(model):
             layers)
 
     cpu = jax.default_backend() == "cpu"
-    jits = (jax.jit(prefill_fn, donate_argnums=() if cpu else (1,)),
-            jax.jit(decode_fn, donate_argnums=() if cpu else (1,)),
+    donate = () if cpu else (1,)
+    jits = (jax.jit(prefill_fn, donate_argnums=donate,
+                    static_argnums=(13,)),
+            jax.jit(decode_fn, donate_argnums=donate, static_argnums=(12,)),
+            jax.jit(verify_fn, donate_argnums=donate, static_argnums=(12,)),
             jax.jit(copy_fn, donate_argnums=() if cpu else (0,)))
-    model._serving_jits = jits
+    model._serving_jits_v2 = jits
     return jits
 
 
@@ -79,32 +137,57 @@ class ServingEngine:
                  page_size: int = 16, num_pages: int | None = None,
                  max_seq: int | None = None,
                  prefill_budget: int | None = None,
-                 prefix_caching: bool = True):
+                 prefix_caching: bool = True,
+                 spec_k: int = 0,
+                 cached_frac: float = 0.5):
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
         if prefill_budget is not None and prefill_budget < 1:
             raise ValueError(
                 f"prefill_budget must be >= 1, got {prefill_budget}")
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+        if not 0.0 <= cached_frac <= 1.0:
+            raise ValueError(
+                f"cached_frac must be in [0, 1], got {cached_frac}")
         self.model = model
         self.params = params
         self.page_size = page_size
         self.max_batch = max_batch
         self.prefill_budget = prefill_budget
         self.prefix_caching = prefix_caching
+        self.spec_k = spec_k
         max_seq = max_seq if max_seq is not None else model.cfg.max_seq
         self.pages_per_seq = -(-max_seq // page_size)
         if num_pages is None:
             num_pages = max_batch * self.pages_per_seq
+        # Bound the dead-prefix LRU to a fraction of the pool so
+        # long-running multi-tenant churn cannot turn the whole free
+        # pool into single-use cached prefixes (1.0 = uncapped).
+        max_cached = None if cached_frac >= 1.0 \
+            else int(cached_frac * num_pages)
         self.cache = PagedKVCache(num_pages, page_size, max_batch,
-                                  self.pages_per_seq)
+                                  self.pages_per_seq,
+                                  max_cached_pages=max_cached)
         self.sched = Scheduler(self.cache)
         self.layers = model.init_paged_cache(num_pages, page_size)
-        self._next_tok = np.zeros((max_batch,), np.int32)
+        # Per-slot sampling state (greedy defaults), mirrored to device
+        # every step; presence is the repetition-penalty context bitmask.
+        self._temp = np.zeros((max_batch,), np.float32)
+        self._top_k = np.zeros((max_batch,), np.int32)
+        self._top_p = np.ones((max_batch,), np.float32)
+        self._rep_pen = np.ones((max_batch,), np.float32)
+        self._seed = np.zeros((max_batch,), np.int32)
+        self._presence = np.zeros((max_batch, model.cfg.padded_vocab), bool)
         self.stats = {"steps": 0, "prefills": 0, "prefill_chunks": 0,
                       "prefill_tokens": 0, "cached_prefill_tokens": 0,
                       "generated_tokens": 0, "preemptions": 0,
-                      "cow_copies": 0, "rejected": 0}
-        self._prefill, self._decode, self._copy = _serving_jits(model)
+                      "cow_copies": 0, "rejected": 0, "decode_steps": 0,
+                      "decode_slot_steps": 0, "decode_tokens": 0,
+                      "draft_tokens": 0, "draft_accepted": 0,
+                      "rollbacks": 0}
+        self._prefill, self._decode, self._verify, self._copy = \
+            _serving_jits(model)
 
     # ------------------------------------------------------------- intake
     def submit(self, req: Request) -> None:
@@ -119,8 +202,8 @@ class ServingEngine:
     # -------------------------------------------------------------- step
     def step(self) -> list[FinishedRequest]:
         """One token-budget step: continue/admit prefill chunks, run one
-        batched decode over every decoding slot; returns the requests
-        that finished during this step."""
+        batched (speculative) decode over every decoding slot; returns
+        the requests that finished during this step."""
         finished: list[FinishedRequest] = []
         # Decoding slots claim their next page BEFORE prefill work is
         # scheduled - otherwise a prompt chunk can grab the last free
@@ -150,7 +233,6 @@ class ServingEngine:
         # ending exactly on a page boundary needs its next page before
         # the decode scatter.
         self._capacity_pass()
-        self._apply_pending_copies()
         self._run_decode(finished)
         self.stats["steps"] += 1
         return finished
@@ -192,11 +274,39 @@ class ServingEngine:
         self.layers = self._copy(self.layers, jnp.asarray(src),
                                  jnp.asarray(dst))
 
+    # ----------------------------------------------------------- sampling
+    def _all_greedy(self, slots) -> bool:
+        """True when every listed slot is pure argmax (temperature 0, no
+        repetition penalty) - the static fast-path flag for the jits."""
+        idx = np.asarray(list(slots), np.int64)
+        return bool(np.all(self._temp[idx] == 0.0)
+                    and np.all(self._rep_pen[idx] == 1.0))
+
+    def _set_sampling(self, slot: int) -> None:
+        """Mirror a slot's request sampling params into the batched
+        per-slot vectors the jitted steps consume."""
+        sp = self.sched.running[slot].req.sampling or sampler.GREEDY
+        self._temp[slot] = sp.temperature
+        self._top_k[slot] = sp.top_k
+        self._top_p[slot] = sp.top_p
+        self._rep_pen[slot] = sp.repetition_penalty
+        self._seed[slot] = sp.seed
+
+    def _rebuild_presence(self, slot: int) -> None:
+        """Recompute a slot's repetition-penalty context from its full
+        token stream (admission / replay after preemption)."""
+        self._presence[slot] = False
+        toks = np.asarray(self.sched.running[slot].tokens(), np.int64)
+        self._presence[slot, toks] = True
+
     # ----------------------------------------------------------- prefill
     def _run_chunks(self, chunks: list[PrefillChunk], finished: list):
         """Run this step's prefill chunks, batched by padded length (one
         jit trace per (group size, padded length) pair).  Final chunks
-        yield the sequence's first new token and flip it into decode."""
+        yield the sequence's first new token - sampled on device - and
+        flip it into decode."""
+        for ck in chunks:
+            self._set_sampling(ck.slot)
         groups: dict[int, list[PrefillChunk]] = {}
         for ck in chunks:
             lpad = -(-len(ck.tokens) // self.page_size) * self.page_size
@@ -210,15 +320,33 @@ class ServingEngine:
             rows = np.zeros((bsz, width), np.int32)
             start = np.zeros((bsz,), np.int32)
             last = np.zeros((bsz,), np.int32)
+            pos = np.zeros((bsz,), np.int32)
+            slots = np.zeros((bsz,), np.int64)
             for i, ck in enumerate(grp):
                 toks[i, :len(ck.tokens)] = ck.tokens
                 rows[i] = self.cache.page_table[ck.slot, :width]
                 start[i] = ck.start
                 last[i] = len(ck.tokens) - 1
-            greedy, self.layers = self._prefill(
+                slots[i] = ck.slot
+                if ck.is_final:
+                    # The sampled token's stream index is the prompt
+                    # length plus any generated tokens replayed after a
+                    # preemption - i.e. the stream length itself.
+                    self._rebuild_presence(ck.slot)
+                    pos[i] = self.sched.running[ck.slot].target
+            greedy = self._all_greedy(
+                ck.slot for ck in grp if ck.is_final)
+            pres = _NO_PRESENCE if greedy else self._presence[slots]
+            sampled, self.layers = self._prefill(
                 self.params, self.layers, jnp.asarray(toks),
-                jnp.asarray(rows), jnp.asarray(start), jnp.asarray(last))
-            greedy = np.asarray(greedy)
+                jnp.asarray(rows), jnp.asarray(start), jnp.asarray(last),
+                jnp.asarray(self._seed[slots]), jnp.asarray(pos),
+                jnp.asarray(self._temp[slots]),
+                jnp.asarray(self._top_k[slots]),
+                jnp.asarray(self._top_p[slots]),
+                jnp.asarray(self._rep_pen[slots]),
+                jnp.asarray(pres), greedy)
+            sampled = np.asarray(sampled)
             self.stats["prefills"] += 1
             for i, ck in enumerate(grp):
                 self.stats["prefill_chunks"] += 1
@@ -229,49 +357,100 @@ class ServingEngine:
                         ck.slot, self.sched.running[ck.slot].tokens())
                 if not ck.is_final:
                     continue
-                tok = int(greedy[i])
+                tok = int(sampled[i])
                 self.stats["generated_tokens"] += 1
                 status = self.sched.record_token(ck.slot, tok)
-                if status == "running":
-                    self._next_tok[ck.slot] = tok
-                else:
+                self._presence[ck.slot, tok] = True
+                if status != "running":
                     finished.append(self.sched.retire(ck.slot, status))
 
     # ------------------------------------------------------------ decode
     def _run_decode(self, finished: list) -> None:
-        dslots = self.sched.decoding_slots()
-        if not dslots:
+        """One batched verify step: feed each decoding slot its carry
+        token plus up to ``spec_k`` prompt-lookup drafts, sample the
+        target token at every position on device, and keep the longest
+        prefix whose drafts the sampler confirmed.  Rejected columns
+        roll the paged KV back to the accepted prefix."""
+        steps = self.sched.schedule_decode(self.spec_k)
+        if not steps:
             return
-        # Mid-prefill and free slots ride along masked (length 0): their
-        # KV write is dropped and their logits ignored.
+        kw = self.spec_k + 1
+        toks = np.zeros((self.max_batch, kw), np.int32)
         dl = np.zeros((self.max_batch,), np.int32)
-        for slot in dslots:
-            dl[slot] = self.cache.seq_lens[slot]
+        cl = np.zeros((self.max_batch,), np.int32)
+        for step in steps:
+            slot = step.slot
+            sl = int(self.cache.seq_lens[slot])
+            c = len(step.tokens)
+            if c > 1 and not self.cache.ensure_capacity(slot, sl + c):
+                # Pool pressure / per-seq ceiling: shrink the step to
+                # the writable pages (the capacity pass guaranteed at
+                # least the one-token append).
+                c = max(1, min(
+                    c, self.cache.writable_token_capacity(slot) - sl))
+                del step.tokens[c:]
+                del step.drafts[max(0, c - 1):]
+            dl[slot] = sl
+            cl[slot] = c
+            toks[slot, :c] = step.tokens
         width = self._pow2_width(max(
-            self.cache.pages_for(int(self.cache.seq_lens[s]) + 1)
-            for s in dslots))
-        toks = jnp.asarray(self._next_tok[:, None])
-        nxt, self.layers = self._decode(
-            self.params, self.layers, toks,
+            self.cache.pages_for(int(dl[s.slot] + cl[s.slot]))
+            for s in steps))
+        self._apply_pending_copies()
+        step_fn = self._decode if kw == 1 else self._verify
+        greedy = self._all_greedy(s.slot for s in steps)
+        sampled, self.layers = step_fn(
+            self.params, self.layers, jnp.asarray(toks),
             jnp.asarray(self.cache.page_table[:, :width]),
-            jnp.asarray(dl))
-        nxt = np.asarray(nxt)
-        for slot in dslots:
-            self.cache.advance(slot)
-            tok = int(nxt[slot])
-            self.stats["generated_tokens"] += 1
-            status = self.sched.record_token(slot, tok)
-            if self.prefix_caching and \
-                    int(self.cache.seq_lens[slot]) % self.page_size == 0:
-                # A page just filled: publish it so an identical prefix
-                # (or this sequence's own replay after a preemption) can
-                # claim it instead of recomputing.
+            jnp.asarray(dl), jnp.asarray(cl),
+            jnp.asarray(self._seed), jnp.asarray(self._temp),
+            jnp.asarray(self._top_k), jnp.asarray(self._top_p),
+            jnp.asarray(self._rep_pen),
+            jnp.asarray(_NO_PRESENCE if greedy else self._presence),
+            greedy)
+        sampled = np.asarray(sampled)
+        self.stats["decode_steps"] += 1
+        self.stats["decode_slot_steps"] += len(steps)
+        for step in steps:
+            slot = step.slot
+            c = len(step.tokens)
+            t = sampled[slot]
+            # Accept drafts while they equal the sampled target token at
+            # their position - exact (lossless) acceptance: t[j-1] is
+            # the token the no-spec loop would have emitted where the
+            # step fed draft step.tokens[j].
+            a = 1
+            while a < c and int(t[a - 1]) == step.tokens[a]:
+                a += 1
+            self.stats["draft_tokens"] += c - 1
+            self.stats["draft_accepted"] += a - 1
+            sl = int(self.cache.seq_lens[slot])
+            # KV for all c inputs is on device; commit it, then roll
+            # back past the accepted prefix below.
+            self.cache.mark_prefilled(slot, sl + c)
+            status, used = "running", 0
+            for j in range(a):
+                tok = int(t[j])
+                used += 1
+                self.stats["generated_tokens"] += 1
+                self.stats["decode_tokens"] += 1
+                status = self.sched.record_token(slot, tok)
+                self._presence[slot, tok] = True
+                if status != "running":
+                    break
+            if status != "running":
+                finished.append(self.sched.retire(slot, status))
+                continue
+            if used < c:
+                # Paged rollback: decrement seq_len to the accepted
+                # prefix and free now-empty tail pages (refcounts
+                # respected - a forked sibling only loses this slot's
+                # reference).
+                self.cache.rollback(slot, sl + used)
+                self.stats["rollbacks"] += 1
+            if self.prefix_caching:
                 self.cache.register_pages(
                     slot, self.sched.running[slot].tokens())
-            if status == "running":
-                self._next_tok[slot] = tok
-            else:
-                finished.append(self.sched.retire(slot, status))
 
     def _pow2_width(self, need: int) -> int:
         """Page-table width covering ``need`` pages, rounded up to a

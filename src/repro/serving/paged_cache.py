@@ -45,12 +45,22 @@ class PagedKVCache:
     """
 
     def __init__(self, num_pages: int, page_size: int, max_batch: int,
-                 pages_per_seq: int):
+                 pages_per_seq: int, max_cached_pages: int | None = None):
         assert num_pages >= 1 and page_size >= 1
         self.num_pages = num_pages
         self.page_size = page_size
         self.max_batch = max_batch
         self.pages_per_seq = pages_per_seq
+        # Cap on the cached-page LRU (None = uncapped): under
+        # long-running multi-tenant churn every retired prefix parks its
+        # pages here, and without a bound the *entire* free pool ends up
+        # as dead single-use prefixes - each later allocation then pays
+        # an LRU eviction + hash retraction instead of a free-list pop,
+        # and a cold burst finds no strictly-free pages at all.  Excess
+        # entries age out oldest-first at park time.
+        if max_cached_pages is not None:
+            assert max_cached_pages >= 0, max_cached_pages
+        self.max_cached_pages = max_cached_pages
         self.page_table = np.zeros((max_batch, pages_per_seq), np.int32)
         self.seq_lens = np.zeros((max_batch,), np.int32)
         self._free_pages: list[int] = list(range(num_pages - 1, -1, -1))
@@ -199,6 +209,17 @@ class PagedKVCache:
             self._unregister(page)
             return page
         raise RuntimeError("page pool exhausted")
+
+    def _park(self, page: int) -> None:
+        """Drop a published page whose last reference just fell: park it
+        in the cached LRU (still claimable by an identical prefix),
+        aging out the oldest entries beyond ``max_cached_pages``."""
+        self._cached[page] = None                    # most-recently used
+        if self.max_cached_pages is not None:
+            while len(self._cached) > self.max_cached_pages:
+                old, _ = self._cached.popitem(last=False)
+                self._unregister(old)
+                self._free_pages.append(old)
 
     def _claim(self, page: int) -> None:
         """Take one reference on a shared/cached page."""
@@ -369,15 +390,46 @@ class PagedKVCache:
         pages = self._slot_pages.pop(slot)
         self._slot_chain.pop(slot, None)
         for p in pages:
-            self._refcount[p] -= 1
-            if self._refcount[p] == 0:
-                if p in self._page_hash:
-                    self._cached[p] = None       # most-recently used
-                else:
-                    self._free_pages.append(p)
+            self._drop_ref(p)
         self._free_slots.append(slot)
         self.page_table[slot] = 0
         self.seq_lens[slot] = 0
+
+    def _drop_ref(self, page: int) -> None:
+        self._refcount[page] -= 1
+        if self._refcount[page] == 0:
+            if page in self._page_hash:
+                self._park(page)
+            else:
+                self._free_pages.append(page)
+
+    def rollback(self, slot: int, n_tokens: int) -> None:
+        """Truncate ``slot`` back to ``n_tokens`` (speculative-decode
+        rollback): positions past the accepted prefix hold rejected
+        drafts' KV, so decrement ``seq_lens`` and drop the slot's
+        reference on every page past ``pages_for(n_tokens)``.
+
+        Refcounts are respected: a tail page a fork still reads only
+        loses this slot's reference; a published last-reference page
+        parks in the cached LRU exactly as on :meth:`free_slot`.  The
+        hash chain is re-trimmed so later ``register_pages`` calls
+        re-hash any page whose content the rollback invalidated.  The
+        junk KV left inside kept pages (positions >= n_tokens) is never
+        attended - every mask in the stack cuts at seq_lens - and the
+        next append overwrites it in place.
+        """
+        assert 1 <= n_tokens <= int(self.seq_lens[slot]), \
+            (n_tokens, int(self.seq_lens[slot]))
+        keep = self.pages_for(n_tokens)
+        pages = self._slot_pages[slot]
+        while len(pages) > keep:
+            p = pages.pop()
+            self.page_table[slot, len(pages)] = 0
+            self._drop_ref(p)
+        chain = self._slot_chain.get(slot)
+        if chain is not None:
+            del chain[n_tokens // self.page_size:]
+        self.seq_lens[slot] = n_tokens
 
     # ---------------------------------------------------------- integrity
     def check_invariants(self) -> None:
@@ -402,6 +454,10 @@ class PagedKVCache:
             "page leak"
         for p in cached:
             assert p in self._page_hash, "cached page without a hash"
+        if self.max_cached_pages is not None:
+            assert len(cached) <= self.max_cached_pages, \
+                f"cached LRU over its cap: {len(cached)} > " \
+                f"{self.max_cached_pages}"
         for p in free:
             assert p not in self._page_hash, "free page still published"
         assert {p: h for h, p in self._hash_page.items()} == \

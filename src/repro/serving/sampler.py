@@ -1,0 +1,160 @@
+"""Device-side stochastic sampling for the paged serving engine.
+
+Sampling runs *inside* the jitted decode/prefill step (not as host-side
+post-processing): the engine hands the batched logits plus per-slot
+parameter vectors to :func:`sample_tokens` and only the sampled token
+matrix crosses back to the host.
+
+Determinism contract (what the conformance suite pins down):
+
+  * Every request carries its own ``seed``.  The key for the token at
+    stream index ``pos`` (prompt + generated, 0-based) is
+    ``jax.random.fold_in(PRNGKey(seed), pos)`` - a pure function of
+    (request, position).  A request therefore samples the *same* stream
+    whether it shares an engine step with 0 or 7 neighbors, whether its
+    prefill was chunked, and whether it was preempted and replayed.
+  * The same position-keying makes self-speculative decode *lossless*
+    under sampling: a draft token is accepted iff it equals the token
+    this sampler would have produced at that position, and the sampler's
+    output depends only on (seed, position, verified logits).
+  * ``temperature == 0`` short-circuits to argmax over the
+    repetition-penalized logits (top-k/top-p are skipped), which is
+    bit-identical to the engine's historical greedy path.
+
+Filter pipeline (HF convention, mirrored by the numpy oracle in
+``tests/test_sampling_spec.py``):
+
+  repetition penalty -> temperature -> top-k -> top-p -> categorical
+
+Repetition-penalty context is a per-row *presence* bitmask over the
+vocab (every token that precedes the sampled position).  For a k-token
+verify step the engine combines the slot's base presence with the
+step's own draft inputs via :func:`step_presence`, so position i sees
+exactly the tokens the no-spec loop would have seen.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration (host-side, hashable)."""
+    temperature: float = 0.0      # 0 => greedy argmax
+    top_k: int = 0                # 0 => disabled
+    top_p: float = 1.0            # 1 => disabled
+    repetition_penalty: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.temperature >= 0.0, self.temperature
+        assert self.top_k >= 0, self.top_k
+        assert 0.0 < self.top_p <= 1.0, self.top_p
+        assert self.repetition_penalty > 0.0, self.repetition_penalty
+
+
+GREEDY = SamplingParams()
+
+
+def apply_repetition_penalty(logits, presence, penalty):
+    """HF-style repetition penalty: seen tokens' logits shrink toward 0.
+
+    logits (N, V) f32; presence (N, V) bool; penalty (N,).
+    """
+    pen = penalty[:, None]
+    hit = jnp.where(logits > 0, logits / pen, logits * pen)
+    return jnp.where(presence, hit, logits)
+
+
+def apply_top_k(logits, top_k):
+    """Mask logits strictly below the k-th largest (ties at the k-th
+    value are all kept).  top_k (N,) int32; 0 disables the filter."""
+    v = logits.shape[-1]
+    srt = jnp.sort(logits, axis=-1)[:, ::-1]
+    k_eff = jnp.where(top_k > 0, jnp.clip(top_k, 1, v), v).astype(jnp.int32)
+    kth = jnp.take_along_axis(srt, (k_eff - 1)[:, None], axis=-1)
+    return jnp.where(logits >= kth, logits, NEG_INF)
+
+
+def apply_top_p(logits, top_p):
+    """Nucleus filter: keep the smallest prefix of the sorted
+    distribution whose mass reaches ``top_p`` (the token that crosses
+    the threshold is kept; the top-1 token always survives)."""
+    order = jnp.argsort(-logits, axis=-1)
+    probs = jax.nn.softmax(jnp.take_along_axis(logits, order, axis=-1),
+                           axis=-1)
+    excl = jnp.cumsum(probs, axis=-1) - probs       # mass strictly before
+    keep_sorted = excl < top_p[:, None]
+    inv = jnp.argsort(order, axis=-1)
+    keep = jnp.take_along_axis(keep_sorted, inv, axis=-1)
+    return jnp.where(keep, logits, NEG_INF)
+
+
+def sample_tokens(logits, presence, seeds, positions, temperature, top_k,
+                  top_p, repetition_penalty):
+    """Sample one token per row.  All args are batched over N rows:
+
+      logits (N, V); presence (N, V) bool context bitmask;
+      seeds/positions (N,) int32; temperature/top_p/repetition_penalty
+      (N,) f32; top_k (N,) int32.
+
+    Returns (N,) int32.  Rows with ``temperature == 0`` return the
+    argmax of the repetition-penalized logits (greedy).
+
+    Both truncation filters run off one shared descending argsort and
+    the draw happens in sorted space (the categorical index maps back
+    through the permutation), so the hot step pays a single O(V log V)
+    sort instead of three.  Top-k is rank-based here: an exact logit
+    tie at the k-th rank keeps the stably-first k entries, where the
+    standalone :func:`apply_top_k` keeps all tied values.
+    """
+    logits = logits.astype(jnp.float32)
+    logits = apply_repetition_penalty(logits, presence, repetition_penalty)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    v = logits.shape[-1]
+    temp = temperature[:, None]
+    scaled = logits / jnp.where(temp > 0, temp, 1.0)
+    order = jnp.argsort(-scaled, axis=-1)
+    slog = jnp.take_along_axis(scaled, order, axis=-1)
+    # top-k: rank < k in sorted space
+    k_eff = jnp.where(top_k > 0, jnp.clip(top_k, 1, v), v).astype(jnp.int32)
+    keep = jnp.arange(v, dtype=jnp.int32)[None, :] < k_eff[:, None]
+    slog = jnp.where(keep, slog, NEG_INF)
+    # top-p over the top-k survivors: keep while the mass strictly
+    # before a token is < p (the top-1 token always survives)
+    probs = jax.nn.softmax(slog, axis=-1)
+    excl = jnp.cumsum(probs, axis=-1) - probs
+    slog = jnp.where(excl < top_p[:, None], slog, NEG_INF)
+
+    def draw(seed, pos, row):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), pos)
+        return jax.random.categorical(key, row)
+
+    idx = jax.vmap(draw)(seeds.astype(jnp.uint32),
+                         positions.astype(jnp.int32), slog)
+    sampled = jnp.take_along_axis(order, idx[:, None], axis=-1)[:, 0] \
+        .astype(jnp.int32)
+    return jnp.where(temperature > 0, sampled, greedy)
+
+
+def step_presence(base, tokens):
+    """Per-position context bitmask for a k-token verify step.
+
+    base (B, V) bool: every token in the slot's stream up to and
+    including the step's first input (the carry token - already
+    recorded by the scheduler).  tokens (B, K) int32: the step's input
+    tokens; position i's context additionally includes draft inputs
+    1..i (the no-spec loop would have recorded them before sampling).
+    Returns (B, K, V) bool.
+    """
+    b, k = tokens.shape
+    v = base.shape[-1]
+    oh = (tokens[..., None] == jnp.arange(v, dtype=tokens.dtype))  # (B,K,V)
+    oh = oh.at[:, 0, :].set(False)          # carry token is in base already
+    cum = jax.lax.associative_scan(jnp.logical_or, oh, axis=1)
+    return base[:, None, :] | cum

@@ -24,7 +24,9 @@ from __future__ import annotations
 import dataclasses
 from collections import deque
 
+from repro.serving import spec
 from repro.serving.paged_cache import PagedKVCache
+from repro.serving.sampler import SamplingParams
 
 
 @dataclasses.dataclass
@@ -33,6 +35,7 @@ class Request:
     prompt: list[int]
     max_new_tokens: int
     eos_id: int | None = None
+    sampling: SamplingParams | None = None     # None = greedy
 
 
 @dataclasses.dataclass
@@ -69,6 +72,18 @@ class _Running:
     @property
     def target(self) -> int:
         return len(self.req.prompt) + len(self.generated)
+
+
+@dataclasses.dataclass
+class DecodeStep:
+    """One slot's work item for a (possibly speculative) decode step:
+    feed ``tokens`` = [carry token] + ``drafts`` at positions
+    ``seq_lens[slot]..``, verify all of them in one paged-attention
+    call, and keep the longest prefix the sampler confirms.  A
+    non-speculative step is simply ``drafts == []``."""
+    slot: int
+    tokens: list[int]
+    drafts: list[int]
 
 
 @dataclasses.dataclass
@@ -212,6 +227,27 @@ class Scheduler:
             self._seq_no += 1
             self.running[slot] = st
             out.append((slot, toks))
+        return out
+
+    # ----------------------------------------------------- decode planning
+    def schedule_decode(self, spec_k: int = 0) -> list[DecodeStep]:
+        """Plan this step's decode work: one :class:`DecodeStep` per
+        decoding slot.  With ``spec_k > 0`` the prompt-lookup proposer
+        drafts up to ``spec_k`` continuation tokens from the request's
+        own token history (never past the remaining generation budget -
+        a token beyond it could only be discarded).  The carry token is
+        the stream's last generated token, whose KV lands at
+        ``seq_lens[slot]`` during the verify step.
+        """
+        out: list[DecodeStep] = []
+        for slot in self.decoding_slots():
+            st = self.running[slot]
+            stream = st.tokens()
+            remaining = st.req.max_new_tokens - len(st.generated)
+            n_draft = min(spec_k, max(0, remaining - 1))
+            drafts = spec.propose_draft(stream, n_draft) if n_draft else []
+            out.append(DecodeStep(slot=slot, tokens=[stream[-1]] + drafts,
+                                  drafts=drafts))
         return out
 
     # ------------------------------------------------------- progression

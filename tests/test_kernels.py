@@ -187,3 +187,133 @@ def test_ops_decode_wrapper_consistency():
     b = np.asarray(ops.decode_attention(q, kc, vc, impl="fa2",
                                         kv_len=150).astype(jnp.float32))
     np.testing.assert_allclose(a, b, atol=5e-3)
+
+
+# ----------------------------------------- paged_verify golden parity
+def _verify_setup(seed, *, b=2, hkv=2, g=4, d=64, page=8, pages_each=3,
+                  kw=1):
+    """Random pools + shuffled page table + ragged seq_lens with room
+    for a kw-token verify step, whose K/V is already written."""
+    from repro.kernels import paged_prefill as paged_pf
+    rng = np.random.default_rng(seed)
+    num_pages = b * pages_each + 2
+    kp = _rand((num_pages, page, hkv, d), jnp.float32, seed + 1)
+    vp = _rand((num_pages, page, hkv, d), jnp.float32, seed + 2)
+    pt = jnp.asarray(rng.permutation(num_pages)[:b * pages_each]
+                     .reshape(b, pages_each).astype(np.int32))
+    sl = jnp.asarray(rng.integers(1, pages_each * page - kw + 1, b)
+                     .astype(np.int32))
+    cl = jnp.full((b,), kw, jnp.int32)
+    q = _rand((b, hkv, g, kw, d), jnp.float32, seed + 3)
+    return q, kp, vp, pt, sl, cl
+
+
+@pytest.mark.parametrize("d", [64, 128])
+@pytest.mark.parametrize("g", [1, 4])
+def test_paged_verify_k1_triplet_parity_matrix(d, g):
+    """Golden-parity matrix over head_dim and GQA group size: with one
+    verify column the paged_verify kernel, the paged_decode kernel, the
+    dense decode kernel, and the jnp triplet oracle must emit the same
+    (m, l, o~) triplets (fp32 tolerance) on ragged seq_lens."""
+    from repro.kernels import paged_decode as paged
+    from repro.kernels import paged_verify as paged_ver
+    q, kp, vp, pt, sl, cl = _verify_setup(50 + d + g, d=d, g=g, kw=1)
+    kvl = sl + 1
+    ov, mv, lv = paged_ver.paged_verify_partial_pallas(
+        q, kp, vp, pt, sl, cl, interpret=True)
+    od, md, ld = paged.paged_decode_partial_pallas(
+        q[:, :, :, 0, :], kp, vp, pt, kvl, interpret=True)
+    np.testing.assert_allclose(np.asarray(mv[..., 0]), np.asarray(md),
+                               atol=0)
+    np.testing.assert_allclose(np.asarray(lv[..., 0]), np.asarray(ld),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ov[:, :, :, 0]), np.asarray(od),
+                               atol=1e-4)
+    # jnp triplet oracle (order-free softmax pieces)
+    orf, mrf, lrf = paged_ver.paged_verify_partial_ref(q, kp, vp, pt, sl,
+                                                       cl)
+    np.testing.assert_allclose(np.asarray(mv), np.asarray(mrf), atol=0)
+    np.testing.assert_allclose(np.asarray(lv), np.asarray(lrf), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(ov), np.asarray(orf), atol=1e-3)
+    # dense decode kernel on the gathered contiguous view, row by row
+    k_dense = paged.gather_pages(kp, pt)
+    v_dense = paged.gather_pages(vp, pt)
+    for i in range(q.shape[0]):
+        o3, m3, l3 = decode.decode_partial_pallas(
+            q[i, :, :, 0, :], jnp.swapaxes(k_dense[i], 0, 1),
+            jnp.swapaxes(v_dense[i], 0, 1), block_kv=8,
+            kv_len=int(kvl[i]))
+        np.testing.assert_allclose(np.asarray(mv[i, :, :, 0]),
+                                   np.asarray(m3), atol=0)
+        np.testing.assert_allclose(np.asarray(lv[i, :, :, 0]),
+                                   np.asarray(l3), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(ov[i, :, :, 0]),
+                                   np.asarray(o3), atol=1e-4)
+
+
+@pytest.mark.parametrize("use_hfa", [False, True])
+def test_paged_verify_rows_match_paged_decode_positions(use_hfa):
+    """Each verify column i scores position seq_lens + i: its triplet
+    must equal a paged_decode call with kv_len = seq_lens + i + 1 -
+    including through the FIX16 H-FA datapath (identical page walk,
+    identical quantized numerics)."""
+    from repro.kernels import paged_decode as paged
+    from repro.kernels import paged_verify as paged_ver
+    kw = 4
+    q, kp, vp, pt, sl, cl = _verify_setup(77, kw=kw)
+    ov, mv, lv = paged_ver.paged_verify_partial_pallas(
+        q, kp, vp, pt, sl, cl, use_hfa=use_hfa, interpret=True)
+    for i in range(kw):
+        od, md, ld = paged.paged_decode_partial_pallas(
+            q[:, :, :, i, :], kp, vp, pt, sl + i + 1, use_hfa=use_hfa,
+            interpret=True)
+        np.testing.assert_allclose(np.asarray(mv[..., i]), np.asarray(md),
+                                   atol=0)
+        np.testing.assert_allclose(np.asarray(lv[..., i]), np.asarray(ld),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(ov[:, :, :, i]),
+                                   np.asarray(od), atol=1e-4)
+
+
+def test_paged_verify_ragged_chunks_and_free_slot():
+    """Ragged chunk_lens: a free slot (cl == 0) emits a zero triplet,
+    short rows only attend KV below seq_lens + chunk_lens, and live
+    rows are untouched by junk in other slots' pages."""
+    from repro.kernels import paged_verify as paged_ver
+    q, kp, vp, pt, sl, cl = _verify_setup(91, b=3, kw=4)
+    sl = sl.at[1].set(0)
+    cl = jnp.asarray(np.array([4, 0, 2], np.int32))
+    ov, mv, lv = paged_ver.paged_verify_partial_pallas(
+        q, kp, vp, pt, sl, cl, interpret=True)
+    assert np.all(np.asarray(ov)[1] == 0.0)
+    assert np.all(np.asarray(lv)[1] == 0.0)
+    orf, mrf, lrf = paged_ver.paged_verify_partial_ref(q, kp, vp, pt, sl,
+                                                       cl)
+    # live columns agree with the oracle (garbage columns excluded)
+    for b, k_real in ((0, 4), (2, 2)):
+        np.testing.assert_allclose(np.asarray(ov)[b, :, :, :k_real],
+                                   np.asarray(orf)[b, :, :, :k_real],
+                                   atol=1e-3)
+        np.testing.assert_allclose(np.asarray(lv)[b, :, :, :k_real],
+                                   np.asarray(lrf)[b, :, :, :k_real],
+                                   atol=1e-4)
+
+
+def test_ops_paged_verify_jnp_matches_pallas_and_decode():
+    """ops.paged_verify_attention: the jnp gather path (CPU serving) ==
+    the Pallas kernel path, and K = 1 == ops.paged_decode_attention."""
+    from repro.kernels import paged_verify as paged_ver  # noqa: F401
+    q, kp, vp, pt, sl, cl = _verify_setup(93, kw=4)
+    b, hkv, g, kw, d = q.shape
+    q4 = jnp.swapaxes(q.reshape(b, hkv * g, kw, d), 1, 2)   # (B, K, H, d)
+    for impl, tol in (("fa2_pallas", 1e-5), ("hfa_pallas", 2e-2)):
+        a = np.asarray(ops.paged_verify_attention(
+            q4, kp, vp, pt, sl, cl, impl=impl, force_pallas=True))
+        jj = np.asarray(ops.paged_verify_attention(
+            q4, kp, vp, pt, sl, cl, impl=impl))
+        np.testing.assert_allclose(a, jj, atol=tol)
+    one = np.asarray(ops.paged_verify_attention(
+        q4[:, :1], kp, vp, pt, sl, jnp.ones_like(cl), impl="fa2"))
+    dec = np.asarray(ops.paged_decode_attention(
+        q4[:, :1], kp, vp, pt, sl + 1, impl="fa2"))
+    np.testing.assert_allclose(one, dec, atol=1e-5)

@@ -1,0 +1,305 @@
+"""Serving conformance suite: sampling + self-speculative decode.
+
+Pins down the three contracts the sampler/spec subsystem must honor:
+
+  (a) *Spec decode is lossless under greedy*: for spec_k in {1, 2, 4}
+      the engine's greedy output is token-exact against the dense
+      no-spec fixed-cache loop, draft hits and rollbacks included.
+  (b) *Seeded sampling is bit-reproducible across batch compositions*:
+      a request samples the same stream whether it shares a step with 0
+      or 7 neighbors, with or without speculation, because keys are
+      fold_in(PRNGKey(seed), stream_position) - never a function of the
+      batch.
+  (c) *Filter semantics match a numpy oracle*: top-k / top-p mass
+      truncation and repetition penalty, elementwise.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.serving import Request, SamplingParams, ServingEngine
+from repro.serving import sampler as S
+from repro.serving.spec import propose_draft
+
+
+@pytest.fixture(scope="module")
+def qwen_smoke():
+    from repro.configs import get_config
+    from repro.models.model import build_model
+    cfg = get_config("qwen3-1.7b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _reference_stream(model, params, req, max_seq):
+    """Dense fixed-cache loop + host-called sampler: the definitionally
+    sequential oracle (one token at a time, no batching, no paging, no
+    speculation).  Greedy when req.sampling is None."""
+    sp = req.sampling or S.GREEDY
+    vocab = model.cfg.padded_vocab
+    presence = np.zeros((1, vocab), bool)
+    presence[0, req.prompt] = True
+
+    def pick(logits, pos):
+        return int(S.sample_tokens(
+            jnp.asarray(logits[None], jnp.float32), jnp.asarray(presence),
+            jnp.asarray([sp.seed], jnp.int32), jnp.asarray([pos], jnp.int32),
+            jnp.asarray([sp.temperature], jnp.float32),
+            jnp.asarray([sp.top_k], jnp.int32),
+            jnp.asarray([sp.top_p], jnp.float32),
+            jnp.asarray([sp.repetition_penalty], jnp.float32))[0])
+
+    cache = model.init_cache(params, 1, max_seq)
+    lg, cache = model.prefill(params, cache,
+                              jnp.asarray([req.prompt], jnp.int32))
+    toks = [pick(np.asarray(lg[0, -1]), len(req.prompt))]
+    presence[0, toks[-1]] = True
+    for i in range(req.max_new_tokens - 1):
+        lg, cache = model.decode_step(params, cache,
+                                      jnp.asarray([[toks[-1]]], jnp.int32))
+        toks.append(pick(np.asarray(lg[0, -1]), len(req.prompt) + i + 1))
+        presence[0, toks[-1]] = True
+    return toks
+
+
+# ------------------------------------------------- (a) lossless greedy
+@pytest.mark.parametrize("spec_k", [1, 2, 4])
+def test_spec_greedy_token_exact(qwen_smoke, spec_k):
+    """Greedy speculative decode must be lossless: every request's
+    tokens equal the dense no-spec loop's, for every spec depth."""
+    cfg, model, params = qwen_smoke
+    rng = np.random.default_rng(101)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        int(rng.integers(2, 9))).tolist(),
+                    max_new_tokens=int(rng.integers(6, 13)))
+            for i in range(4)]
+    gold = {r.rid: _reference_stream(model, params, r, 64) for r in reqs}
+    engine = ServingEngine(model, params, max_batch=3, page_size=4,
+                           max_seq=64, spec_k=spec_k)
+    finished = engine.run([(i, r) for i, r in enumerate(reqs)])
+    engine.cache.check_invariants()
+    assert sorted(f.rid for f in finished) == list(range(4))
+    for f in finished:
+        assert f.tokens == gold[f.rid], (spec_k, f.rid)
+    # the run actually speculated (drafts were proposed and scored)
+    assert engine.stats["draft_tokens"] > 0
+
+
+def test_spec_rollback_exercised(qwen_smoke):
+    """A speculative run on looping-then-diverging output must hit both
+    accepted drafts and rollbacks while staying token-exact."""
+    cfg, model, params = qwen_smoke
+    rng = np.random.default_rng(103)
+    req = Request(rid=0, prompt=rng.integers(1, cfg.vocab_size, 6).tolist(),
+                  max_new_tokens=40)
+    gold = _reference_stream(model, params, req, 64)
+    engine = ServingEngine(model, params, max_batch=2, page_size=4,
+                           max_seq=64, spec_k=4)
+    [fin] = engine.run([(0, req)])
+    engine.cache.check_invariants()
+    assert fin.tokens == gold
+    assert engine.stats["rollbacks"] > 0, "no rejected draft ever rolled back"
+
+
+# --------------------------------------- (b) batch-composition invariance
+def test_seeded_sampling_batch_composition_invariant(qwen_smoke):
+    """A sampled request emits the same tokens solo, with 7 neighbors,
+    and under speculation: keys depend on (seed, position) only."""
+    cfg, model, params = qwen_smoke
+    rng = np.random.default_rng(107)
+    probe = Request(rid=0, prompt=rng.integers(1, cfg.vocab_size, 5).tolist(),
+                    max_new_tokens=10,
+                    sampling=SamplingParams(temperature=0.9, top_k=16,
+                                            top_p=0.9, seed=1234))
+
+    def run(neighbors, spec_k):
+        engine = ServingEngine(model, params, max_batch=8, page_size=4,
+                               max_seq=48, spec_k=spec_k)
+        arrivals = [(0, probe)]
+        for j in range(neighbors):
+            arrivals.append((0, Request(
+                rid=j + 1,
+                prompt=rng.integers(1, cfg.vocab_size, 4 + j % 3).tolist(),
+                max_new_tokens=8 + j % 4,
+                sampling=SamplingParams(temperature=0.7, seed=77 + j))))
+        finished = engine.run(arrivals)
+        engine.cache.check_invariants()
+        return next(f.tokens for f in finished if f.rid == 0)
+
+    solo = run(0, 0)
+    assert solo == _reference_stream(model, params, probe, 48)
+    assert run(7, 0) == solo, "neighbors perturbed a seeded stream"
+    assert run(7, 4) == solo, "speculation perturbed a seeded stream"
+
+
+def test_sampled_engine_matches_reference_loop(qwen_smoke):
+    """Engine-sampled output (with penalty + filters active) equals the
+    sequential dense-loop oracle token for token."""
+    cfg, model, params = qwen_smoke
+    rng = np.random.default_rng(109)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size, 6).tolist(),
+                    max_new_tokens=8,
+                    sampling=SamplingParams(temperature=0.8, top_k=32,
+                                            top_p=0.95,
+                                            repetition_penalty=1.3,
+                                            seed=i * 11 + 3))
+            for i in range(3)]
+    gold = {r.rid: _reference_stream(model, params, r, 48) for r in reqs}
+    engine = ServingEngine(model, params, max_batch=2, page_size=4,
+                           max_seq=48)
+    finished = engine.run([(i, r) for i, r in enumerate(reqs)])
+    for f in finished:
+        assert f.tokens == gold[f.rid], f.rid
+
+
+# ------------------------------------------------- (c) numpy oracles
+def _np_top_k(logits, k):
+    """Numpy oracle: keep values >= the k-th largest (ties kept)."""
+    out = logits.copy()
+    for i, row in enumerate(logits):
+        kk = row.size if k[i] <= 0 else min(k[i], row.size)
+        kth = np.sort(row)[::-1][kk - 1]
+        out[i] = np.where(row >= kth, row, S.NEG_INF)
+    return out
+
+
+def _np_top_p(logits, p):
+    """Numpy oracle: smallest sorted prefix whose mass reaches p."""
+    out = np.full_like(logits, S.NEG_INF)
+    for i, row in enumerate(logits):
+        order = np.argsort(-row, kind="stable")
+        probs = np.exp(row[order] - row[order].max())
+        probs /= probs.sum()
+        csum = np.cumsum(probs)
+        n_keep = 1 + int(np.sum(csum < p[i]))
+        # drop any token the p-mass prefix already excludes
+        n_keep = min(n_keep, row.size)
+        out[i, order[:n_keep]] = row[order[:n_keep]]
+    return out
+
+
+def test_top_k_matches_numpy_oracle():
+    rng = np.random.default_rng(0)
+    logits = rng.standard_normal((8, 37)).astype(np.float32) * 3
+    k = np.array([0, 1, 2, 5, 17, 36, 37, 400], np.int32)
+    got = np.asarray(S.apply_top_k(jnp.asarray(logits), jnp.asarray(k)))
+    want = _np_top_k(logits, k)
+    np.testing.assert_allclose(got, want)
+    # mass check: exactly k survivors (no ties in continuous random data)
+    for i, kk in enumerate([37, 1, 2, 5, 17, 36, 37, 37]):
+        assert int(np.sum(got[i] > S.NEG_INF)) == kk
+
+
+def test_top_p_mass_truncation_matches_numpy_oracle():
+    rng = np.random.default_rng(1)
+    logits = rng.standard_normal((6, 41)).astype(np.float32) * 2
+    p = np.array([0.1, 0.3, 0.5, 0.9, 0.999, 1.0], np.float32)
+    got = np.asarray(S.apply_top_p(jnp.asarray(logits), jnp.asarray(p)))
+    want = _np_top_p(logits, p)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+    for i in range(len(p)):
+        keep = got[i] > S.NEG_INF
+        probs = np.exp(logits[i] - logits[i].max())
+        probs /= probs.sum()
+        kept_mass = probs[keep].sum()
+        # kept mass reaches p, and is minimal: dropping the smallest
+        # kept token must fall below p
+        assert kept_mass >= min(p[i], 1.0) - 1e-6
+        if keep.sum() > 1:
+            smallest = np.argmin(np.where(keep, probs, np.inf))
+            assert kept_mass - probs[smallest] < p[i]
+    # top-1 token always survives even at tiny p
+    assert got[0].max() > S.NEG_INF
+
+
+def test_repetition_penalty_matches_numpy_oracle():
+    rng = np.random.default_rng(2)
+    logits = rng.standard_normal((4, 19)).astype(np.float32)
+    presence = rng.random((4, 19)) < 0.4
+    pen = np.array([1.0, 1.2, 2.0, 0.8], np.float32)
+    got = np.asarray(S.apply_repetition_penalty(
+        jnp.asarray(logits), jnp.asarray(presence), jnp.asarray(pen)))
+    want = logits.copy()
+    for i in range(4):
+        for v in range(19):
+            if presence[i, v]:
+                want[i, v] = (logits[i, v] / pen[i] if logits[i, v] > 0
+                              else logits[i, v] * pen[i])
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_greedy_ignores_filters_and_matches_argmax():
+    """temperature == 0 returns the penalized argmax regardless of
+    top-k/top-p settings."""
+    rng = np.random.default_rng(3)
+    logits = rng.standard_normal((5, 23)).astype(np.float32)
+    n = len(logits)
+    zeros = jnp.zeros((n,), jnp.int32)
+    toks = np.asarray(S.sample_tokens(
+        jnp.asarray(logits), jnp.zeros((n, 23), bool), zeros, zeros,
+        jnp.zeros((n,), jnp.float32), jnp.full((n,), 1, jnp.int32),
+        jnp.full((n,), 0.01, jnp.float32), jnp.ones((n,), jnp.float32)))
+    np.testing.assert_array_equal(toks, logits.argmax(-1))
+
+
+def test_sample_key_is_position_and_seed_only():
+    """The same (seed, position, logits) row samples the same token in
+    any batch slot and batch size - the batch-invariance primitive."""
+    rng = np.random.default_rng(4)
+    row = rng.standard_normal((1, 101)).astype(np.float32)
+
+    def draw(batch_rows, idx):
+        n = len(batch_rows)
+        return int(np.asarray(S.sample_tokens(
+            jnp.asarray(np.stack(batch_rows)), jnp.zeros((n, 101), bool),
+            jnp.full((n,), 42, jnp.int32), jnp.full((n,), 7, jnp.int32),
+            jnp.full((n,), 0.9, jnp.float32), jnp.zeros((n,), jnp.int32),
+            jnp.ones((n,), jnp.float32), jnp.ones((n,), jnp.float32)))[idx])
+
+    other = [rng.standard_normal(101).astype(np.float32) for _ in range(7)]
+    solo = draw([row[0]], 0)
+    assert draw([row[0]] + other, 0) == solo
+    assert draw(other[:3] + [row[0]] + other[3:], 3) == solo
+
+
+def test_step_presence_accumulates_draft_inputs():
+    """Position i's context = base | inputs 1..i (carry token excluded:
+    it is already part of the base presence)."""
+    base = np.zeros((1, 10), bool)
+    base[0, 9] = True
+    tokens = np.array([[3, 5, 5, 2]], np.int32)
+    got = np.asarray(S.step_presence(jnp.asarray(base),
+                                     jnp.asarray(tokens)))
+    want = np.zeros((4, 10), bool)
+    for i in range(4):
+        want[i, 9] = True
+        for j in range(1, i + 1):
+            want[i, tokens[0, j]] = True
+    np.testing.assert_array_equal(got[0], want)
+
+
+# ------------------------------------------------------- spec proposer
+def test_propose_draft_prompt_lookup():
+    # trailing 3-gram (7, 8, 9) re-occurs: propose what followed it
+    toks = [1, 7, 8, 9, 4, 5, 6, 7, 8, 9]
+    assert propose_draft(toks, 3) == [4, 5, 6]
+    # most recent occurrence wins
+    toks = [7, 8, 1, 5, 7, 8, 2, 6, 7, 8]
+    assert propose_draft(toks, 2) == [2, 6]
+    # constant run: periodic extension proposes the run continuing for
+    # the full k, not just the tokens left in history
+    assert propose_draft([3, 3, 3], 4) == [3, 3, 3, 3]
+    assert propose_draft([3, 3, 3, 3, 3], 4) == [3, 3, 3, 3]
+    # 2-cycle: periodic extension unrolls the cycle
+    assert propose_draft([4, 9, 4, 9], 4) == [4, 9, 4, 9]
+    # no history match
+    assert propose_draft([1, 2, 3, 4], 4) == []
+    # k = 0 / degenerate history
+    assert propose_draft([1, 2, 1, 2], 0) == []
+    assert propose_draft([], 4) == []
+    assert propose_draft([5], 4) == []

@@ -1,0 +1,219 @@
+"""Property-based tests for the Scheduler + PagedKVCache layer.
+
+Extends ``test_paged_cache_prop.py`` one layer up: instead of driving
+the block pool directly, random traces of *engine-shaped* events -
+admit / chunked-prefill / pause / preempt / speculative-accept (with
+rollback) / retire - flow through the real ``Scheduler`` against a real
+``PagedKVCache``, mirroring exactly the bookkeeping ``ServingEngine``
+performs around each jitted call.  After every event:
+
+  * ``check_invariants`` holds (refcount conservation, page-set
+    partition, hash-table bijection, LRU cap);
+  * no slot is double-used: the scheduler's running set and the cache's
+    owned/free slot sets stay mutually consistent;
+  * scheduler progress counters and cache ``seq_lens`` agree (a
+    decoding slot's KV is always exactly one token behind its stream -
+    the carry token's KV lands during the next verify step).
+
+Pure host logic, no jax.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional 'hypothesis' dep")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serving import PagedKVCache, Request, Scheduler  # noqa: E402
+
+PAGE = 4
+NUM_PAGES = 24
+MAX_BATCH = 4
+PAGES_PER_SEQ = 6
+EOS = 7
+
+# Prompts drawn as prefixes of a fixed base plus a random tail make
+# prefix-cache hits (shared pages at admission) common in the trace.
+BASE = list(range(100, 100 + PAGES_PER_SEQ * PAGE))
+
+op_strategy = st.lists(
+    st.tuples(st.integers(0, 5), st.integers(0, 10 ** 6)),
+    min_size=1, max_size=100)
+
+
+class _Driver:
+    """Mirrors ServingEngine's host-side use of Scheduler + cache."""
+
+    def __init__(self, spec_k: int, max_cached: int | None):
+        self.c = PagedKVCache(NUM_PAGES, PAGE, MAX_BATCH, PAGES_PER_SEQ,
+                              max_cached_pages=max_cached)
+        self.s = Scheduler(self.c)
+        self.spec_k = spec_k
+        self.rid = 0
+        self.finished: list = []
+
+    # ------------------------------------------------------------ checks
+    def check(self):
+        self.c.check_invariants()
+        # engine would apply these to the device pools; here: drain and
+        # sanity-check them
+        for src, dst in self.c.take_pending_copies():
+            assert 0 <= src < NUM_PAGES and 0 <= dst < NUM_PAGES
+            assert src != dst
+        running = set(self.s.running)
+        assert running == set(self.c._slot_pages), \
+            "scheduler running set != cache owned-slot set"
+        assert not running & set(self.c._free_slots), "slot double-use"
+        for slot, rst in self.s.running.items():
+            sl = int(self.c.seq_lens[slot])
+            if rst.decoding:
+                # stream = prompt + generated; the last generated token
+                # is the carry whose KV lands next verify step
+                assert sl == rst.target - 1, (slot, sl, rst.target)
+            else:
+                assert sl == rst.computed, (slot, sl, rst.computed)
+                assert rst.computed < rst.target
+
+    # --------------------------------------------------------------- ops
+    def submit(self, rng):
+        n_shared = int(rng.integers(0, len(BASE)))
+        tail = rng.integers(0, 50, int(rng.integers(1, 6))).tolist()
+        prompt = (BASE[:n_shared] + tail)[:PAGES_PER_SEQ * PAGE - 2]
+        self.s.submit(Request(rid=self.rid, prompt=prompt,
+                              max_new_tokens=int(rng.integers(1, 9)),
+                              eos_id=EOS))
+        self.rid += 1
+
+    def prefill(self, rng):
+        budget = [None, 3, 7, 16][int(rng.integers(0, 4))]
+        chunks, _ = self.s.schedule_prefill(budget)
+        for ck in chunks:
+            self.s.complete_chunk(ck)
+            self.c.register_pages(ck.slot, self.s.running[ck.slot].tokens())
+            if ck.is_final:
+                self._record(ck.slot, 1, rng)
+
+    def _capacity_pass(self):
+        for slot in self.s.decoding_slots():
+            if slot not in self.s.running:
+                continue
+            while not self.c.ensure_append_capacity(slot):
+                at_ceiling = self.c.pages_for(
+                    int(self.c.seq_lens[slot]) + 1) > PAGES_PER_SEQ
+                victim = slot if at_ceiling else self.s.choose_victim()
+                self.s.preempt(victim)
+                if victim == slot:
+                    break
+
+    def decode(self, rng):
+        """One speculative decode step: capacity, draft trim, optimistic
+        KV commit, random acceptance, rollback - the engine's
+        _run_decode without the device call."""
+        self._capacity_pass()
+        steps = self.s.schedule_decode(self.spec_k)
+        for step in steps:
+            slot = step.slot
+            if slot not in self.s.running:
+                continue
+            sl = int(self.c.seq_lens[slot])
+            c = len(step.tokens)
+            if c > 1 and not self.c.ensure_capacity(slot, sl + c):
+                c = max(1, min(
+                    c, self.c.writable_token_capacity(slot) - sl))
+            self.c.mark_prefilled(slot, sl + c)
+            a = int(rng.integers(1, c + 1))      # accepted prefix length
+            used = self._record(slot, a, rng)
+            if used is None:
+                continue                          # retired: slot is gone
+            if used < c:
+                self.c.rollback(slot, sl + used)
+            self.c.register_pages(slot, self.s.running[slot].tokens())
+
+    def _record(self, slot, n, rng):
+        """Record up to n sampled tokens; returns tokens consumed, or
+        None when the request finished (slot retired)."""
+        used = 0
+        for _ in range(n):
+            tok = int(rng.integers(0, 12))        # EOS sometimes
+            used += 1
+            status = self.s.record_token(slot, tok)
+            if status != "running":
+                self.finished.append(self.s.retire(slot, status))
+                return None
+        return used
+
+    def preempt(self, rng):
+        if not self.s.running:
+            return
+        slots = sorted(self.s.running)
+        self.s.preempt(slots[int(rng.integers(len(slots)))])
+
+    def pause_probe(self, rng):
+        """Pool-pressure pause: schedule prefill with a huge budget while
+        pages are scarce - paused sequences must keep slot + pages and
+        stay consistent (the scheduler returns no chunk for them)."""
+        chunks, _ = self.s.schedule_prefill(None)
+        scheduled = {ck.slot for ck in chunks}
+        for slot in self.s.prefilling_slots():
+            if slot not in scheduled:
+                # paused in place: owns its pages, no progress made
+                assert slot in self.c._slot_pages
+        for ck in chunks:
+            self.s.complete_chunk(ck)
+            self.c.register_pages(ck.slot, self.s.running[ck.slot].tokens())
+            if ck.is_final:
+                self._record(ck.slot, 1, rng)
+
+
+@settings(max_examples=50, deadline=None)
+@given(ops=op_strategy, spec_k=st.integers(0, 4),
+       max_cached=st.sampled_from([None, 0, 4, 12]))
+def test_scheduler_random_trace(ops, spec_k, max_cached):
+    d = _Driver(spec_k, max_cached)
+    dispatch = [d.submit, d.prefill, d.decode, d.decode, d.preempt,
+                d.pause_probe]
+    for code, seed in ops:
+        dispatch[code](np.random.default_rng(seed))
+        d.check()
+    # teardown: retire everything; nothing leaks
+    for slot in sorted(d.s.running):
+        d.s.retire(slot, "length")
+    d.c.check_invariants()
+    assert d.c.available_page_count == NUM_PAGES
+    assert d.c.free_slot_count == MAX_BATCH
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), spec_k=st.integers(1, 4))
+def test_rollback_conserves_pages_and_refcounts(seed, spec_k):
+    """Focused rollback churn: speculative commits that mostly reject
+    must never leak a page or corrupt a refcount, including when the
+    rolled-back tail pages are shared with a forked sibling."""
+    rng = np.random.default_rng(seed)
+    c = PagedKVCache(NUM_PAGES, PAGE, MAX_BATCH, PAGES_PER_SEQ)
+    slot = c.alloc_slot(int(rng.integers(1, 9)))
+    forks: list[int] = []
+    for _ in range(40):
+        sl = int(c.seq_lens[slot])
+        want = sl + spec_k + 1
+        if not c.ensure_capacity(slot, want):
+            want = max(sl + 1, c.writable_token_capacity(slot))
+            if want <= sl or not c.ensure_capacity(slot, want):
+                break
+        c.mark_prefilled(slot, want)
+        keep = sl + int(rng.integers(1, want - sl + 1))
+        if keep < want:
+            c.rollback(slot, keep)
+        c.check_invariants()
+        assert int(c.seq_lens[slot]) == keep
+        if rng.random() < 0.2 and c.free_slot_count:
+            forks.append(c.fork(slot))
+            c.check_invariants()
+        elif forks and rng.random() < 0.3:
+            c.free_slot(forks.pop())
+            c.check_invariants()
+    for f in forks:
+        c.free_slot(f)
+    c.free_slot(slot)
+    c.check_invariants()
+    assert c.available_page_count == NUM_PAGES

@@ -741,6 +741,49 @@ def test_engine_prefix_reuse_shared_system_prompt(qwen_smoke):
         assert f.tokens == _golden_greedy(model, params, reqs[f.rid], 48)
 
 
+def test_cached_lru_cap_bounds_dead_prefix_pages():
+    """Regression (ROADMAP follow-up): long-running multi-tenant churn
+    used to park every retired prefix in the cached LRU until the
+    entire free pool was dead single-use prefixes - each later
+    allocation then paid an eviction + hash retraction instead of a
+    free-list pop.  With ``max_cached_pages`` the LRU is bounded and
+    ages out oldest-first, so strictly-free pages stay available."""
+    def churn(cache, tenants):
+        for i in range(tenants):
+            toks = [1000 * i + t for t in range(13)]     # distinct prefix
+            slot = cache.alloc_slot(len(toks))           # 4 pages
+            cache.register_pages(slot, toks)             # 3 full pages
+            cache.free_slot(slot)
+            cache.check_invariants()
+
+    uncapped = PagedKVCache(16, 4, 2, 4)
+    churn(uncapped, 8)
+    assert uncapped.free_page_count == 16 - len(uncapped._cached)
+    assert len(uncapped._cached) > 8, "churn never built up dead prefixes"
+
+    capped = PagedKVCache(16, 4, 2, 4, max_cached_pages=4)
+    churn(capped, 8)
+    assert len(capped._cached) <= 4
+    assert capped.free_page_count >= 12, \
+        "dead prefix pages still crowd out the free pool"
+    # aging is LRU: the most recent tenant's prefix is still claimable,
+    # the oldest ones are gone
+    last = [1000 * 7 + t for t in range(13)]
+    assert len(capped.lookup_prefix(last)) > 0
+    assert len(capped.lookup_prefix([0, 1, 2, 3, 4, 5])) == 0
+    capped.check_invariants()
+
+
+def test_engine_cached_frac_plumbs_to_cache(qwen_smoke):
+    cfg, model, params = qwen_smoke
+    engine = ServingEngine(model, params, max_batch=2, page_size=4,
+                           num_pages=12, max_seq=32, cached_frac=0.25)
+    assert engine.cache.max_cached_pages == 3
+    engine = ServingEngine(model, params, max_batch=2, page_size=4,
+                           num_pages=12, max_seq=32, cached_frac=1.0)
+    assert engine.cache.max_cached_pages is None
+
+
 def test_paged_cache_fork_cow():
     """fork shares every page by refcount; the first append into the
     shared tail page copies it (pending device copy) and leaves the full
