@@ -25,18 +25,30 @@ Workloads:
 Both paths run the identical model + greedy decode; tok/s counts useful
 generated tokens.
 
+``--tp N`` switches to the tensor-parallel scoreboard: the same paged
+workload runs single-shard and with the KV pools KV-head-sharded over an
+N-way "model" mesh axis (the cascaded ACC merge), asserting the token
+streams are identical and reporting per-shard pool bytes plus the
+(m, l, o~) triplet collective volume.  On CPU the mesh is simulated:
+jax must see N devices before it initializes, so this module imports
+jax only after argument parsing and sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` itself.
+
   PYTHONPATH=src python benchmarks/serving.py [--arch qwen3-1.7b] [--n 16]
   PYTHONPATH=src python benchmarks/serving.py --workload shared-prefix
   PYTHONPATH=src python benchmarks/serving.py --smoke       # CI gate
+  PYTHONPATH=src python benchmarks/serving.py --tp 2 --smoke   # TP gate
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
+
+# jax-free import (serve.py defers its own jax import past argparse):
+# shares the pre-jax-init simulated-device bootstrap for --tp runs.
+from repro.launch.serve import ensure_host_devices
 
 
 def make_workload(n, prompt_len, vocab, seed=0):
@@ -66,6 +78,7 @@ def make_shared_prefix_workload(n, sys_len, uniq_len, long_len, vocab,
 def _dense_jits(model):
     """One jit wrapper pair per model, so the timed run reuses the
     warmup run's compile cache (mirrors the engine's shared jits)."""
+    import jax
     jits = getattr(model, "_dense_bench_jits", None)
     if jits is None:
         jits = (jax.jit(model.prefill), jax.jit(model.decode_step))
@@ -79,6 +92,8 @@ def run_dense(model, params, prompts, budgets, batch, max_seq):
     or chunk them); prompts that don't fit the max_seq reservation are
     skipped outright - the dense baseline's equivalent of the paged
     engine's reason="rejected"."""
+    import jax
+    import jax.numpy as jnp
     prefill, decode = _dense_jits(model)
     keep = [i for i in range(len(prompts)) if len(prompts[i]) < max_seq]
     if len(keep) < len(prompts):
@@ -113,10 +128,11 @@ def run_dense(model, params, prompts, budgets, batch, max_seq):
 
 
 def run_paged(model, params, prompts, budgets, batch, max_seq, page_size,
-              prefill_budget=None, spec_k=0, sampling=None):
+              prefill_budget=None, spec_k=0, sampling=None, mesh=None):
     """Continuous batching with chunked prefill + prefix caching, and
-    optionally self-speculative decode (``spec_k`` drafts per step) and
-    per-request stochastic sampling.
+    optionally self-speculative decode (``spec_k`` drafts per step),
+    per-request stochastic sampling, and tensor parallelism (``mesh``
+    KV-head-shards the paged pools over its "model" axis).
 
     Drives the engine step by step (same policy as ``engine.run``) so it
     can count decode stalls: steps where at least one slot was decoding
@@ -128,7 +144,8 @@ def run_paged(model, params, prompts, budgets, batch, max_seq, page_size,
                                ServingEngine)
     engine = ServingEngine(model, params, max_batch=batch,
                            page_size=page_size, max_seq=max_seq,
-                           prefill_budget=prefill_budget, spec_k=spec_k)
+                           prefill_budget=prefill_budget, spec_k=spec_k,
+                           mesh=mesh)
     def samp(i):
         if sampling is None:
             return None
@@ -174,7 +191,8 @@ def run_paged(model, params, prompts, budgets, batch, max_seq, page_size,
     dt = time.perf_counter() - t0
     engine.cache.check_invariants()
     assert len(finished) == len(prompts)
-    return engine.stats["generated_tokens"], dt, engine.stats, stalls
+    return (engine.stats["generated_tokens"], dt, engine.stats, stalls,
+            finished, engine)
 
 
 def main():
@@ -210,12 +228,23 @@ def main():
     ap.add_argument("--decode-len", type=int, default=0,
                     help="fixed per-request decode budget (0 = the "
                          "workload's randomized 4..16/4..24 budgets)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel scoreboard: run the paged "
+                         "workload single-shard AND with the KV pools "
+                         "head-sharded over an N-way 'model' mesh axis, "
+                         "asserting token-identical output (simulated "
+                         "CPU mesh via XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI gate: reduced shared-prefix run asserting "
                          "zero decode stalls + prefix-cache reuse (and, "
                          "with --spec-k, accept-rate > 0 and "
-                         "tokens/step >= 1)")
+                         "tokens/step >= 1; with --tp, token-identical "
+                         "TP output and per-shard pool bytes / tp)")
     args = ap.parse_args()
+    if args.tp < 1:
+        ap.error("--tp must be >= 1")
+    ensure_host_devices(args.tp)
     if args.smoke:
         args.workload = "shared-prefix"
         args.full = False
@@ -236,6 +265,8 @@ def main():
             # stochastic while making prompt-lookup hits realistic -
             # and exercises the temperature+top-k+categorical pipeline.
             args.top_k = 4
+
+    import jax
 
     from repro.configs import get_config
     from repro.models.model import build_model
@@ -259,6 +290,9 @@ def main():
         sampling = {"temperature": args.temperature, "top_k": args.top_k,
                     "top_p": args.top_p, "seed": args.seed}
 
+    if args.tp > 1:
+        return _run_tp(model, params, prompts, budgets, sampling, args)
+
     # Warm both paths with the identical workload so every jit shape
     # (prefill group sizes, resumed lengths) compiles outside the timed
     # region; engines share one compile cache via the model.
@@ -268,7 +302,7 @@ def main():
 
     d_tok, d_dt = run_dense(model, params, prompts, budgets, args.batch,
                             args.max_seq)
-    p_tok, p_dt, stats, stalls = run_paged(
+    p_tok, p_dt, stats, stalls, _, _ = run_paged(
         model, params, prompts, budgets, args.batch, args.max_seq,
         args.page_size, args.prefill_budget, args.spec_k, sampling)
     d_tps = d_tok / d_dt
@@ -321,6 +355,57 @@ def main():
         print("smoke:", "OK" if ok else "FAIL")
         return ok
     return p_tps >= d_tps
+
+
+def _run_tp(model, params, prompts, budgets, sampling, args):
+    """Tensor-parallel scoreboard: single-shard vs tp-sharded paged
+    serving on the identical workload.  The TP run must be *token-
+    identical* (the ACC merge with the neutral triplet is an fp identity
+    per head), with per-shard pool bytes cut by tp and only the tiny
+    (m, l, o~) triplets crossing the shard axis."""
+    from repro.launch.mesh import make_tp_mesh
+    mesh = make_tp_mesh(args.tp)
+    common = (model, params, prompts, budgets, args.batch, args.max_seq,
+              args.page_size, args.prefill_budget, args.spec_k, sampling)
+    run_paged(*common)                       # warm single-shard jits
+    run_paged(*common, mesh=mesh)            # warm TP jits
+    s_tok, s_dt, s_stats, s_stalls, s_fin, s_eng = run_paged(*common)
+    p_tok, p_dt, stats, stalls, p_fin, p_eng = run_paged(*common,
+                                                         mesh=mesh)
+    s_out = {f.rid: f.tokens for f in s_fin}
+    p_out = {f.rid: f.tokens for f in p_fin}
+    identical = s_out == p_out
+    mism = sum(1 for r in s_out if p_out.get(r) != s_out[r])
+    print(f"single shard:  {s_tok} tok in {s_dt:.2f}s -> "
+          f"{s_tok / s_dt:.1f} tok/s "
+          f"(pool {s_eng.pool_bytes_per_shard()} B/shard)")
+    print(f"tp={args.tp} sharded: {p_tok} tok in {p_dt:.2f}s -> "
+          f"{p_tok / p_dt:.1f} tok/s "
+          f"(pool {p_eng.pool_bytes_per_shard()} B/shard, "
+          f"{stats['steps']} steps)")
+    print(f"token parity:  {'IDENTICAL' if identical else 'MISMATCH'} "
+          f"({len(s_out) - mism}/{len(s_out)} requests match)")
+    print(f"ACC-merge triplet traffic: {stats['triplet_bytes']} B "
+          f"({stats['triplet_bytes'] / max(p_tok, 1):.0f} B/token) vs "
+          f"pool {p_eng.pool_bytes()} B")
+    ok = identical
+    if s_eng.pool_bytes_per_shard() != \
+            p_eng.pool_bytes_per_shard() * args.tp:
+        print(f"TP FAIL: per-shard pool not cut by tp "
+              f"({s_eng.pool_bytes_per_shard()} -> "
+              f"{p_eng.pool_bytes_per_shard()})")
+        ok = False
+    if stats["triplet_bytes"] == 0:
+        print("TP FAIL: no triplet traffic accounted")
+        ok = False
+    if not identical:
+        print("TP FAIL: sharded output diverged from single shard")
+    if args.smoke:
+        if stalls != 0:
+            print("SMOKE FAIL: decode stalled during chunked prefill")
+            ok = False
+        print("smoke:", "OK" if ok else "FAIL")
+    return ok
 
 
 if __name__ == "__main__":

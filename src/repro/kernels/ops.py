@@ -248,21 +248,28 @@ def _decode_jnp_grouped(qg, k_cache, v_cache, kv_len, *, scale, use_hfa,
     return out[:, :, :, 0, :]
 
 
-def _prefill_jnp_grouped(qg, k_cache, v_cache, q_pos, kv_lens, *, scale,
+def _prefill_jnp_partial(qg, k_cache, v_cache, q_pos, kv_lens, *, scale,
                          use_hfa, acc_dtype):
-    """Grouped-GQA chunked-prefill attention over a gathered dense view.
+    """Grouped-GQA chunked-prefill *partial* attention (block-FAU form).
 
-    The chunk's queries attend causally against everything already
-    written for their sequence (shared prefix pages, earlier chunks,
-    and the chunk itself).  Full-softmax per query row in f32 - the
-    result is independent of how the prompt was cut into chunks, which
-    is what makes chunked prefill token-exact.
+    Same math as the Pallas kernels' triplet contract: per query row,
+    ``m`` is the running max, ``p = exp(s - m)`` (or the FIX16 PWL rail
+    under ``use_hfa``), ``l = sum(p)``, ``o~ = p @ V`` unnormalized.
+    Returning the triplet instead of the normalized output is what lets
+    a tensor-parallel shard contribute its local heads/pages to the
+    log-domain ACC merge (Eq. 16) - and the single-shard path finalizes
+    the *same* triplet, so sharded and unsharded decode are bit-equal
+    per head.
+
+    Fully-masked rows (free slots / padding) come back as the merge's
+    *neutral* triplet (o~=0, m=NEG_INF, l=0): their pages may hold junk
+    (donated buffers), and even with p == 0 the PV einsum turns NaN/Inf
+    into 0 * NaN = NaN, so dead rows are forced to zero explicitly.
 
     qg: (B, Hkv, G, L, d); k_cache/v_cache: (B, S, Hkv, d);
     q_pos: (B, L) absolute position per chunk row; kv_lens: (B,) valid
-    KV length (chunk rows at q_pos >= kv_lens are padding - their
-    output is garbage the caller ignores).
-    Returns (B, Hkv, G, L, d) float32.
+    KV length.
+    Returns (o~ (B, Hkv, G, L, d) f32, m (B, Hkv, G, L), l (B, Hkv, G, L)).
     """
     b, _, _, _, d = qg.shape
     s_len = k_cache.shape[1]
@@ -272,28 +279,131 @@ def _prefill_jnp_grouped(qg, k_cache, v_cache, q_pos, kv_lens, *, scale,
     kv_ids = jnp.arange(s_len, dtype=jnp.int32)
     mask = (kv_ids[None, None, :] <= q_pos[:, :, None]) & \
         (kv_ids[None, None, :] < kv_lens.astype(jnp.int32)[:, None, None])
-    s = jnp.where(mask[:, None, None, :, :], s, -1e30)
+    s = jnp.where(mask[:, None, None, :, :], s, decode_k.NEG_INF)
     live = jnp.any(mask, axis=-1)                              # (B, L)
+    m = jnp.max(s, axis=-1)
     if use_hfa:
         from repro.kernels import bitmath
-        m = jnp.max(s, axis=-1, keepdims=True)
-        p = bitmath.exp2_hfa_rail(bitmath.quant_rail(s - m))
-        p = jnp.where(mask[:, None, None, :, :], p, 0.0)
-        l = jnp.sum(p, axis=-1)
-        o = jnp.einsum("bhgls,bshd->bhgld", p.astype(acc_dtype), v_cache,
-                       preferred_element_type=jnp.float32)
-        out = decode_k.finalize_decode(o, l, use_hfa=True)
+        p = bitmath.exp2_hfa_rail(bitmath.quant_rail(s - m[..., None]))
     else:
-        p = jax.nn.softmax(s, axis=-1)
-        p = jnp.where(live[:, None, None, :, None], p, 0.0)
-        out = jnp.einsum("bhgls,bshd->bhgld", p.astype(acc_dtype), v_cache,
-                         preferred_element_type=jnp.float32)
-    # Fully-masked rows (free slots / padding): their pages may hold
-    # junk (donated buffers), and even with p == 0 the PV einsum turns
-    # NaN/Inf into 0 * NaN = NaN - force the row's output to zero (this
-    # also covers the l == 0 row under use_hfa, which would otherwise
-    # reach finalize_decode's divide with garbage o).
-    return jnp.where(live[:, None, None, :, None], out, 0.0)
+        p = jnp.exp(s - m[..., None])
+    # Masked positions: exp underflows to 0 for live rows, but a dead
+    # row has s == m == NEG_INF, so exp(0) == 1 - zero them explicitly.
+    p = jnp.where(mask[:, None, None, :, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhgls,bshd->bhgld", p.astype(acc_dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    o = jnp.where(live[:, None, None, :, None], o, 0.0)
+    return o, m, l
+
+
+def _prefill_jnp_grouped(qg, k_cache, v_cache, q_pos, kv_lens, *, scale,
+                         use_hfa, acc_dtype):
+    """Grouped-GQA chunked-prefill attention over a gathered dense view:
+    the partial block-FAU triplet (:func:`_prefill_jnp_partial`)
+    finalized with LogDiv / float divide.  Full-width softmax per query
+    row in f32 - the result is independent of how the prompt was cut
+    into chunks, which is what makes chunked prefill token-exact.
+
+    Returns (B, Hkv, G, L, d) float32.
+    """
+    o, m, l = _prefill_jnp_partial(qg, k_cache, v_cache, q_pos, kv_lens,
+                                   scale=scale, use_hfa=use_hfa,
+                                   acc_dtype=acc_dtype)
+    return decode_k.finalize_decode(o, l, use_hfa=use_hfa)
+
+
+# ---- paged attention: partial triplets ----------------------------------
+# Each function returns the block-FAU triplet (o~, m, l) over whatever KV
+# heads the pools it was handed contain.  The public ops below finalize
+# the triplet directly; the tensor-parallel shard_map path
+# (:mod:`repro.parallel.collectives`) calls the same partials on each
+# shard's local heads and merges the gathered triplets with the
+# log-domain ACC rule instead - so sharded and unsharded serving share
+# one set of numerics.
+
+def paged_decode_partials(
+    qg: jax.Array,          # (B, Hkv, G, d) grouped queries
+    k_pages: jax.Array,     # (P, page, Hkv, d)
+    v_pages: jax.Array,     # (P, page, Hkv, d)
+    page_table: jax.Array,  # (B, pages_per_seq) int32
+    kv_lens: jax.Array,     # (B,) int32; 0 marks a free slot
+    *,
+    impl: str = "fa2",
+    scale: float | None = None,
+    force_pallas: bool = False,
+):
+    """Paged decode partial triplet: (o~ (B,Hkv,G,d), m/l (B,Hkv,G))."""
+    b = qg.shape[0]
+    use_hfa = impl.startswith("hfa")
+    if force_pallas or (_on_tpu() and impl in ("fa2_pallas", "hfa_pallas")):
+        return paged_k.paged_decode_partial_pallas(
+            qg, k_pages, v_pages, page_table, kv_lens, scale=scale,
+            use_hfa=use_hfa, interpret=not _on_tpu())
+    k_cache = paged_k.gather_pages(k_pages, page_table)
+    v_cache = paged_k.gather_pages(v_pages, page_table)
+    kvl = jnp.broadcast_to(jnp.asarray(kv_lens, jnp.int32), (b,))
+    o, m, l = _prefill_jnp_partial(qg[:, :, :, None, :], k_cache, v_cache,
+                                   kvl[:, None] - 1, kvl, scale=scale,
+                                   use_hfa=use_hfa, acc_dtype=qg.dtype)
+    return o[:, :, :, 0, :], m[..., 0], l[..., 0]
+
+
+def paged_prefill_partials(
+    qg: jax.Array,          # (B, Hkv, G, L, d) grouped chunk queries
+    k_pages: jax.Array,     # (P, page, Hkv, d)
+    v_pages: jax.Array,     # (P, page, Hkv, d)
+    page_table: jax.Array,  # (B, pages_per_seq) int32
+    start_pos: jax.Array,   # (B,) int32 chunk start position
+    kv_lens: jax.Array,     # (B,) int32 valid KV length (start + chunk)
+    *,
+    impl: str = "fa2",
+    scale: float | None = None,
+    force_pallas: bool = False,
+):
+    """Paged chunked-prefill partial triplet: shapes (B,Hkv,G,L,[d])."""
+    use_hfa = impl.startswith("hfa")
+    if force_pallas or (_on_tpu() and impl in ("fa2_pallas", "hfa_pallas")):
+        return paged_pf_k.paged_prefill_partial_pallas(
+            qg, k_pages, v_pages, page_table, start_pos, kv_lens,
+            scale=scale, use_hfa=use_hfa, interpret=not _on_tpu())
+    k_cache = paged_k.gather_pages(k_pages, page_table)
+    v_cache = paged_k.gather_pages(v_pages, page_table)
+    l = qg.shape[3]
+    q_pos = start_pos.astype(jnp.int32)[:, None] + \
+        jnp.arange(l, dtype=jnp.int32)[None]
+    return _prefill_jnp_partial(qg, k_cache, v_cache, q_pos, kv_lens,
+                                scale=scale, use_hfa=use_hfa,
+                                acc_dtype=qg.dtype)
+
+
+def paged_verify_partials(
+    qg: jax.Array,          # (B, Hkv, G, K, d) grouped verify queries
+    k_pages: jax.Array,     # (P, page, Hkv, d)
+    v_pages: jax.Array,     # (P, page, Hkv, d)
+    page_table: jax.Array,  # (B, pages_per_seq) int32
+    seq_lens: jax.Array,    # (B,) int32 pre-step KV length; 0 = free slot
+    chunk_lens: jax.Array,  # (B,) int32 real input count this step
+    *,
+    impl: str = "fa2",
+    scale: float | None = None,
+    force_pallas: bool = False,
+):
+    """Paged speculative-verify partial triplet: shapes (B,Hkv,G,K,[d])."""
+    use_hfa = impl.startswith("hfa")
+    if force_pallas or (_on_tpu() and impl in ("fa2_pallas", "hfa_pallas")):
+        return paged_v_k.paged_verify_partial_pallas(
+            qg, k_pages, v_pages, page_table, seq_lens, chunk_lens,
+            scale=scale, use_hfa=use_hfa, interpret=not _on_tpu())
+    k_cache = paged_k.gather_pages(k_pages, page_table)
+    v_cache = paged_k.gather_pages(v_pages, page_table)
+    kw = qg.shape[3]
+    sl = seq_lens.astype(jnp.int32)
+    q_pos = sl[:, None] + jnp.arange(kw, dtype=jnp.int32)[None]
+    kv_lens = sl + chunk_lens.astype(jnp.int32)
+    return _prefill_jnp_partial(qg, k_cache, v_cache, q_pos, kv_lens,
+                                scale=scale, use_hfa=use_hfa,
+                                acc_dtype=qg.dtype)
 
 
 def paged_prefill_attention(
@@ -326,19 +436,10 @@ def paged_prefill_attention(
     kv_lens = (start_pos + chunk_lens).astype(jnp.int32)
     # (B, L, H, d) -> (B, Hkv, G, L, d): heads are kv-major (GQA repeat).
     qg = jnp.swapaxes(q, 1, 2).reshape(b, hkv, g, l, d)
-    if force_pallas or (_on_tpu() and impl in ("fa2_pallas", "hfa_pallas")):
-        o, m, ell = paged_pf_k.paged_prefill_partial_pallas(
-            qg, k_pages, v_pages, page_table, start_pos, kv_lens,
-            scale=scale, use_hfa=use_hfa, interpret=not _on_tpu())
-        out = decode_k.finalize_decode(o, ell, use_hfa=use_hfa)
-    else:
-        k_cache = paged_k.gather_pages(k_pages, page_table)
-        v_cache = paged_k.gather_pages(v_pages, page_table)
-        q_pos = start_pos.astype(jnp.int32)[:, None] + \
-            jnp.arange(l, dtype=jnp.int32)[None]
-        out = _prefill_jnp_grouped(qg, k_cache, v_cache, q_pos, kv_lens,
-                                   scale=scale, use_hfa=use_hfa,
-                                   acc_dtype=q.dtype)
+    o, m, ell = paged_prefill_partials(
+        qg, k_pages, v_pages, page_table, start_pos, kv_lens, impl=impl,
+        scale=scale, force_pallas=force_pallas)
+    out = decode_k.finalize_decode(o, ell, use_hfa=use_hfa)
     # (B, Hkv, G, L, d) -> (B, L, H, d)
     return jnp.swapaxes(out.reshape(b, h, l, d), 1, 2).astype(q.dtype)
 
@@ -370,16 +471,10 @@ def paged_decode_attention(
     g = h // hkv
     use_hfa = impl.startswith("hfa")
     qg = q.reshape(b, h, d).reshape(b, hkv, g, d)
-    if force_pallas or (_on_tpu() and impl in ("fa2_pallas", "hfa_pallas")):
-        o, m, l = paged_k.paged_decode_partial_pallas(
-            qg, k_pages, v_pages, page_table, kv_lens, scale=scale,
-            use_hfa=use_hfa, interpret=not _on_tpu())
-        out = decode_k.finalize_decode(o, l, use_hfa=use_hfa)
-        return out.reshape(b, 1, h, d).astype(q.dtype)
-    k_cache = paged_k.gather_pages(k_pages, page_table)
-    v_cache = paged_k.gather_pages(v_pages, page_table)
-    out = _decode_jnp_grouped(qg, k_cache, v_cache, kv_lens, scale=scale,
-                              use_hfa=use_hfa, acc_dtype=q.dtype)
+    o, m, l = paged_decode_partials(qg, k_pages, v_pages, page_table,
+                                    kv_lens, impl=impl, scale=scale,
+                                    force_pallas=force_pallas)
+    out = decode_k.finalize_decode(o, l, use_hfa=use_hfa)
     return out.reshape(b, 1, h, d).astype(q.dtype)
 
 
@@ -414,19 +509,9 @@ def paged_verify_attention(
     g = h // hkv
     use_hfa = impl.startswith("hfa")
     qg = jnp.swapaxes(q, 1, 2).reshape(b, hkv, g, kw, d)
-    if force_pallas or (_on_tpu() and impl in ("fa2_pallas", "hfa_pallas")):
-        o, m, l = paged_v_k.paged_verify_partial_pallas(
-            qg, k_pages, v_pages, page_table, seq_lens, chunk_lens,
-            scale=scale, use_hfa=use_hfa, interpret=not _on_tpu())
-        out = decode_k.finalize_decode(o, l, use_hfa=use_hfa)
-    else:
-        k_cache = paged_k.gather_pages(k_pages, page_table)
-        v_cache = paged_k.gather_pages(v_pages, page_table)
-        sl = seq_lens.astype(jnp.int32)
-        q_pos = sl[:, None] + jnp.arange(kw, dtype=jnp.int32)[None]
-        kv_lens = sl + chunk_lens.astype(jnp.int32)
-        out = _prefill_jnp_grouped(qg, k_cache, v_cache, q_pos, kv_lens,
-                                   scale=scale, use_hfa=use_hfa,
-                                   acc_dtype=q.dtype)
+    o, m, l = paged_verify_partials(
+        qg, k_pages, v_pages, page_table, seq_lens, chunk_lens, impl=impl,
+        scale=scale, force_pallas=force_pallas)
+    out = decode_k.finalize_decode(o, l, use_hfa=use_hfa)
     # (B, Hkv, G, K, d) -> (B, K, H, d)
     return jnp.swapaxes(out.reshape(b, h, kw, d), 1, 2).astype(q.dtype)

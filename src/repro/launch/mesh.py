@@ -25,3 +25,19 @@ def make_test_mesh(devices: int | None = None):
     n = devices or len(jax.devices())
     model = 2 if n % 2 == 0 else 1
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_tp_mesh(tp: int):
+    """Tensor-parallel serving mesh: ("data"=1, "model"=tp) over the
+    first ``tp`` devices.  On CPU, simulate devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* jax
+    initializes (the serve/benchmark entry points set it for you when
+    ``--tp`` is passed)."""
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = jax.devices()
+    if len(devs) < tp:
+        raise RuntimeError(
+            f"tp={tp} needs {tp} devices, found {len(devs)}; on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={tp}")
+    return Mesh(np.asarray(devs[:tp]).reshape(1, tp), ("data", "model"))

@@ -7,13 +7,37 @@ fixed-batch greedy loop over a contiguous cache.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
       --batch 2 --steps 4
+
+``--tp N`` serves tensor-parallel: the paged KV pools are KV-head-sharded
+over a ("data", "model") mesh and decode/prefill/verify attention runs
+the cascaded ACC merge (only (m, l, o~) triplets cross shards).  On CPU
+the mesh is simulated - jax must see N devices *before* it initializes,
+which this entry point arranges by setting
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (hence jax is
+imported only after argument parsing).
 """
 import argparse
+import os
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
+
+
+def ensure_host_devices(tp: int) -> None:
+    """Force ``tp`` simulated host devices for --tp runs.
+
+    Must run before jax initializes, which is why this module (and
+    benchmarks/serving.py, which imports this helper) defers ``import
+    jax`` past argument parsing.  A pre-existing user-set device-count
+    flag is respected.
+    """
+    import sys
+    if tp <= 1 or "jax" in sys.modules:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={tp}").strip()
 
 
 def main():
@@ -46,9 +70,19 @@ def main():
     ap.add_argument("--repetition-penalty", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0,
                     help="base sampling seed (request i uses seed + i)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel shards: KV-head-shard the paged "
+                         "pools over a 'model' mesh axis (CPU simulates "
+                         "the mesh via XLA_FLAGS="
+                         "--xla_force_host_platform_device_count)")
     ap.add_argument("--dense", action="store_true",
                     help="legacy fixed-batch loop over a contiguous cache")
     args = ap.parse_args()
+    if args.tp < 1:
+        ap.error("--tp must be >= 1")
+    ensure_host_devices(args.tp)
+
+    import jax
 
     from repro.configs import get_config
     from repro.data import DataPipeline
@@ -63,6 +97,8 @@ def main():
     batch = pipe.batch(0)
 
     if args.dense or not _paged_supported(cfg):
+        if args.tp > 1:
+            raise SystemExit("--tp requires the paged serving path")
         if not args.dense:
             print(f"note: {cfg.name} (family={cfg.family}, "
                   f"pos_emb={cfg.pos_emb}) is not paged-servable yet; "
@@ -72,6 +108,11 @@ def main():
 
     from repro.serving import Request, SamplingParams, ServingEngine
 
+    mesh = None
+    if args.tp > 1:
+        from repro.launch.mesh import make_tp_mesh
+        mesh = make_tp_mesh(args.tp)
+
     n_req = args.requests or 2 * args.batch
     prompts = np.concatenate(
         [pipe.batch(s)["tokens"] for s in range((n_req + args.batch - 1)
@@ -80,7 +121,7 @@ def main():
                            page_size=args.page_size, max_seq=args.max_seq,
                            prefill_budget=args.prefill_budget,
                            prefix_caching=not args.no_prefix_cache,
-                           spec_k=args.spec_k)
+                           spec_k=args.spec_k, mesh=mesh)
     # one new arrival per step: requests join and leave mid-flight
     arrivals = [(i, Request(rid=i, prompt=prompts[i].tolist(),
                             max_new_tokens=args.steps,
@@ -102,6 +143,10 @@ def main():
           f"{st['cached_prefill_tokens']} reused from prefix cache")
     print(f"generated {st['generated_tokens']} tokens in {dt:.2f} s "
           f"-> {st['generated_tokens']/dt:.1f} tok/s")
+    if args.tp > 1:
+        print(f"tp={args.tp}: pool {engine.pool_bytes()} B total, "
+              f"{engine.pool_bytes_per_shard()} B/shard; "
+              f"ACC-merge triplet traffic {st['triplet_bytes']} B")
     if args.spec_k:
         rate = st["draft_accepted"] / max(st["draft_tokens"], 1)
         tps = st["decode_tokens"] / max(st["decode_slot_steps"], 1)
@@ -123,6 +168,8 @@ def _paged_supported(cfg) -> bool:
 
 def _serve_dense(model, params, cfg, batch, args):
     """Legacy path: one fixed batch, dense contiguous KV cache."""
+    import jax
+    import jax.numpy as jnp
     prompts = jnp.asarray(batch["tokens"])
 
     enc_out = None

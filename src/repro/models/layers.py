@@ -238,12 +238,41 @@ def _paged_attention(p, q, k, v, cfg, cache, page_state, *, impl, causal,
     itself - the pages are storage only - and K/V land at positions
     0..S-1 of each row's page table; padded prefill tails are later
     masked by seq_lens, and are overwritten in place by later appends.
+
+    Tensor parallel (page_state carries a "mesh" with a "model" axis of
+    size > 1): the pools are KV-head-sharded over the mesh and every
+    branch routes through the shard_map cascaded-ACC-merge path
+    (:func:`repro.parallel.collectives.shardmap_paged_attention`) -
+    each shard scatters/attends its local heads and only the tiny
+    (m, l, o~) triplets cross the interconnect.
     """
     from repro.kernels import paged_decode as paged_k
     from repro.kernels import paged_prefill as paged_pf_k
     assert page_state is not None, "paged cache requires page_state"
     pt = page_state["page_table"]
-    if page_state.get("verify", False):
+    mesh = page_state.get("mesh")
+    if mesh is not None and mesh.shape.get("model", 1) > 1:
+        from repro.parallel import collectives
+        if page_state.get("verify", False):
+            mode, la, lb = ("verify", page_state["seq_lens"],
+                            page_state["chunk_lens"])
+        elif not page_state.get("prefill", False):
+            sl = page_state["seq_lens"]
+            mode, la, lb = "decode", sl, jnp.zeros_like(sl)
+        elif "start_pos" in page_state:
+            mode, la, lb = ("prefill", page_state["start_pos"],
+                            page_state["chunk_lens"])
+        else:
+            # Legacy whole-prompt fresh prefill: positions 0..L-1, all
+            # rows written in full (padded tails masked by seq_lens).
+            b_, l_ = q.shape[0], q.shape[1]
+            mode = "prefill"
+            la = jnp.zeros((b_,), jnp.int32)
+            lb = jnp.full((b_,), l_, jnp.int32)
+        out, kp, vp = collectives.shardmap_paged_attention(
+            q, k, v, cache["k_pages"], cache["v_pages"], pt, la, lb,
+            mesh=mesh, mode=mode, impl=_decode_impl(impl))
+    elif page_state.get("verify", False):
         # Speculative multi-token verify: scatter the K step tokens at
         # positions seq_lens[b].. (rows past chunk_lens are dropped, so
         # shared pages stay intact), then score all K positions in one

@@ -218,7 +218,7 @@ class LM:
 
 
     # ------------------------------------------------ paged decode (serving)
-    def init_paged_cache(self, num_pages: int, page_size: int):
+    def init_paged_cache(self, num_pages: int, page_size: int, mesh=None):
         """Shared block-pool KV caches for continuous-batching decode.
 
         Unlike :meth:`init_cache` there is no per-slot ``max_seq``
@@ -227,15 +227,34 @@ class LM:
         (the positions come from per-slot seq_lens, not a global
         cache_pos; learned/sinusoidal embeddings would need per-slot
         embed offsets).
+
+        With ``mesh`` (a "model" axis of size tp > 1) the pools are
+        placed KV-head-sharded over the mesh: every shard keeps the full
+        page layout but only ``n_kv_heads / tp`` heads, so per-shard
+        pool HBM shrinks by tp while the host page tables (and all the
+        refcount/COW/prefix-cache bookkeeping) stay replicated.
         """
         cfg = self.cfg
         assert cfg.pos_emb == "rope", (
             "paged serving requires rope positions, got %r" % cfg.pos_emb)
         cdt = _dtype(cfg.compute_dtype)
-        return T.stack_init_paged_cache(cfg, num_pages, page_size, cdt)
+        layers = T.stack_init_paged_cache(cfg, num_pages, page_size, cdt)
+        tp = 1 if mesh is None else int(mesh.shape.get("model", 1))
+        if tp > 1:
+            if cfg.n_kv_heads % tp or cfg.n_heads % tp:
+                raise ValueError(
+                    f"paged TP requires heads divisible by tp: "
+                    f"n_kv_heads={cfg.n_kv_heads}, n_heads={cfg.n_heads}, "
+                    f"tp={tp}")
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+            # Stacked pools are (groups, P, page, Hkv, dh): head axis 3.
+            sh = NamedSharding(mesh, P(None, None, None, "model", None))
+            layers = jax.device_put(layers, sh)
+        return layers
 
     def paged_prefill(self, params, layers, tokens, page_table,
-                      last_pos=None, start_pos=None):
+                      last_pos=None, start_pos=None, mesh=None):
         """Prefill sequences into paged KV storage.
 
         tokens: (B, L) token rows padded to a common length L.
@@ -255,6 +274,8 @@ class LM:
         Requires ``last_pos``.  Without it, the legacy whole-prompt
         fresh prefill at position 0 runs (padded tail KV is masked by
         seq_lens and overwritten by later appends).
+        mesh: optional tensor-parallel mesh (a "model" axis > 1 routes
+        attention through the KV-head-sharded cascaded-ACC-merge path).
         Returns (logits, new layer caches).
         """
         cfg = self.cfg
@@ -263,7 +284,7 @@ class LM:
         x = constrain(x, ("batch", "seq", "embed"))
         if start_pos is None:
             positions = None
-            ps = {"page_table": page_table, "prefill": True,
+            ps = {"page_table": page_table, "prefill": True, "mesh": mesh,
                   "seq_lens": jnp.zeros((tokens.shape[0],), jnp.int32)}
         else:
             assert last_pos is not None, "chunked prefill needs last_pos"
@@ -277,7 +298,7 @@ class LM:
             start_pos = start_pos.astype(jnp.int32)
             positions = start_pos[:, None] + jnp.arange(
                 tokens.shape[1], dtype=jnp.int32)[None]
-            ps = {"page_table": page_table, "prefill": True,
+            ps = {"page_table": page_table, "prefill": True, "mesh": mesh,
                   "start_pos": start_pos,
                   "chunk_lens": last_pos.astype(jnp.int32) + 1}
         x, new_layers, _ = T.stack_apply(
@@ -290,7 +311,7 @@ class LM:
         return self._head(params, x), new_layers
 
     def paged_verify_step(self, params, layers, tokens, page_table,
-                          seq_lens, chunk_lens):
+                          seq_lens, chunk_lens, mesh=None):
         """K-token speculative verify step across every slot.
 
         tokens: (B, K) input tokens per slot - the carry token followed
@@ -310,7 +331,7 @@ class LM:
         seq_lens = seq_lens.astype(jnp.int32)
         positions = seq_lens[:, None] + jnp.arange(
             tokens.shape[1], dtype=jnp.int32)[None]
-        ps = {"page_table": page_table, "seq_lens": seq_lens,
+        ps = {"page_table": page_table, "seq_lens": seq_lens, "mesh": mesh,
               "chunk_lens": chunk_lens.astype(jnp.int32), "verify": True}
         x, new_layers, _ = T.stack_apply(
             params["layers"], x, cfg, positions=positions, caches=layers,
@@ -319,7 +340,7 @@ class LM:
         return self._head(params, x), new_layers
 
     def paged_decode_step(self, params, layers, tokens, page_table,
-                          seq_lens):
+                          seq_lens, mesh=None):
         """One continuous-batching decode step across every slot.
 
         tokens: (B, 1) next input token per slot; seq_lens: (B,) int32
@@ -332,7 +353,7 @@ class LM:
         cdt = _dtype(cfg.compute_dtype)
         x = self._embed_in(params, tokens, cdt, pos0=0)
         x = constrain(x, ("batch", None, "embed"))
-        ps = {"page_table": page_table, "seq_lens": seq_lens}
+        ps = {"page_table": page_table, "seq_lens": seq_lens, "mesh": mesh}
         x, new_layers, _ = T.stack_apply(
             params["layers"], x, cfg, positions=seq_lens[:, None],
             caches=layers, page_state=ps, causal=True)

@@ -117,3 +117,130 @@ def shardmap_decode_attention(
         out_specs=(P(bspec), P(bspec, axis), P(bspec, axis)),
         check_vma=False)
     return fn(q, k_new, v_new, cache_k, cache_v, pos)
+
+
+# ---------------------------------------------------------------- paged TP
+def tp_shards(mesh, axis: str = "model") -> int:
+    """Size of the tensor-parallel axis on ``mesh`` (1 = no TP)."""
+    if mesh is None:
+        return 1
+    return int(mesh.shape.get(axis, 1))
+
+
+def shardmap_paged_attention(
+    q: jax.Array,        # (B, L, H, dh) decode L=1 / verify L=K / chunk L
+    k_new: jax.Array,    # (B, L, Hkv, dh) this step's K/V to scatter
+    v_new: jax.Array,    # (B, L, Hkv, dh)
+    k_pages: jax.Array,  # (P, page, Hkv, dh), Hkv sharded over `axis`
+    v_pages: jax.Array,  # (P, page, Hkv, dh)
+    page_table: jax.Array,  # (B, pages_per_seq) int32, replicated
+    lens_a: jax.Array,   # (B,) int32: decode/verify seq_lens; prefill start
+    lens_b: jax.Array,   # (B,) int32: verify/prefill chunk_lens; decode 0s
+    *,
+    mesh,
+    mode: str,           # "decode" | "verify" | "prefill"
+    impl: str = "fa2",
+    axis: str = "model",
+    scale: float | None = None,
+):
+    """Tensor-parallel paged attention: the cascaded ACC merge over a
+    KV-head-sharded page pool.
+
+    The paper's multi-KV-block merge (Fig. 2 / Eq. 16), already an ICI
+    pattern for the dense ring (:func:`shardmap_decode_attention`),
+    applied to the production paged pool:
+
+      * the pools keep the *full* page layout on every shard but carry
+        only ``Hkv / tp`` KV heads (page tables stay replicated, so host
+        paging logic - refcounts, COW, prefix cache, rollback - is
+        untouched);
+      * each shard scatters its local heads' K/V (a LOCAL page-table
+        write: no cross-shard traffic) and computes the partial block-FAU
+        triplet (o~, m, l) over its local heads via the same
+        :mod:`repro.kernels.ops` partials the single-shard path
+        finalizes;
+      * local triplets are padded to full head width with the merge's
+        *neutral* element (o~=0, m=NEG_INF, l=0), all-gathered over the
+        shard axis (tiny: tp * B * L * H * (dh + 2) floats vs the full
+        KV pool), and merged with the log-domain ACC rule
+        (:func:`repro.kernels.decode.merge_partials`; ``use_hfa``
+        selects the FIX16/PWL rail) before one LogDiv finalize.
+
+    Because a head's triplet is computed by exactly one shard and the
+    ACC merge with the neutral element is an fp identity (the owning
+    shard's rescale weight is exp(0) == 1, the neutral's l/o~ are
+    exactly 0), the merged output is bit-equal to the single-shard
+    finalize per head - which is what makes TP serving token-exact.
+
+    Returns (out (B, L, H, dh), new_k_pages, new_v_pages) with the pools
+    still KV-head-sharded.
+    """
+    from repro.kernels import ops as kops
+    from repro.kernels import paged_decode as paged_k
+    from repro.kernels import paged_prefill as paged_pf_k
+
+    assert mode in ("decode", "verify", "prefill"), mode
+    b, l_q, h, dh = q.shape
+    hkv = k_pages.shape[2]
+    g = h // hkv
+    n = tp_shards(mesh, axis)
+    assert hkv % n == 0, (
+        f"paged TP needs kv_heads % tp == 0, got {hkv} % {n}")
+    hkv_l = hkv // n
+    use_hfa = impl.startswith("hfa")
+
+    def local(q, k_new, v_new, kp, vp, pt, la, lb):
+        # q arrives head-sharded: (B, L, H/n, dh) - heads are kv-major,
+        # so the slice is exactly this shard's hkv_l KV-head groups.
+        idx = jax.lax.axis_index(axis)
+        if mode == "decode":
+            kp, vp = paged_k.append_kv(kp, vp, k_new, v_new, pt, la)
+            kv_lens = jnp.where(la > 0, la + 1, 0)
+            qg = q.reshape(b, hkv_l, g, dh)
+            o, m, l = kops.paged_decode_partials(
+                qg, kp, vp, pt, kv_lens, impl=impl, scale=scale)
+        elif mode == "verify":
+            kp, vp = paged_pf_k.write_chunk_kv(kp, vp, k_new, v_new, pt,
+                                               la, lb)
+            qg = jnp.swapaxes(q, 1, 2).reshape(b, hkv_l, g, l_q, dh)
+            o, m, l = kops.paged_verify_partials(
+                qg, kp, vp, pt, la, lb, impl=impl, scale=scale)
+        else:
+            kp, vp = paged_pf_k.write_chunk_kv(kp, vp, k_new, v_new, pt,
+                                               la, lb)
+            kv_lens = (la + lb).astype(jnp.int32)
+            qg = jnp.swapaxes(q, 1, 2).reshape(b, hkv_l, g, l_q, dh)
+            o, m, l = kops.paged_prefill_partials(
+                qg, kp, vp, pt, la, kv_lens, impl=impl, scale=scale)
+
+        # Pad the local triplet to full head width with the neutral
+        # element, so the gathered merge reconstitutes every head.
+        o_f = jnp.zeros((b, hkv) + o.shape[2:], o.dtype)
+        m_f = jnp.full((b, hkv) + m.shape[2:], dk.NEG_INF, m.dtype)
+        l_f = jnp.zeros((b, hkv) + l.shape[2:], l.dtype)
+        off = idx * hkv_l
+        o_f = jax.lax.dynamic_update_slice_in_dim(o_f, o, off, axis=1)
+        m_f = jax.lax.dynamic_update_slice_in_dim(m_f, m, off, axis=1)
+        l_f = jax.lax.dynamic_update_slice_in_dim(l_f, l, off, axis=1)
+
+        # ACC merge across shards (Eq. 16): gather only the triplets.
+        og = jax.lax.all_gather(o_f, axis)
+        mg = jax.lax.all_gather(m_f, axis)
+        lg = jax.lax.all_gather(l_f, axis)
+        om, mm, lm = dk.merge_partials(og, mg, lg, use_hfa=use_hfa)
+        out = dk.finalize_decode(om, lm, use_hfa=use_hfa)
+        if mode == "decode":
+            out = out.reshape(b, 1, h, dh)
+        else:
+            # (B, Hkv, G, L, dh) -> (B, L, H, dh)
+            out = jnp.swapaxes(out.reshape(b, h, l_q, dh), 1, 2)
+        return out.astype(q.dtype), kp, vp
+
+    hspec = P(None, None, axis, None)
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(hspec, hspec, hspec, hspec, hspec, P(), P(), P()),
+        out_specs=(P(), hspec, hspec),
+        check_vma=False)
+    return fn(q, k_new, v_new, k_pages, v_pages, page_table,
+              lens_a.astype(jnp.int32), lens_b.astype(jnp.int32))

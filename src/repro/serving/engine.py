@@ -33,8 +33,24 @@ the batched decode (Sarathi-style):
     drained from the cache and applied to the device pools before any
     write.
 
+  * tensor parallelism (``mesh`` with a "model" axis of size tp > 1):
+    the layer KV pools are KV-head-sharded across the mesh and every
+    attention call routes through the cascaded-ACC-merge shard_map
+    path - per-shard pool HBM drops by tp, only (m, l, o~) triplets
+    cross the interconnect, and the token stream is bit-identical to
+    single-shard serving.  All host-side state in this file (page
+    tables, scheduler, sampling vectors) stays replicated.
+
 Only the (max_batch, spec_k + 1) sampled-token matrix crosses to the
 host per step.
+
+Invariant (rollback x refcounts): the verify step in :meth:`_run_decode`
+commits KV for all K+1 columns *before* acceptance is known and then
+rolls back - the constraints that make that safe (rollback drops only
+this slot's refs, re-trims the hash chain, keeps rejected-column COW
+copies, junk KV above seq_lens is never attended) are documented at
+length in :mod:`repro.serving.paged_cache` and must hold for every
+ordering of mark_prefilled / rollback / register_pages below.
 """
 from __future__ import annotations
 
@@ -56,12 +72,18 @@ from repro.serving.scheduler import (FinishedRequest, PrefillChunk, Request,
 _NO_PRESENCE = np.zeros((1, 1), bool)
 
 
-def _serving_jits(model):
+def _serving_jits(model, mesh=None):
     """Jitted prefill/verify/copy steps, cached on the model so every
     engine over the same model shares one compile cache (benchmarks and
-    tests spin up several engines).  Cache donation is skipped on CPU,
-    where it is unsupported and only adds dispatch overhead."""
-    jits = getattr(model, "_serving_jits_v2", None)
+    tests spin up several engines).  The cache is keyed by the
+    tensor-parallel mesh (None = single shard) - a TP engine and a
+    single-shard engine over the same model trace different attention
+    paths.  Cache donation is skipped on CPU, where it is unsupported
+    and only adds dispatch overhead."""
+    cache = getattr(model, "_serving_jits_v3", None)
+    if cache is None:
+        cache = model._serving_jits_v3 = {}
+    jits = cache.get(mesh)
     if jits is not None:
         return jits
 
@@ -74,7 +96,7 @@ def _serving_jits(model):
                    greedy):
         logits, layers = model.paged_prefill(params, layers, tokens,
                                              page_table, last_pos=last_pos,
-                                             start_pos=start_pos)
+                                             start_pos=start_pos, mesh=mesh)
         if greedy:
             toks = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
         else:
@@ -88,7 +110,7 @@ def _serving_jits(model):
         # spec_k == 0 fast path: the single-token decode attention
         # (append + grouped decode) instead of the chunk-write verify.
         logits, layers = model.paged_decode_step(
-            params, layers, tokens, page_table, seq_lens)
+            params, layers, tokens, page_table, seq_lens, mesh=mesh)
         if greedy:
             toks = jnp.argmax(logits[:, :1], axis=-1).astype(jnp.int32)
         else:
@@ -101,7 +123,8 @@ def _serving_jits(model):
     def verify_fn(params, layers, tokens, page_table, seq_lens, chunk_lens,
                   seeds, temp, top_k, top_p, rep_pen, presence, greedy):
         logits, layers = model.paged_verify_step(
-            params, layers, tokens, page_table, seq_lens, chunk_lens)
+            params, layers, tokens, page_table, seq_lens, chunk_lens,
+            mesh=mesh)
         b, kw, v = logits.shape
         if greedy:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32), layers
@@ -128,7 +151,7 @@ def _serving_jits(model):
             jax.jit(decode_fn, donate_argnums=donate, static_argnums=(12,)),
             jax.jit(verify_fn, donate_argnums=donate, static_argnums=(12,)),
             jax.jit(copy_fn, donate_argnums=() if cpu else (0,)))
-    model._serving_jits_v2 = jits
+    cache[mesh] = jits
     return jits
 
 
@@ -139,7 +162,8 @@ class ServingEngine:
                  prefill_budget: int | None = None,
                  prefix_caching: bool = True,
                  spec_k: int = 0,
-                 cached_frac: float = 0.5):
+                 cached_frac: float = 0.5,
+                 mesh=None):
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
         if prefill_budget is not None and prefill_budget < 1:
@@ -150,6 +174,22 @@ class ServingEngine:
         if not 0.0 <= cached_frac <= 1.0:
             raise ValueError(
                 f"cached_frac must be in [0, 1], got {cached_frac}")
+        # Tensor parallelism: a mesh with a "model" axis of size tp > 1
+        # shards the KV pools by head; everything host-side (page
+        # tables, refcounts, scheduler) is oblivious to it.
+        self.mesh = mesh
+        self.tp = 1 if mesh is None else int(mesh.shape.get("model", 1))
+        if self.tp > 1:
+            if len(mesh.devices.flat) > len(jax.devices()):
+                raise ValueError(
+                    f"mesh needs {len(mesh.devices.flat)} devices, have "
+                    f"{len(jax.devices())}")
+            if model.cfg.n_kv_heads % self.tp or \
+                    model.cfg.n_heads % self.tp:
+                raise ValueError(
+                    f"tp={self.tp} must divide n_kv_heads="
+                    f"{model.cfg.n_kv_heads} and n_heads="
+                    f"{model.cfg.n_heads}")
         self.model = model
         self.params = params
         self.page_size = page_size
@@ -170,7 +210,8 @@ class ServingEngine:
                                   self.pages_per_seq,
                                   max_cached_pages=max_cached)
         self.sched = Scheduler(self.cache)
-        self.layers = model.init_paged_cache(num_pages, page_size)
+        self.layers = model.init_paged_cache(num_pages, page_size,
+                                             mesh=mesh)
         # Per-slot sampling state (greedy defaults), mirrored to device
         # every step; presence is the repetition-penalty context bitmask.
         self._temp = np.zeros((max_batch,), np.float32)
@@ -185,9 +226,38 @@ class ServingEngine:
                       "cow_copies": 0, "rejected": 0, "decode_steps": 0,
                       "decode_slot_steps": 0, "decode_tokens": 0,
                       "draft_tokens": 0, "draft_accepted": 0,
-                      "rollbacks": 0}
+                      "rollbacks": 0, "triplet_bytes": 0}
         self._prefill, self._decode, self._verify, self._copy = \
-            _serving_jits(model)
+            _serving_jits(model, mesh)
+
+    # ------------------------------------------------------------- TP info
+    def pool_bytes(self) -> int:
+        """Total logical KV pool bytes (across all shards)."""
+        return sum(x.nbytes for x in jax.tree.leaves(self.layers))
+
+    def pool_bytes_per_shard(self) -> int:
+        """KV pool bytes actually resident on the fullest device,
+        *measured* from the arrays' addressable shards - not derived
+        from ``tp`` - so a silently dropped pool sharding (replicated
+        pools) shows up as full-size here and fails the ``--tp``
+        benchmark gate instead of hiding behind arithmetic."""
+        per_dev: dict = {}
+        for leaf in jax.tree.leaves(self.layers):
+            for s in leaf.addressable_shards:
+                per_dev[s.device] = per_dev.get(s.device, 0) + \
+                    s.data.nbytes
+        return max(per_dev.values())
+
+    def _count_triplets(self, batch: int, rows: int) -> None:
+        """Account the ACC-merge collective volume of one jitted call:
+        each of the tp shards gathers tp padded (o~, m, l) triplets -
+        (d_head + 2) f32 per (slot, query row, head, layer)."""
+        if self.tp <= 1:
+            return
+        cfg = self.model.cfg
+        per_shard = self.tp * batch * rows * cfg.n_heads * \
+            (cfg.d_head + 2) * 4 * cfg.n_layers
+        self.stats["triplet_bytes"] += self.tp * per_shard
 
     # ------------------------------------------------------------- intake
     def submit(self, req: Request) -> None:
@@ -348,6 +418,7 @@ class ServingEngine:
                 jnp.asarray(pres), greedy)
             sampled = np.asarray(sampled)
             self.stats["prefills"] += 1
+            self._count_triplets(bsz, lpad)
             for i, ck in enumerate(grp):
                 self.stats["prefill_chunks"] += 1
                 self.stats["prefill_tokens"] += len(ck.tokens)
@@ -411,6 +482,7 @@ class ServingEngine:
         sampled = np.asarray(sampled)
         self.stats["decode_steps"] += 1
         self.stats["decode_slot_steps"] += len(steps)
+        self._count_triplets(self.max_batch, kw)
         for step in steps:
             slot = step.slot
             c = len(step.tokens)
@@ -426,7 +498,11 @@ class ServingEngine:
             self.stats["draft_accepted"] += a - 1
             sl = int(self.cache.seq_lens[slot])
             # KV for all c inputs is on device; commit it, then roll
-            # back past the accepted prefix below.
+            # back past the accepted prefix below.  Sharp edge: between
+            # this mark_prefilled and the rollback, seq_lens over-counts
+            # by the rejected columns - nothing in this window may
+            # register pages or fork this slot (see the rollback x
+            # refcount contract in repro.serving.paged_cache).
             self.cache.mark_prefilled(slot, sl + c)
             status, used = "running", 0
             for j in range(a):

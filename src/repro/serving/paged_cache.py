@@ -27,6 +27,45 @@ Sharing model (vLLM-style prefix caching + COW):
     fills its pages would otherwise prefill, fail to append, and be
     preempted into a full replay - a quadratic livelock under a tight
     pool.
+
+Rollback x refcount sharp edge (speculative decode)
+---------------------------------------------------
+
+The engine's verify step commits KV for *all* K+1 speculative columns
+before acceptance is known (``mark_prefilled(sl + c)`` followed by
+``rollback(sl + used)``), which puts four load-bearing constraints on
+this class - they are asserted/honoured in :meth:`rollback` and
+:meth:`_cow`, and violating any of them corrupts shared state silently:
+
+1. **Rollback drops only this slot's references.**  A fork taken
+   mid-step keeps reading the old tail page; ``rollback`` must go
+   through :meth:`_drop_ref` (never the free list directly), so a page
+   another slot still references survives, and a published
+   last-reference page parks in the cached LRU exactly as on
+   :meth:`free_slot`.
+2. **Rollback must re-trim the slot's hash chain.**  The chain caches
+   "pages already examined" per slot; if a rejected draft rolled
+   ``seq_lens`` back across a page boundary, a later
+   :meth:`register_pages` would otherwise *skip re-hashing* a page
+   whose content has since been overwritten - publishing a stale hash
+   that a future prompt could claim.  Hence ``del chain[n_tokens //
+   page_size:]``.
+3. **A COW performed for a column that is then rejected is kept.**  The
+   copy is wasted work, never a correctness issue: the new page is
+   exclusively owned, unpublished, and the next append simply
+   overwrites it.  Undoing the copy would require re-taking the shared
+   page reference *after* the fork may have diverged - strictly worse.
+4. **Junk KV from rejected columns stays inside kept pages** at
+   positions ``>= seq_lens``.  That is safe because every mask in the
+   stack (decode, chunked prefill, verify, Pallas and jnp paths alike)
+   cuts at ``seq_lens``, and the next append overwrites the junk in
+   place.  No scrubbing pass exists, by design - do not add one that
+   reads ``seq_lens`` concurrently with a pending rollback.
+
+Tensor parallelism note: under ``--tp`` the device pools are
+KV-head-sharded, but this class is *oblivious* to it - page tables and
+every mechanism above are replicated on the host, and each shard
+applies the same table-driven writes to its head slice.
 """
 from __future__ import annotations
 
