@@ -22,6 +22,17 @@ Workloads:
           recomputed - ``prefill_tokens`` (computed) drops well below
           the total prompt tokens submitted.
 
+  parallel-sample: shared-prefix prompts served as *sequence groups* -
+    each request fans ``--n`` sampled branches (or ``--beam-width``
+    beams) out of one prefill over COW forks.  The scoreboard is the
+    shared-page fraction: of all page-table references held by group
+    branches, how many point at pages physically shared between
+    branches (refcount > 1) - a fork costs one table row + refcounts,
+    so n-best serving scales with distinct tokens, not with n.  The
+    harness re-checks the cache's refcount invariants after every
+    engine step; ``--smoke`` asserts zero violations and a shared
+    fraction above 0.5.
+
 Both paths run the identical model + greedy decode; tok/s counts useful
 generated tokens.
 
@@ -128,20 +139,28 @@ def run_dense(model, params, prompts, budgets, batch, max_seq):
 
 
 def run_paged(model, params, prompts, budgets, batch, max_seq, page_size,
-              prefill_budget=None, spec_k=0, sampling=None, mesh=None):
+              prefill_budget=None, spec_k=0, sampling=None, mesh=None,
+              group=None, check_every_step=False):
     """Continuous batching with chunked prefill + prefix caching, and
     optionally self-speculative decode (``spec_k`` drafts per step),
-    per-request stochastic sampling, and tensor parallelism (``mesh``
-    KV-head-shards the paged pools over its "model" axis).
+    per-request stochastic sampling, tensor parallelism (``mesh``
+    KV-head-shards the paged pools over its "model" axis), and sequence
+    groups (``group`` = dict of n/best_of/beam_width/length_penalty
+    applied to every request).
 
     Drives the engine step by step (same policy as ``engine.run``) so it
     can count decode stalls: steps where at least one slot was decoding
     but no token came out - the latency spike chunked prefill removes.
     (A speculative step always yields >= 1 token per decoding slot, so
-    the stall gate holds for every spec_k.)
+    the stall gate holds for every spec_k.)  Group branches are excluded
+    from the stall accounting (a beam reorder legitimately drops a
+    branch's stream), and with ``check_every_step`` the cache's full
+    refcount/partition invariants are re-verified after every engine
+    step - the returned stats carry the violation count (an invariant
+    failure raises) and the shared-page fraction over group slots.
     """
-    from repro.serving import (FinishedRequest, Request, SamplingParams,
-                               ServingEngine)
+    from repro.serving import (FinishedRequest, InvalidRequestError,
+                               Request, SamplingParams, ServingEngine)
     engine = ServingEngine(model, params, max_batch=batch,
                            page_size=page_size, max_seq=max_seq,
                            prefill_budget=prefill_budget, spec_k=spec_k,
@@ -153,21 +172,26 @@ def run_paged(model, params, prompts, budgets, batch, max_seq, page_size,
                               top_k=sampling["top_k"],
                               top_p=sampling["top_p"],
                               seed=sampling["seed"] + i)
+    gkw = group or {}
     pending = [(i, Request(rid=i, prompt=list(prompts[i]),
                            max_new_tokens=int(budgets[i]),
-                           sampling=samp(i)))
+                           sampling=samp(i), **gkw))
                for i in range(len(prompts))]
     finished = []
     stalls = 0
     step = 0
+    shared_refs = total_refs = 0
+    peak_frac = 0.0
     t0 = time.perf_counter()
     while pending or engine.sched.has_work:
         while pending and pending[0][0] <= step:
             _, req = pending.pop(0)
             try:
                 engine.submit(req)
+            except InvalidRequestError:
+                raise                               # mirror engine.run
             except ValueError:      # over the per-sequence ceiling:
-                engine.stats["rejected"] += 1       # mirror engine.run
+                engine.stats["rejected"] += 1
                 finished.append(FinishedRequest(
                     rid=req.rid, prompt=req.prompt, tokens=[],
                     reason="rejected"))
@@ -177,21 +201,38 @@ def run_paged(model, params, prompts, budgets, batch, max_seq, page_size,
         # An aggregate token-count delta would hide a stalled decode
         # behind another request's prefill completion.
         before = {st.req.rid: len(st.generated)
-                  for st in engine.sched.running.values() if st.decoding}
+                  for st in engine.sched.running.values()
+                  if st.decoding and st.group is None}
         finished.extend(engine.step())
         after = {st.req.rid: len(st.generated)
-                 for st in engine.sched.running.values()}
+                 for st in engine.sched.running.values()
+                 if st.group is None}
         after.update((st.req.rid, len(st.generated))
                      for st in engine.sched.waiting)
         after.update((f.rid, len(f.tokens)) for f in finished)
         stalls += sum(1 for rid, n in before.items()
                       if after.get(rid, n) <= n)
+        if check_every_step:
+            engine.cache.check_invariants()     # raises on any violation
+        gslots = engine.sched.group_slots()
+        if gslots:
+            refs = [p for s in sorted(gslots)
+                    for p in engine.cache.slot_pages(s)]
+            if refs:
+                sh = sum(1 for p in refs if engine.cache.refcount(p) > 1)
+                shared_refs += sh
+                total_refs += len(refs)
+                peak_frac = max(peak_frac, sh / len(refs))
         step += 1
         assert step < 100000, "benchmark runaway"
     dt = time.perf_counter() - t0
     engine.cache.check_invariants()
     assert len(finished) == len(prompts)
-    return (engine.stats["generated_tokens"], dt, engine.stats, stalls,
+    stats = dict(engine.stats)
+    stats["shared_page_frac"] = shared_refs / max(total_refs, 1)
+    stats["shared_page_frac_peak"] = peak_frac
+    stats["refcount_violations"] = 0            # check_invariants raised
+    return (engine.stats["generated_tokens"], dt, stats, stalls,
             finished, engine)
 
 
@@ -200,9 +241,22 @@ def main():
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--full", action="store_true",
                     help="full-size config (default: reduced smoke scale)")
-    ap.add_argument("--workload", choices=("churn", "shared-prefix"),
+    ap.add_argument("--workload",
+                    choices=("churn", "shared-prefix", "parallel-sample"),
                     default="churn")
-    ap.add_argument("--n", type=int, default=16, help="total requests")
+    ap.add_argument("--n", type=int, default=16,
+                    help="total requests (churn/shared-prefix) / sampled "
+                         "branches per request (parallel-sample)")
+    ap.add_argument("--groups", type=int, default=3,
+                    help="sequence-group requests (parallel-sample)")
+    ap.add_argument("--best-of", type=int, default=None,
+                    help="branches sampled per request, n best returned "
+                         "(parallel-sample)")
+    ap.add_argument("--beam-width", type=int, default=0,
+                    help="beam search with this many beams instead of "
+                         "parallel sampling (parallel-sample workload)")
+    ap.add_argument("--length-penalty", type=float, default=1.0,
+                    help="score = cum_logprob / len**length_penalty")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--sys-len", type=int, default=32,
@@ -245,7 +299,7 @@ def main():
     if args.tp < 1:
         ap.error("--tp must be >= 1")
     ensure_host_devices(args.tp)
-    if args.smoke:
+    if args.smoke and args.workload != "parallel-sample":
         args.workload = "shared-prefix"
         args.full = False
         args.n = min(args.n, 9)
@@ -266,6 +320,18 @@ def main():
             # and exercises the temperature+top-k+categorical pipeline.
             args.top_k = 4
 
+    if args.workload == "parallel-sample":
+        if args.smoke:
+            args.full = False
+            args.groups = min(args.groups, 3)
+            args.decode_len = args.decode_len or 8
+        if args.beam_width > 0:
+            width = args.beam_width
+        else:
+            args.n = max(args.n, 2)
+            width = args.best_of if args.best_of is not None else args.n
+        args.batch = max(args.batch, width)
+
     import jax
 
     from repro.configs import get_config
@@ -276,6 +342,8 @@ def main():
         cfg = cfg.reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    if args.workload == "parallel-sample":
+        return _run_parallel_sample(model, params, args)
     if args.workload == "shared-prefix":
         prompts, budgets = make_shared_prefix_workload(
             args.n, args.sys_len, args.prompt_len, args.long_len,
@@ -355,6 +423,94 @@ def main():
         print("smoke:", "OK" if ok else "FAIL")
         return ok
     return p_tps >= d_tps
+
+
+def _run_parallel_sample(model, params, args):
+    """Sequence-group scoreboard: ``--groups`` shared-prefix requests,
+    each fanned into ``--n`` sampled branches (or ``--beam-width``
+    beams) over COW forks.  Reports the shared-page fraction - the
+    fraction of group page-table references that point at physically
+    shared pages - plus fork counts and completion throughput, and
+    re-checks the cache's refcount invariants after every step.
+
+    ``--smoke`` is the CI gate: shared-page fraction > 0.5 on this
+    shared-prefix workload, zero refcount-invariant violations, every
+    group returning its full completion set.
+    """
+    cfg = model.cfg
+    beam = args.beam_width > 0
+    if beam:
+        group = {"beam_width": args.beam_width, "n": args.beam_width,
+                 "length_penalty": args.length_penalty}
+        sampling = None
+        width = args.beam_width
+    else:
+        width = args.best_of if args.best_of is not None else args.n
+        group = {"n": args.n, "best_of": args.best_of,
+                 "length_penalty": args.length_penalty}
+        sampling = {"temperature": args.temperature or 0.8,
+                    "top_k": args.top_k or 8, "top_p": args.top_p,
+                    "seed": args.seed}
+    # shared-prefix prompts: one system prompt, unique per-group tails
+    rng = np.random.default_rng(7)
+    sysp = rng.integers(1, cfg.vocab_size, args.sys_len).tolist()
+    prompts = [sysp + rng.integers(1, cfg.vocab_size,
+                                   args.prompt_len).tolist()
+               for _ in range(args.groups)]
+    budgets = np.full(args.groups, args.decode_len or 12, int)
+
+    common = dict(batch=args.batch, max_seq=args.max_seq,
+                  page_size=args.page_size,
+                  prefill_budget=args.prefill_budget, spec_k=args.spec_k,
+                  sampling=sampling, group=group, check_every_step=True)
+    if args.tp > 1:
+        from repro.launch.mesh import make_tp_mesh
+        common["mesh"] = make_tp_mesh(args.tp)
+    run_paged(model, params, prompts, budgets, **common)      # warm jits
+    tok, dt, stats, _, finished, engine = run_paged(
+        model, params, prompts, budgets, **common)
+
+    n_comp = sum(len(f.completions or []) for f in finished)
+    comp_tokens = sum(len(c.tokens) for f in finished
+                      for c in (f.completions or []))
+    kind = f"beam-{args.beam_width}" if beam else \
+        f"n={args.n}" + (f"/best-of-{args.best_of}" if args.best_of
+                         else "")
+    print(f"parallel-sample ({kind}): {args.groups} groups x width "
+          f"{width} over {stats['steps']} steps, "
+          f"{tok} tokens in {dt:.2f}s -> {tok / dt:.1f} tok/s")
+    print(f"fan-out:            {stats['groups']} groups admitted, "
+          f"{stats['forks']} COW forks (zero KV copied at fork), "
+          f"{stats['cow_copies']} divergence copies")
+    print(f"completions:        {n_comp} returned "
+          f"({comp_tokens} tokens); prefill computed "
+          f"{stats['prefill_tokens']} of "
+          f"{sum(len(p) for p in prompts)} submitted prompt tokens "
+          f"({stats['cached_prefill_tokens']} reused)")
+    print(f"shared pages:       {stats['shared_page_frac']:.0%} of group "
+          f"page refs shared (peak {stats['shared_page_frac_peak']:.0%})")
+    print(f"refcount invariants: "
+          f"{stats['refcount_violations']} violations over "
+          f"{stats['steps']} per-step checks")
+
+    ok = True
+    if args.smoke:
+        if stats["shared_page_frac"] <= 0.5:
+            print("SMOKE FAIL: groups share <= 50% of their pages")
+            ok = False
+        if stats["refcount_violations"] != 0:
+            print("SMOKE FAIL: refcount invariant violated")
+            ok = False
+        if stats["forks"] == 0:
+            print("SMOKE FAIL: no fork ever taken")
+            ok = False
+        if n_comp != args.groups * (args.beam_width or args.n):
+            print(f"SMOKE FAIL: expected "
+                  f"{args.groups * (args.beam_width or args.n)} "
+                  f"completions, got {n_comp}")
+            ok = False
+        print("smoke:", "OK" if ok else "FAIL")
+    return ok
 
 
 def _run_tp(model, params, prompts, budgets, sampling, args):

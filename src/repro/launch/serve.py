@@ -70,6 +70,22 @@ def main():
     ap.add_argument("--repetition-penalty", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0,
                     help="base sampling seed (request i uses seed + i)")
+    ap.add_argument("--n", type=int, default=1,
+                    help="parallel samples per request (a sequence group "
+                         "fans n branches out of one prefill over COW "
+                         "forks; branch b samples under "
+                         "branch_seed(seed, b))")
+    ap.add_argument("--best-of", type=int, default=None,
+                    help="branches sampled per request (>= n); the n "
+                         "best by length-normalized cumulative logprob "
+                         "are returned")
+    ap.add_argument("--beam-width", type=int, default=0,
+                    help="> 0: length-normalized beam search with this "
+                         "many beams (deterministic; temperature must "
+                         "stay 0; returns the n best hypotheses)")
+    ap.add_argument("--length-penalty", type=float, default=1.0,
+                    help="score = cum_logprob / len**length_penalty "
+                         "(1.0 = mean logprob, 0 = raw sum)")
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel shards: KV-head-shard the paged "
                          "pools over a 'model' mesh axis (CPU simulates "
@@ -80,6 +96,16 @@ def main():
     args = ap.parse_args()
     if args.tp < 1:
         ap.error("--tp must be >= 1")
+    if args.n < 1:
+        ap.error("--n must be >= 1")
+    if args.beam_width > 0 and args.temperature > 0:
+        ap.error("beam search is deterministic: --temperature must be 0")
+    if args.beam_width > 0 and args.best_of is not None:
+        ap.error("--best-of is a parallel-sampling knob, incompatible "
+                 "with --beam-width")
+    width = args.beam_width or (args.best_of or args.n)
+    if width > args.batch:
+        ap.error(f"group width {width} exceeds --batch {args.batch}")
     ensure_host_devices(args.tp)
 
     import jax
@@ -129,7 +155,10 @@ def main():
                                 temperature=args.temperature,
                                 top_k=args.top_k, top_p=args.top_p,
                                 repetition_penalty=args.repetition_penalty,
-                                seed=args.seed + i)))
+                                seed=args.seed + i),
+                            n=args.n, best_of=args.best_of,
+                            beam_width=args.beam_width,
+                            length_penalty=args.length_penalty))
                 for i in range(n_req)]
     t0 = time.perf_counter()
     finished = engine.run(arrivals)
@@ -154,6 +183,17 @@ def main():
               f"drafts accepted ({rate:.0%}), "
               f"{tps:.2f} accepted tokens/step, "
               f"{st['rollbacks']} rollbacks")
+    if st["groups"]:
+        kind = f"beam-{args.beam_width}" if args.beam_width \
+            else f"n={args.n}" + (f"/best-of-{args.best_of}"
+                                  if args.best_of else "")
+        print(f"sequence groups ({kind}): {st['groups']} groups, "
+              f"{st['forks']} COW forks (zero KV copied at fork)")
+        best = finished[0]
+        if best.completions:
+            for c in best.completions[:4]:
+                print(f"  rid {best.rid} branch {c.branch} "
+                      f"score {c.score:+.3f}: {c.tokens[:10]}")
     print("sample:", finished[0].tokens[:12])
 
 

@@ -12,11 +12,14 @@ and in the model facade (:meth:`repro.models.model.LM.paged_verify_step`).
 """
 from repro.serving.engine import ServingEngine
 from repro.serving.paged_cache import PagedKVCache
-from repro.serving.sampler import SamplingParams
-from repro.serving.scheduler import (DecodeStep, FinishedRequest,
-                                     PrefillChunk, Request, Scheduler)
+from repro.serving.sampler import SamplingParams, branch_seed
+from repro.serving.scheduler import (Completion, DecodeStep,
+                                     FinishedRequest, InvalidRequestError,
+                                     PrefillChunk, Request, Scheduler,
+                                     SequenceGroup)
 from repro.serving.spec import propose_draft
 
-__all__ = ["DecodeStep", "PagedKVCache", "PrefillChunk", "Request",
-           "FinishedRequest", "SamplingParams", "Scheduler",
-           "ServingEngine", "propose_draft"]
+__all__ = ["Completion", "DecodeStep", "InvalidRequestError",
+           "PagedKVCache", "PrefillChunk", "Request", "FinishedRequest",
+           "SamplingParams", "Scheduler", "SequenceGroup",
+           "ServingEngine", "branch_seed", "propose_draft"]

@@ -26,6 +26,17 @@ the batched decode (Sarathi-style):
   * rejected draft columns are rolled back on the host: ``seq_lens``
     drops to the accepted prefix and now-empty tail pages return to the
     pool (COW refcounts respected);
+  * sequence groups (``n > 1`` / ``best_of`` / ``beam_width``): one
+    prefill fans out into width branch slots over ``PagedKVCache.fork``
+    (prompt pages shared by refcount, zero KV copied).  Parallel
+    branches sample under ``branch_seed(seed, branch)`` and decode
+    exactly like independent requests - token-identical, asserted by
+    tests/test_parallel_sampling.py; beam branches take their tokens
+    from a per-group top-2k reorder (fork the parents keeping several
+    children, free the childless), with speculation auto-disabled.
+    Preemption evicts whole groups; deterministic keys re-derive the
+    same completions on re-admission;
+
   * under page pressure, mid-prefill sequences pause in place (keep
     pages, resume at pos > 0) and decode-append pressure preempts the
     *least-advanced* sequence (cheapest replay);
@@ -62,8 +73,8 @@ import jax.numpy as jnp
 from repro.kernels import paged_prefill as paged_pf_k
 from repro.serving import sampler
 from repro.serving.paged_cache import PagedKVCache
-from repro.serving.scheduler import (FinishedRequest, PrefillChunk, Request,
-                                     Scheduler)
+from repro.serving.scheduler import (FinishedRequest, InvalidRequestError,
+                                     PrefillChunk, Request, Scheduler)
 
 # Placeholder for the presence bitmask on greedy (static-flag) traces:
 # the argmax branch never reads it, and shipping the real
@@ -73,40 +84,79 @@ _NO_PRESENCE = np.zeros((1, 1), bool)
 
 
 def _serving_jits(model, mesh=None):
-    """Jitted prefill/verify/copy steps, cached on the model so every
-    engine over the same model shares one compile cache (benchmarks and
-    tests spin up several engines).  The cache is keyed by the
-    tensor-parallel mesh (None = single shard) - a TP engine and a
-    single-shard engine over the same model trace different attention
+    """Jitted prefill/verify/sample/copy steps, cached on the model so
+    every engine over the same model shares one compile cache
+    (benchmarks and tests spin up several engines).  The cache is keyed
+    by the tensor-parallel mesh (None = single shard) - a TP engine and
+    a single-shard engine over the same model trace different attention
     paths.  Cache donation is skipped on CPU, where it is unsupported
     and only adds dispatch overhead."""
-    cache = getattr(model, "_serving_jits_v3", None)
+    cache = getattr(model, "_serving_jits_v4", None)
     if cache is None:
-        cache = model._serving_jits_v3 = {}
+        cache = model._serving_jits_v4 = {}
     jits = cache.get(mesh)
     if jits is not None:
         return jits
 
-    # ``greedy`` is a static (trace-time) flag: when every row this call
-    # serves is argmax (temperature 0, no penalty), the whole sampling
-    # pipeline (sorts, nucleus scan, categorical) compiles away - the
-    # hot greedy decode step stays as lean as before sampling existed.
-    def prefill_fn(params, layers, tokens, page_table, start_pos, last_pos,
-                   seeds, positions, temp, top_k, top_p, rep_pen, presence,
-                   greedy):
+    # Prefill returns the last-position logits instead of a sampled
+    # token: first tokens are drawn by the shared ``sample_fn`` below,
+    # so a sequence group can fan one prefill out into n first tokens
+    # (n rows replicating the same logits under per-branch seeds) while
+    # a plain request samples through the *identical* code path - the
+    # bit-identity the parallel-sampling conformance suite pins down.
+    def prefill_fn(params, layers, tokens, page_table, start_pos, last_pos):
         logits, layers = model.paged_prefill(params, layers, tokens,
                                              page_table, last_pos=last_pos,
                                              start_pos=start_pos, mesh=mesh)
+        return logits[:, 0], layers
+
+    # ``greedy`` is a static (trace-time) flag: when every row this call
+    # serves is argmax (temperature 0, no penalty), the whole sampling
+    # pipeline (sorts, nucleus scan, categorical) compiles away.
+    # ``want_lp`` (static) additionally returns the chosen token's
+    # logprob - the best_of ranking signal - and stays off the greedy
+    # hot path when no ranking group is live.
+    def sample_fn(logits, presence, seeds, positions, temp, top_k, top_p,
+                  rep_pen, greedy, want_lp):
         if greedy:
-            toks = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+            toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         else:
-            toks = sampler.sample_tokens(logits[:, 0], presence, seeds,
+            toks = sampler.sample_tokens(logits, presence, seeds,
                                          positions, temp, top_k, top_p,
                                          rep_pen)
-        return toks, layers
+        return toks, _chosen_lp(logits, toks, want_lp)
+
+    def topk_fn(logits, k):
+        """Top-k (logprob, token) per row - the beam expansion feed."""
+        lsm = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        vals, idx = jax.lax.top_k(lsm, k)
+        return vals, idx.astype(jnp.int32)
+
+    def _chosen_lp(logits, toks, want_lp):
+        if not want_lp:
+            return jnp.zeros(toks.shape, jnp.float32)
+        lsm = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        return jnp.take_along_axis(
+            lsm, toks[..., None].astype(jnp.int32), axis=-1)[..., 0]
+
+    def _extras(logits, toks, beam_k, want_lp):
+        """Side outputs of a decode/verify call: top-``beam_k``
+        (logprob, token) rows for live beam groups and the chosen
+        token's logprob for best_of ranking.  Both statically gated -
+        zeros (and no log_softmax) when off."""
+        if beam_k:
+            lsm = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            tkv, tki = jax.lax.top_k(lsm, beam_k)
+            tki = tki.astype(jnp.int32)
+        else:
+            b, kw = toks.shape
+            tkv = jnp.zeros((b, kw, 1), jnp.float32)
+            tki = jnp.zeros((b, kw, 1), jnp.int32)
+        return tkv, tki, _chosen_lp(logits, toks, want_lp)
 
     def decode_fn(params, layers, tokens, page_table, seq_lens, chunk_lens,
-                  seeds, temp, top_k, top_p, rep_pen, presence, greedy):
+                  seeds, temp, top_k, top_p, rep_pen, presence, greedy,
+                  beam_k, want_lp):
         # spec_k == 0 fast path: the single-token decode attention
         # (append + grouped decode) instead of the chunk-write verify.
         logits, layers = model.paged_decode_step(
@@ -118,25 +168,30 @@ def _serving_jits(model, mesh=None):
             toks = sampler.sample_tokens(
                 logits[:, 0], presence, seeds, pos, temp, top_k, top_p,
                 rep_pen)[:, None]
-        return toks, layers
+        tkv, tki, lp = _extras(logits, toks, beam_k, want_lp)
+        return toks, tkv, tki, lp, layers
 
     def verify_fn(params, layers, tokens, page_table, seq_lens, chunk_lens,
-                  seeds, temp, top_k, top_p, rep_pen, presence, greedy):
+                  seeds, temp, top_k, top_p, rep_pen, presence, greedy,
+                  beam_k, want_lp):
         logits, layers = model.paged_verify_step(
             params, layers, tokens, page_table, seq_lens, chunk_lens,
             mesh=mesh)
         b, kw, v = logits.shape
         if greedy:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32), layers
-        pres = sampler.step_presence(presence, tokens)
-        # Sampled token i lands at stream index seq_lens + 1 + i.
-        pos = seq_lens.astype(jnp.int32)[:, None] + 1 + \
-            jnp.arange(kw, dtype=jnp.int32)[None]
-        rep = lambda x: jnp.repeat(x, kw, axis=0)  # noqa: E731
-        toks = sampler.sample_tokens(
-            logits.reshape(b * kw, v), pres.reshape(b * kw, -1), rep(seeds),
-            pos.reshape(-1), rep(temp), rep(top_k), rep(top_p), rep(rep_pen))
-        return toks.reshape(b, kw), layers
+            toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            pres = sampler.step_presence(presence, tokens)
+            # Sampled token i lands at stream index seq_lens + 1 + i.
+            pos = seq_lens.astype(jnp.int32)[:, None] + 1 + \
+                jnp.arange(kw, dtype=jnp.int32)[None]
+            rep = lambda x: jnp.repeat(x, kw, axis=0)  # noqa: E731
+            toks = sampler.sample_tokens(
+                logits.reshape(b * kw, v), pres.reshape(b * kw, -1),
+                rep(seeds), pos.reshape(-1), rep(temp), rep(top_k),
+                rep(top_p), rep(rep_pen)).reshape(b, kw)
+        tkv, tki, lp = _extras(logits, toks, beam_k, want_lp)
+        return toks, tkv, tki, lp, layers
 
     def copy_fn(layers, src, dst):
         # Layer pools are stacked (groups, P, page, Hkv, d): page axis 1.
@@ -146,11 +201,14 @@ def _serving_jits(model, mesh=None):
 
     cpu = jax.default_backend() == "cpu"
     donate = () if cpu else (1,)
-    jits = (jax.jit(prefill_fn, donate_argnums=donate,
-                    static_argnums=(13,)),
-            jax.jit(decode_fn, donate_argnums=donate, static_argnums=(12,)),
-            jax.jit(verify_fn, donate_argnums=donate, static_argnums=(12,)),
-            jax.jit(copy_fn, donate_argnums=() if cpu else (0,)))
+    jits = (jax.jit(prefill_fn, donate_argnums=donate),
+            jax.jit(decode_fn, donate_argnums=donate,
+                    static_argnums=(12, 13, 14)),
+            jax.jit(verify_fn, donate_argnums=donate,
+                    static_argnums=(12, 13, 14)),
+            jax.jit(copy_fn, donate_argnums=() if cpu else (0,)),
+            jax.jit(sample_fn, static_argnums=(8, 9)),
+            jax.jit(topk_fn, static_argnums=(1,)))
     cache[mesh] = jits
     return jits
 
@@ -226,9 +284,10 @@ class ServingEngine:
                       "cow_copies": 0, "rejected": 0, "decode_steps": 0,
                       "decode_slot_steps": 0, "decode_tokens": 0,
                       "draft_tokens": 0, "draft_accepted": 0,
-                      "rollbacks": 0, "triplet_bytes": 0}
-        self._prefill, self._decode, self._verify, self._copy = \
-            _serving_jits(model, mesh)
+                      "rollbacks": 0, "triplet_bytes": 0,
+                      "groups": 0, "forks": 0, "beam_steps": 0}
+        (self._prefill, self._decode, self._verify, self._copy,
+         self._sample, self._topk) = _serving_jits(model, mesh)
 
     # ------------------------------------------------------------- TP info
     def pool_bytes(self) -> int:
@@ -267,6 +326,12 @@ class ServingEngine:
             raise ValueError(
                 f"request {req.rid}: prompt+budget {need} exceeds the "
                 f"per-sequence ceiling {limit} (pages_per_seq * page_size)")
+        width = req.beam_width if req.beam_width > 0 \
+            else (req.best_of if req.best_of is not None else req.n)
+        if width > self.max_batch:
+            raise ValueError(
+                f"request {req.rid}: group width {width} exceeds "
+                f"max_batch {self.max_batch}")
         self.sched.submit(req)
 
     # -------------------------------------------------------------- step
@@ -314,15 +379,17 @@ class ServingEngine:
         for slot in self.sched.decoding_slots():
             if slot not in self.sched.running:
                 continue                    # already evicted as a victim
-            while not self.cache.ensure_append_capacity(slot):
+            while slot in self.sched.running and \
+                    not self.cache.ensure_append_capacity(slot):
                 at_ceiling = self.cache.pages_for(
                     int(self.cache.seq_lens[slot]) + 1) \
                     > self.cache.pages_per_seq
                 victim = slot if at_ceiling else self.sched.choose_victim()
                 self.sched.preempt(victim)
                 self.stats["preemptions"] += 1
-                if victim == slot:
-                    break
+                # A group victim evicts every branch of its group - the
+                # probed slot itself may be gone (membership re-checked
+                # by the loop condition).
 
     def _apply_pending_copies(self) -> None:
         """Apply queued copy-on-write page copies to the device pools.
@@ -373,8 +440,11 @@ class ServingEngine:
     def _run_chunks(self, chunks: list[PrefillChunk], finished: list):
         """Run this step's prefill chunks, batched by padded length (one
         jit trace per (group size, padded length) pair).  Final chunks
-        yield the sequence's first new token - sampled on device - and
-        flip it into decode."""
+        yield the sequence's first new token(s): the prefill jit returns
+        the last-position logits, sequence groups fan out their width
+        branches over ``fork`` (sharing every prompt page), and all
+        first tokens - one per plain request, one per branch - are drawn
+        in a single shared sampling call."""
         for ck in chunks:
             self._set_sampling(ck.slot)
         groups: dict[int, list[PrefillChunk]] = {}
@@ -390,35 +460,17 @@ class ServingEngine:
             rows = np.zeros((bsz, width), np.int32)
             start = np.zeros((bsz,), np.int32)
             last = np.zeros((bsz,), np.int32)
-            pos = np.zeros((bsz,), np.int32)
-            slots = np.zeros((bsz,), np.int64)
             for i, ck in enumerate(grp):
                 toks[i, :len(ck.tokens)] = ck.tokens
                 rows[i] = self.cache.page_table[ck.slot, :width]
                 start[i] = ck.start
                 last[i] = len(ck.tokens) - 1
-                slots[i] = ck.slot
-                if ck.is_final:
-                    # The sampled token's stream index is the prompt
-                    # length plus any generated tokens replayed after a
-                    # preemption - i.e. the stream length itself.
-                    self._rebuild_presence(ck.slot)
-                    pos[i] = self.sched.running[ck.slot].target
-            greedy = self._all_greedy(
-                ck.slot for ck in grp if ck.is_final)
-            pres = _NO_PRESENCE if greedy else self._presence[slots]
-            sampled, self.layers = self._prefill(
+            logits, self.layers = self._prefill(
                 self.params, self.layers, jnp.asarray(toks),
-                jnp.asarray(rows), jnp.asarray(start), jnp.asarray(last),
-                jnp.asarray(self._seed[slots]), jnp.asarray(pos),
-                jnp.asarray(self._temp[slots]),
-                jnp.asarray(self._top_k[slots]),
-                jnp.asarray(self._top_p[slots]),
-                jnp.asarray(self._rep_pen[slots]),
-                jnp.asarray(pres), greedy)
-            sampled = np.asarray(sampled)
+                jnp.asarray(rows), jnp.asarray(start), jnp.asarray(last))
             self.stats["prefills"] += 1
             self._count_triplets(bsz, lpad)
+            finals = []
             for i, ck in enumerate(grp):
                 self.stats["prefill_chunks"] += 1
                 self.stats["prefill_tokens"] += len(ck.tokens)
@@ -426,14 +478,126 @@ class ServingEngine:
                 if self.prefix_caching:
                     self.cache.register_pages(
                         ck.slot, self.sched.running[ck.slot].tokens())
-                if not ck.is_final:
-                    continue
-                tok = int(sampled[i])
-                self.stats["generated_tokens"] += 1
-                status = self.sched.record_token(ck.slot, tok)
-                self._presence[ck.slot, tok] = True
-                if status != "running":
-                    finished.append(self.sched.retire(ck.slot, status))
+                if ck.is_final:
+                    finals.append((i, ck.slot))
+            if finals:
+                self._finish_prefills(logits, finals, finished)
+
+    def _finish_prefills(self, logits, finals: list, finished: list):
+        """First tokens for every sequence whose prefill just completed:
+        fan sequence groups out into their branches, then draw one token
+        per (plain request | parallel branch) in a single sampling call
+        over replicated logits rows, and hand beam roots their top-2k
+        expansion."""
+        rows: list[tuple[int, int]] = []     # (logits row, slot)
+        beams: list[tuple[int, int]] = []
+        for i, slot in finals:
+            st = self.sched.running[slot]
+            if st.group is None:
+                self._rebuild_presence(slot)
+                rows.append((i, slot))
+            elif st.group.beam:
+                self.stats["groups"] += 1
+                beams.append((i, slot))
+            else:
+                self.stats["groups"] += 1
+                base = st.req.sampling or sampler.GREEDY
+                branches = self.sched.fan_out(slot)
+                self.stats["forks"] += len(branches) - 1
+                for bslot, b in branches:
+                    self._set_branch_sampling(bslot, base, b)
+                    self._rebuild_presence(bslot)
+                    rows.append((i, bslot))
+        if rows:
+            self._sample_first_tokens(logits, rows, finished)
+        for i, slot in beams:
+            self._expand_beam_root(logits, i, slot, finished)
+
+    def _sample_first_tokens(self, logits, rows, finished):
+        """One sampling call covering every first token: row j draws for
+        ``rows[j] = (logits row, slot)`` at the slot's stream position
+        under the slot's (branch) seed - the same code path a decode
+        step's sampler uses, padded to a power-of-two row count."""
+        n = 1
+        while n < len(rows):
+            n *= 2
+        src = np.zeros((n,), np.int32)
+        slots = np.zeros((n,), np.int64)
+        pos = np.zeros((n,), np.int32)
+        for j, (i, slot) in enumerate(rows):
+            src[j] = i
+            slots[j] = slot
+            # The sampled token's stream index is the prompt length plus
+            # any generated tokens replayed after a preemption - i.e.
+            # the stream length itself.
+            pos[j] = self.sched.running[slot].target
+        greedy = self._all_greedy(slot for _, slot in rows)
+        want_lp = self._want_logprobs()
+        pres = _NO_PRESENCE if greedy else self._presence[slots]
+        lrows = jnp.take(logits, jnp.asarray(src), axis=0)
+        toks, lps = self._sample(
+            lrows, jnp.asarray(pres), jnp.asarray(self._seed[slots]),
+            jnp.asarray(pos), jnp.asarray(self._temp[slots]),
+            jnp.asarray(self._top_k[slots]),
+            jnp.asarray(self._top_p[slots]),
+            jnp.asarray(self._rep_pen[slots]), greedy, want_lp)
+        toks = np.asarray(toks)
+        lps = np.asarray(lps)
+        for j, (i, slot) in enumerate(rows):
+            tok = int(toks[j])
+            self.stats["generated_tokens"] += 1
+            st = self.sched.running[slot]
+            status = self.sched.record_token(slot, tok)
+            st.cum_logprob += float(lps[j])
+            self._presence[slot, tok] = True
+            if status != "running":
+                fr = self.sched.finish(slot, status)
+                if fr is not None:
+                    finished.append(fr)
+
+    def _expand_beam_root(self, logits, i, slot, finished):
+        """First beam expansion: top-2*width (logprob, token) candidates
+        from the prompt's last-position logits seed the beam."""
+        group = self.sched.running[slot].group
+        vals, idx = self._topk(logits[i:i + 1], 2 * group.width)
+        cands = list(zip(np.asarray(idx)[0].tolist(),
+                         np.asarray(vals)[0].tolist()))
+        before_tok = self.sched.tokens_emitted
+        before_forks = self.sched.forks
+        fr = self.sched.fan_out_beam(slot, cands)
+        self.stats["generated_tokens"] += \
+            self.sched.tokens_emitted - before_tok
+        self.stats["forks"] += self.sched.forks - before_forks
+        if fr is not None:
+            finished.append(fr)
+        else:
+            self._reset_beam_slots(group)
+
+    def _set_branch_sampling(self, slot: int, sp, branch: int) -> None:
+        """Branch ``branch`` samples under ``branch_seed(seed, branch)``
+        - otherwise the request's own sampling params."""
+        self._temp[slot] = sp.temperature
+        self._top_k[slot] = sp.top_k
+        self._top_p[slot] = sp.top_p
+        self._rep_pen[slot] = sp.repetition_penalty
+        self._seed[slot] = sampler.branch_seed(sp.seed, branch)
+
+    def _reset_beam_slots(self, group) -> None:
+        """Pin every live beam slot's sampling vectors to greedy: a
+        reorder forks branches into slots whose vectors may still hold
+        a previous occupant's sampled params, and one stale
+        temperature would silently knock the whole batch off the
+        greedy (sampling-free) fast path."""
+        for slot in group.slots:
+            self._set_branch_sampling(slot, sampler.GREEDY, 0)
+
+    def _want_logprobs(self) -> bool:
+        """True when any parallel-sampling group is live: branches
+        accumulate the chosen-token logprob so completions come back
+        scored (and best_of > n can rank on it).  Plain serving never
+        pays for the extra log_softmax."""
+        return any(st.group is not None and not st.group.beam
+                   for st in self.sched.running.values())
 
     # ------------------------------------------------------------ decode
     def _run_decode(self, finished: list) -> None:
@@ -441,7 +605,10 @@ class ServingEngine:
         token plus up to ``spec_k`` prompt-lookup drafts, sample the
         target token at every position on device, and keep the longest
         prefix whose drafts the sampler confirmed.  Rejected columns
-        roll the paged KV back to the accepted prefix."""
+        roll the paged KV back to the accepted prefix.  Beam branches
+        ride along with a single carry column: their next tokens come
+        from the per-group top-2k reorder after the call, never from
+        the sampler."""
         steps = self.sched.schedule_decode(self.spec_k)
         if not steps:
             return
@@ -449,8 +616,12 @@ class ServingEngine:
         toks = np.zeros((self.max_batch, kw), np.int32)
         dl = np.zeros((self.max_batch,), np.int32)
         cl = np.zeros((self.max_batch,), np.int32)
+        beam_groups: dict[int, object] = {}
         for step in steps:
             slot = step.slot
+            st = self.sched.running[slot]
+            if st.group is not None and st.group.beam:
+                beam_groups.setdefault(id(st.group), st.group)
             sl = int(self.cache.seq_lens[slot])
             c = len(step.tokens)
             if c > 1 and not self.cache.ensure_capacity(slot, sl + c):
@@ -470,7 +641,10 @@ class ServingEngine:
         self._apply_pending_copies()
         step_fn = self._decode if kw == 1 else self._verify
         greedy = self._all_greedy(s.slot for s in steps)
-        sampled, self.layers = step_fn(
+        beam_k = 2 * max((g.width for g in beam_groups.values()),
+                         default=0)
+        want_lp = self._want_logprobs()
+        sampled, tkv, tki, lps, self.layers = step_fn(
             self.params, self.layers, jnp.asarray(toks),
             jnp.asarray(self.cache.page_table[:, :width]),
             jnp.asarray(dl), jnp.asarray(cl),
@@ -478,15 +652,32 @@ class ServingEngine:
             jnp.asarray(self._top_k), jnp.asarray(self._top_p),
             jnp.asarray(self._rep_pen),
             jnp.asarray(_NO_PRESENCE if greedy else self._presence),
-            greedy)
+            greedy, beam_k, want_lp)
         sampled = np.asarray(sampled)
+        lps = np.asarray(lps)
         self.stats["decode_steps"] += 1
         self.stats["decode_slot_steps"] += len(steps)
         self._count_triplets(self.max_batch, kw)
         for step in steps:
             slot = step.slot
+            st = self.sched.running[slot]
             c = len(step.tokens)
             t = sampled[slot]
+            sl = int(self.cache.seq_lens[slot])
+            # KV for all c inputs is on device; commit it, then roll
+            # back past the accepted prefix below.  Sharp edge: between
+            # this mark_prefilled and the rollback, seq_lens over-counts
+            # by the rejected columns - nothing in this window may
+            # register pages, and a fork must truncate at the accepted
+            # length (see the rollback x refcount contract in
+            # repro.serving.paged_cache).
+            self.cache.mark_prefilled(slot, sl + c)
+            if st.group is not None and st.group.beam:
+                # Carry KV committed (c == 1, speculation disabled);
+                # the group's reorder below picks the next tokens.
+                if self.prefix_caching:
+                    self.cache.register_pages(slot, st.tokens())
+                continue
             # Accept drafts while they equal the sampled target token at
             # their position - exact (lossless) acceptance: t[j-1] is
             # the token the no-spec loop would have emitted where the
@@ -496,14 +687,6 @@ class ServingEngine:
                 a += 1
             self.stats["draft_tokens"] += c - 1
             self.stats["draft_accepted"] += a - 1
-            sl = int(self.cache.seq_lens[slot])
-            # KV for all c inputs is on device; commit it, then roll
-            # back past the accepted prefix below.  Sharp edge: between
-            # this mark_prefilled and the rollback, seq_lens over-counts
-            # by the rejected columns - nothing in this window may
-            # register pages or fork this slot (see the rollback x
-            # refcount contract in repro.serving.paged_cache).
-            self.cache.mark_prefilled(slot, sl + c)
             status, used = "running", 0
             for j in range(a):
                 tok = int(t[j])
@@ -511,11 +694,14 @@ class ServingEngine:
                 self.stats["generated_tokens"] += 1
                 self.stats["decode_tokens"] += 1
                 status = self.sched.record_token(slot, tok)
+                st.cum_logprob += float(lps[slot, j])
                 self._presence[slot, tok] = True
                 if status != "running":
                     break
             if status != "running":
-                finished.append(self.sched.retire(slot, status))
+                fr = self.sched.finish(slot, status)
+                if fr is not None:
+                    finished.append(fr)
                 continue
             if used < c:
                 # Paged rollback: decrement seq_len to the accepted
@@ -527,6 +713,31 @@ class ServingEngine:
             if self.prefix_caching:
                 self.cache.register_pages(
                     slot, self.sched.running[slot].tokens())
+        if beam_groups:
+            tkv = np.asarray(tkv)
+            tki = np.asarray(tki)
+            for group in beam_groups.values():
+                if not group.slots:
+                    continue
+                # Each group sees exactly its own top-2*width slice, so
+                # its expansion is independent of what other live beam
+                # groups made the call compute.
+                k = 2 * group.width
+                per_slot = {
+                    s: list(zip(tki[s, 0, :k].tolist(),
+                                tkv[s, 0, :k].tolist()))
+                    for s in group.slots}
+                before_tok = self.sched.tokens_emitted
+                before_forks = self.sched.forks
+                fr = self.sched.beam_reorder(group, per_slot)
+                self.stats["generated_tokens"] += \
+                    self.sched.tokens_emitted - before_tok
+                self.stats["forks"] += self.sched.forks - before_forks
+                self.stats["beam_steps"] += 1
+                if fr is not None:
+                    finished.append(fr)
+                else:
+                    self._reset_beam_slots(group)
 
     def _pow2_width(self, need: int) -> int:
         """Page-table width covering ``need`` pages, rounded up to a
@@ -558,7 +769,10 @@ class ServingEngine:
                 _, req = pending.pop(0)
                 try:
                     self.submit(req)
+                except InvalidRequestError:
+                    raise        # contradictory knobs: client misuse
                 except ValueError:
+                    # resource rejection (prompt/width over capacity)
                     self.stats["rejected"] += 1
                     finished.append(FinishedRequest(
                         rid=req.rid, prompt=req.prompt, tokens=[],

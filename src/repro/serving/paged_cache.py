@@ -62,6 +62,18 @@ this class - they are asserted/honoured in :meth:`rollback` and
    place.  No scrubbing pass exists, by design - do not add one that
    reads ``seq_lens`` concurrently with a pending rollback.
 
+5. **A fork taken inside the commit/rollback window must be truncated.**
+   Between ``mark_prefilled(sl + c)`` and ``rollback(sl + used)`` the
+   slot's ``seq_lens`` counts rejected columns, so a plain
+   :meth:`fork` would inherit junk tokens as real and keep references
+   on tail pages about to be rolled back.  ``fork(slot, n_tokens)``
+   shares only the pages covering the pre-commit (or accepted) prefix
+   and re-trims the fork's hash chain, so refcounts stay conserved
+   through the parent's rollback and a later :meth:`register_pages` on
+   either slot re-hashes any page whose rolled-over content was
+   overwritten.  Sequence-group fan-out (parallel sampling / beam)
+   forks exactly this way.
+
 Tensor parallelism note: under ``--tp`` the device pools are
 KV-head-sharded, but this class is *oblivious* to it - page tables and
 every mechanism above are replicated on the host, and each shard
@@ -145,6 +157,10 @@ class PagedKVCache:
     def token_capacity(self, slot: int) -> int:
         """Tokens the slot's currently-allocated pages can hold."""
         return len(self._slot_pages[slot]) * self.page_size
+
+    def slot_pages(self, slot: int) -> tuple[int, ...]:
+        """The slot's page ids, in table order (read-only snapshot)."""
+        return tuple(self._slot_pages[slot])
 
     def writable_token_capacity(self, slot: int) -> int:
         """Tokens the slot can hold without allocating OR copying: the
@@ -321,21 +337,42 @@ class PagedKVCache:
                                else n_tokens)
         return slot
 
-    def fork(self, slot: int) -> int:
+    def fork(self, slot: int, n_tokens: int | None = None) -> int:
         """Clone ``slot`` into a fresh slot sharing every page (beam /
         parallel-sampling style).  No KV is copied; the first divergent
-        append into a shared page triggers copy-on-write."""
+        append into a shared page triggers copy-on-write.
+
+        ``n_tokens`` truncates the fork: it shares only the pages
+        covering the first ``n_tokens`` of the parent and starts with
+        ``seq_lens == n_tokens``.  This is what makes a fork taken
+        inside the speculative-verify window safe (constraint 5 of the
+        rollback x refcount contract above): between the engine's
+        ``mark_prefilled(sl + c)`` and ``rollback(sl + used)`` the
+        parent's ``seq_lens`` over-counts by the rejected columns, so a
+        fork intended to share only the *accepted* prefix must be taken
+        with ``n_tokens = sl + used``.  The truncated fork takes no
+        reference on pages past ``pages_for(n_tokens)`` (they may be
+        rolled back and freed under it), and its hash chain is
+        re-trimmed to the full pages below ``n_tokens`` so a later
+        :meth:`register_pages` re-hashes any page whose rolled-over
+        content has since been overwritten.
+        """
         if not self._free_slots:
             raise RuntimeError("no free slot to fork into")
-        pages = self._slot_pages[slot]
+        if n_tokens is None:
+            n_tokens = int(self.seq_lens[slot])
+        assert 1 <= n_tokens <= int(self.seq_lens[slot]), \
+            (n_tokens, int(self.seq_lens[slot]))
+        pages = self._slot_pages[slot][:self.pages_for(n_tokens)]
         new = self._free_slots.pop()
         for p in pages:
             self._refcount[p] += 1
         self._slot_pages[new] = list(pages)
-        self._slot_chain[new] = list(self._slot_chain.get(slot, []))
+        chain = self._slot_chain.get(slot, [])
+        self._slot_chain[new] = chain[:n_tokens // self.page_size]
         self.page_table[new] = 0
         self.page_table[new, :len(pages)] = pages
-        self.seq_lens[new] = self.seq_lens[slot]
+        self.seq_lens[new] = n_tokens
         return new
 
     def _cow(self, slot: int, idx: int) -> bool:

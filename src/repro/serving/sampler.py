@@ -61,6 +61,25 @@ class SamplingParams:
 GREEDY = SamplingParams()
 
 
+def branch_seed(seed: int, branch: int) -> int:
+    """Derived seed for branch ``branch`` of a parallel-sampling group.
+
+    ``fold_in(PRNGKey(seed), branch)`` squeezed back to an int32 seed,
+    so branch b of a group samples *exactly* the stream an independent
+    request submitted with ``SamplingParams(seed=branch_seed(seed, b))``
+    would - the conformance contract that makes n-parallel sampling
+    testable against n single-slot requests.  Branch 0 keeps the base
+    seed (an n=1 group degenerates to the plain request).  A pure
+    function of (seed, branch): bit-stable under batch composition,
+    preemption replay, and speculation, like the position keys.
+    """
+    if branch == 0:
+        return int(seed)
+    key = jax.random.fold_in(jax.random.PRNGKey(int(seed) & 0xFFFFFFFF),
+                             int(branch))
+    return int(jax.random.randint(key, (), 0, jnp.iinfo(jnp.int32).max))
+
+
 def apply_repetition_penalty(logits, presence, penalty):
     """HF-style repetition penalty: seen tokens' logits shrink toward 0.
 

@@ -17,6 +17,20 @@ Under page-pool pressure:
     so the replay usually resumes from the last full prompt page) and
     it re-queues at the front, vLLM recompute-style.
 
+Sequence groups (parallel sampling / beam search): a request with
+``n > 1`` (or ``best_of``, or ``beam_width > 0``) is admitted as ONE
+prefill and fanned out into ``width`` branch slots over
+``PagedKVCache.fork`` - a fork costs one page-table row plus refcount
+bumps, never a KV copy, so n-best serving scales with *distinct*
+tokens, not with n.  Parallel-sampling branches then decode like
+independent requests (per-branch seeds); beam branches are reordered
+every step (top-2k expansion, fork the parents that keep multiple
+children, free the childless ones).  Preemption is group-aware: the
+whole group is evicted and the request re-queued - regeneration is
+deterministic (seeded keys / beam scores are pure functions of the
+request), so the group re-derives the same completions from whatever
+shared prefix pages survive in the cache LRU.
+
 Pure host logic - fully testable without jax.
 """
 from __future__ import annotations
@@ -36,6 +50,20 @@ class Request:
     max_new_tokens: int
     eos_id: int | None = None
     sampling: SamplingParams | None = None     # None = greedy
+    # -- sequence-group knobs (parallel sampling / beam search) -----------
+    n: int = 1                    # completions returned
+    best_of: int | None = None    # branches sampled (>= n); None = n
+    beam_width: int = 0           # > 0: length-normalized beam search
+    length_penalty: float = 1.0   # score = cum_logprob / len**length_penalty
+
+
+@dataclasses.dataclass
+class Completion:
+    """One finished branch of a sequence group."""
+    tokens: list[int]          # generated tokens (includes eos if hit)
+    branch: int                # branch id (seed fold for parallel sampling)
+    reason: str                # "eos" | "length"
+    score: float = 0.0         # length-normalized cumulative logprob
 
 
 @dataclasses.dataclass
@@ -45,6 +73,79 @@ class FinishedRequest:
     tokens: list[int]          # generated tokens (includes eos if hit)
     reason: str                # "eos" | "length" | "rejected"
     preemptions: int = 0
+    # Sequence groups only: the n returned completions (tokens/reason
+    # above mirror completions[0]).  Ordered by branch id for plain
+    # n-parallel sampling, by score (desc) when ranking applies
+    # (best_of > n, or beam search).
+    completions: list[Completion] | None = None
+
+
+@dataclasses.dataclass
+class SequenceGroup:
+    """Host bookkeeping for one parallel-sampling / beam request.
+
+    One prefill, ``width`` branch slots sharing every prompt page by
+    refcount.  ``slots`` tracks the live branches; ``finished`` collects
+    completions until the group retires (all branches done, or - for
+    beam - ``width`` hypotheses finished).
+    """
+    req: Request
+    width: int                 # branches fanned out of the shared prefill
+    beam: bool
+    slots: set[int] = dataclasses.field(default_factory=set)
+    finished: list[Completion] = dataclasses.field(default_factory=list)
+    # Parent's full prompt pages at fan-out: branches never write below
+    # the prompt, so these stay physically shared for the group's life
+    # (the shared-prefix invariant the property suite checks).
+    prefix_pages: tuple[int, ...] = ()
+    fanned_out: bool = False
+    preemptions: int = 0
+    next_branch: int = 0
+
+    @property
+    def ranked(self) -> bool:
+        """Completions are ranked by score (vs returned by branch id)."""
+        return self.beam or self.width > self.req.n
+
+    def score(self, cum_logprob: float, length: int) -> float:
+        return cum_logprob / (max(length, 1) ** self.req.length_penalty)
+
+
+class InvalidRequestError(ValueError):
+    """Contradictory request knobs (client misuse).  Deliberately NOT
+    absorbed by ``ServingEngine.run``'s per-request rejection path -
+    unlike a resource rejection (prompt/width over the engine's
+    capacity), a self-contradictory request should fail loudly, not
+    come back as ``reason="rejected"``."""
+
+
+def _make_group(req: Request) -> SequenceGroup | None:
+    """Validate the group knobs; None when the request is a plain
+    single-stream one."""
+    if req.n < 1:
+        raise InvalidRequestError(
+            f"request {req.rid}: n must be >= 1, got {req.n}")
+    if req.beam_width > 0:
+        if req.best_of is not None:
+            raise InvalidRequestError(
+                f"request {req.rid}: best_of is a parallel-sampling knob, "
+                f"incompatible with beam_width")
+        if req.n > req.beam_width:
+            raise InvalidRequestError(
+                f"request {req.rid}: n={req.n} exceeds beam_width="
+                f"{req.beam_width}")
+        if req.sampling is not None and req.sampling.temperature > 0:
+            raise InvalidRequestError(
+                f"request {req.rid}: beam search is deterministic - "
+                f"temperature must be 0")
+        return SequenceGroup(req, req.beam_width, beam=True)
+    width = req.best_of if req.best_of is not None else req.n
+    if width < req.n:
+        raise InvalidRequestError(
+            f"request {req.rid}: best_of={width} < n={req.n}")
+    if width == 1:
+        return None
+    return SequenceGroup(req, width, beam=False)
 
 
 @dataclasses.dataclass
@@ -55,6 +156,9 @@ class _Running:
     computed: int = 0          # KV tokens materialized (incl. reused prefix)
     decoding: bool = False     # prefill complete, generating
     preemptions: int = 0
+    group: SequenceGroup | None = None
+    branch: int = 0            # branch id within the group
+    cum_logprob: float = 0.0   # beam / best_of ranking state
 
     def __post_init__(self):
         # Maintained incrementally by record_token: tokens() is on the
@@ -105,12 +209,17 @@ class Scheduler:
         self.waiting: deque[_Running] = deque()
         self.running: dict[int, _Running] = {}     # slot -> state
         self._seq_no = 0
+        # Monotone accounting the engine reads as deltas around group
+        # operations (beam reorders emit tokens and fork slots deep
+        # inside the scheduler).
+        self.tokens_emitted = 0
+        self.forks = 0
 
     # ------------------------------------------------------------ intake
     def submit(self, req: Request) -> None:
         assert len(req.prompt) >= 1, "empty prompt"
         assert req.max_new_tokens >= 1
-        self.waiting.append(_Running(req, []))
+        self.waiting.append(_Running(req, [], group=_make_group(req)))
 
     @property
     def has_work(self) -> bool:
@@ -121,6 +230,28 @@ class Scheduler:
 
     def prefilling_slots(self) -> list[int]:
         return sorted(s for s, st in self.running.items() if not st.decoding)
+
+    def group_slots(self) -> set[int]:
+        """Slots currently owned by sequence-group branches."""
+        return {s for s, st in self.running.items() if st.group is not None}
+
+    def _reserved_slots(self) -> int:
+        """Slots admission must keep free for live groups: the pending
+        fan-out of a mid-prefill group parent (width - 1 forks land the
+        step its prefill completes), and beam regrowth headroom (an
+        eos-finished hypothesis frees a slot the next reorder may
+        re-fill up to width)."""
+        groups: dict[int, SequenceGroup] = {}
+        for st in self.running.values():
+            if st.group is not None:
+                groups[id(st.group)] = st.group
+        total = 0
+        for g in groups.values():
+            if not g.fanned_out:
+                total += g.width - 1
+            elif g.beam:
+                total += g.width - len(g.slots)
+        return total
 
     # --------------------------------------------------------- admission
     def schedule_prefill(self, budget: int | None) -> tuple[
@@ -156,6 +287,13 @@ class Scheduler:
             shared = self.cache.lookup_prefix(toks)
             if not self.cache.can_admit(len(toks), shared):
                 break                      # FCFS: head blocks the queue
+            # Group-aware slot budget: a group needs its full fan-out
+            # width, and slots reserved for other live groups (pending
+            # fan-outs, beam regrowth) are off-limits.
+            need_slots = st.group.width if st.group is not None else 1
+            if self.cache.free_slot_count - self._reserved_slots() \
+                    < need_slots:
+                break
             self.waiting.popleft()
             slot = self.cache.alloc_slot(len(toks), shared, lazy=True)
             st.computed = len(shared) * self.cache.page_size
@@ -219,6 +357,10 @@ class Scheduler:
             toks = st.tokens()
             if not self.cache.can_admit(len(toks)):
                 break
+            need_slots = st.group.width if st.group is not None else 1
+            if self.cache.free_slot_count - self._reserved_slots() \
+                    < need_slots:
+                break
             self.waiting.popleft()
             slot = self.cache.alloc_slot(len(toks))
             st.computed = st.target
@@ -245,6 +387,14 @@ class Scheduler:
             stream = st.tokens()
             remaining = st.req.max_new_tokens - len(st.generated)
             n_draft = min(spec_k, max(0, remaining - 1))
+            if st.group is not None and st.group.beam:
+                # Beam branches take their next token from the reorder
+                # (top-2k expansion), not from acceptance against a
+                # draft - speculation is auto-disabled inside beam
+                # groups.  Parallel-sampling branches keep exact-accept
+                # speculation: each branch verifies like an independent
+                # seeded request.
+                n_draft = 0
             drafts = spec.propose_draft(stream, n_draft) if n_draft else []
             out.append(DecodeStep(slot=slot, tokens=[stream[-1]] + drafts,
                                   drafts=drafts))
@@ -254,6 +404,7 @@ class Scheduler:
     def record_token(self, slot: int, tok: int) -> str:
         """Append a generated token; returns "running"|"eos"|"length"."""
         st = self.running[slot]
+        self.tokens_emitted += 1
         st.generated.append(tok)
         st._stream.append(tok)
         if st.req.eos_id is not None and tok == st.req.eos_id:
@@ -279,13 +430,41 @@ class Scheduler:
 
         Re-queued at the *front*: oldest work resumes first, and a
         preempted sequence never starves behind new arrivals.
+
+        A slot belonging to a sequence group evicts the *whole group*
+        (branch streams diverge right after the shared prefill, so no
+        single replay prefill could restore them all).
         """
-        st = self.running.pop(slot)
+        st = self.running[slot]
+        if st.group is not None:
+            self.preempt_group(st.group)
+            return
+        self.running.pop(slot)
         st.preemptions += 1
         st.computed = 0
         st.decoding = False
         self.cache.free_slot(slot)
         self.waiting.appendleft(st)
+
+    def preempt_group(self, group: SequenceGroup) -> None:
+        """Evict every live branch of ``group`` and re-queue the request
+        at the front.  All branch progress is dropped: regeneration is
+        deterministic (sampling keys are fold_in(seed, branch) x
+        position, beam scores are pure functions of the logits), so the
+        group re-derives the same completions after re-admission,
+        resuming from whatever shared prefix pages survive in the
+        cache's LRU."""
+        for s, st in list(self.running.items()):
+            if st.group is group:           # branches + mid-prefill parent
+                self.running.pop(s)
+                self.cache.free_slot(s)
+        group.slots.clear()
+        group.finished.clear()
+        group.fanned_out = False
+        group.prefix_pages = ()
+        group.next_branch = 0
+        group.preemptions += 1
+        self.waiting.appendleft(_Running(group.req, [], group=group))
 
     def retire(self, slot: int, reason: str) -> FinishedRequest:
         st = self.running.pop(slot)
@@ -293,3 +472,216 @@ class Scheduler:
         return FinishedRequest(rid=st.req.rid, prompt=st.req.prompt,
                                tokens=st.generated, reason=reason,
                                preemptions=st.preemptions)
+
+    def finish(self, slot: int, reason: str) -> FinishedRequest | None:
+        """Group-aware retirement: a plain sequence retires immediately;
+        a group branch records its completion, and the group's single
+        FinishedRequest is emitted only when the whole group is done."""
+        st = self.running[slot]
+        if st.group is None:
+            return self.retire(slot, reason)
+        group = st.group
+        self._retire_branch(slot, reason)
+        return self._maybe_retire_group(group)
+
+    # ------------------------------------------------- sequence groups
+    def fan_out(self, slot: int) -> list[tuple[int, int]]:
+        """Fan a freshly-prefilled parallel-sampling group parent out
+        into its ``width`` branches: the parent becomes branch 0 and
+        each extra branch forks the parent's slot (COW - one page-table
+        row + refcount bumps, zero KV copied).  Must be called right
+        after the final prefill chunk completes, *before* any first
+        token is recorded: at that instant the slot's pages hold
+        exactly the prompt KV, so every branch shares all of it.
+        Returns [(slot, branch)] for all width branches, parent first.
+        """
+        st = self.running[slot]
+        group = st.group
+        assert group is not None and not group.beam
+        assert not group.fanned_out
+        assert st.decoding and st.computed == st.target, \
+            "fan_out before prefill completed"
+        self._record_prefix_pages(group, slot)
+        st.branch = 0
+        group.slots = {slot}
+        out = [(slot, 0)]
+        for b in range(1, group.width):
+            ns = self.cache.fork(slot)
+            self.forks += 1
+            bst = _Running(st.req, [], seq_no=self._seq_no,
+                           computed=st.computed, decoding=True,
+                           group=group, branch=b)
+            self._seq_no += 1
+            self.running[ns] = bst
+            group.slots.add(ns)
+            out.append((ns, b))
+        group.fanned_out = True
+        group.next_branch = group.width
+        return out
+
+    def fan_out_beam(self, slot: int,
+                     candidates: list[tuple[int, float]]) \
+            -> FinishedRequest | None:
+        """First beam expansion, from the prompt's last-position logits:
+        ``candidates`` is the top-2*width (token, logprob) list, sorted
+        by logprob descending.  Selects up to ``width`` continuations
+        (eos candidates finish as 1-token hypotheses and take no slot);
+        the best continuation keeps the parent's slot, the rest fork it.
+        Returns the group's FinishedRequest if it already converged
+        (e.g. beam_width 1 and the top token is eos).
+        """
+        st = self.running[slot]
+        group = st.group
+        assert group is not None and group.beam and not group.fanned_out
+        assert st.decoding and st.computed == st.target
+        self._record_prefix_pages(group, slot)
+        group.fanned_out = True
+        # Branch id 0 is reserved for the continuation that keeps the
+        # parent slot (_beam_place hands it st.branch == 0); eos
+        # hypotheses and forked children draw fresh ids from 1 up so
+        # completions never collide on branch id.
+        group.next_branch = 1
+        live, fin = self._beam_select(
+            group, [(lp, 0, tok, slot) for tok, lp in candidates],
+            st.req.eos_id)
+        for cum, _, tok, _ in fin:
+            self.tokens_emitted += 1
+            group.finished.append(Completion(
+                [tok], group.next_branch, "eos", group.score(cum, 1)))
+            group.next_branch += 1
+        group.slots = {slot}
+        if not live:
+            self.drop_branch(slot)
+        else:
+            self._beam_place(group, {slot: st}, live)
+        return self._maybe_retire_group(group)
+
+    def beam_reorder(self, group: SequenceGroup,
+                     per_slot: dict[int, list[tuple[int, float]]]) \
+            -> FinishedRequest | None:
+        """One beam step: every live branch contributes its top-2*width
+        (token, logprob) candidates (scored at the branch's last
+        committed position); the 2k expansion is ranked by cumulative
+        logprob, eos candidates finish as hypotheses, and the top
+        ``width`` continuations become the new beams - reordered over
+        the slots via fork (a parent keeping several children) and
+        free (a childless parent).  Candidate ordering is a pure
+        function of (score, branch id, token), never of slot numbers,
+        so beam results are invariant to slot permutation.
+        Returns the group's FinishedRequest when it converges
+        (``width`` finished hypotheses, or no live branch left).
+        """
+        states = {s: self.running[s] for s in group.slots}
+        cands = []
+        for s, st in states.items():
+            for tok, lp in per_slot[s]:
+                cands.append((st.cum_logprob + lp, st.branch, tok, s))
+        cands.sort(key=lambda c: (-c[0], c[1], c[2]))
+        live, fin = self._beam_select(group, cands, group.req.eos_id)
+        for cum, _, tok, s in fin:
+            st = states[s]
+            self.tokens_emitted += 1
+            group.finished.append(Completion(
+                st.generated + [tok], group.next_branch, "eos",
+                group.score(cum, len(st.generated) + 1)))
+            group.next_branch += 1
+        if len(group.finished) >= group.width:
+            live = []
+        # Reorder: drop childless parents first (frees slots), then fork
+        # multi-child parents into them.
+        keep = {c[3] for c in live}
+        for s in sorted(group.slots - keep):
+            self.drop_branch(s)
+        self._beam_place(group, states, live)
+        return self._maybe_retire_group(group)
+
+    def _beam_select(self, group, cands, eos_id):
+        """Split ranked candidates into up-to-width continuations and
+        newly finished (eos) hypotheses."""
+        live, fin = [], []
+        for cand in cands:
+            if eos_id is not None and cand[2] == eos_id:
+                if len(group.finished) + len(fin) < group.width:
+                    fin.append(cand)
+            elif len(live) < group.width:
+                live.append(cand)
+        return live, fin
+
+    def _beam_place(self, group, states, live):
+        """Materialize the selected continuations: per parent (in global
+        candidate order), the first child continues in the parent's
+        slot and keeps its branch id; every further child forks the
+        parent *before* its token is recorded (the carry token's KV is
+        already committed, the new token's is not - so the fork shares
+        the full stream so far) and takes a fresh branch id."""
+        by_parent: dict[int, list[tuple[float, int, int]]] = {}
+        for cum, _, tok, s in live:
+            bid = states[s].branch if s not in by_parent \
+                else group.next_branch
+            if s in by_parent:
+                group.next_branch += 1
+            by_parent.setdefault(s, []).append((cum, bid, tok))
+        for s, children in sorted(by_parent.items()):
+            st = states[s]
+            base_gen = list(st.generated)
+            for cum, bid, tok in children[1:]:
+                ns = self.cache.fork(s)
+                self.forks += 1
+                self.tokens_emitted += 1
+                nst = _Running(st.req, base_gen + [tok],
+                               seq_no=self._seq_no, computed=st.computed,
+                               decoding=True, group=group, branch=bid,
+                               cum_logprob=cum)
+                self._seq_no += 1
+                self.running[ns] = nst
+                group.slots.add(ns)
+                if len(nst.generated) >= st.req.max_new_tokens:
+                    self._retire_branch(ns, "length")
+            cum, bid, tok = children[0]
+            st.cum_logprob = cum
+            status = self.record_token(s, tok)
+            if status != "running":
+                self._retire_branch(s, status)
+
+    def _record_prefix_pages(self, group, slot):
+        plen = len(group.req.prompt)
+        group.prefix_pages = self.cache.slot_pages(slot)[
+            :plen // self.cache.page_size]
+
+    def _retire_branch(self, slot: int, reason: str) -> None:
+        """Free a finished branch's slot and record its completion."""
+        st = self.running.pop(slot)
+        group = st.group
+        group.slots.discard(slot)
+        self.cache.free_slot(slot)
+        group.finished.append(Completion(
+            list(st.generated), st.branch, reason,
+            group.score(st.cum_logprob, len(st.generated))))
+
+    def drop_branch(self, slot: int) -> None:
+        """Free a branch that yields no completion (beam reorder left it
+        childless, or the group retired with surplus live branches)."""
+        st = self.running.pop(slot)
+        st.group.slots.discard(slot)
+        self.cache.free_slot(slot)
+
+    def _maybe_retire_group(self, group: SequenceGroup) \
+            -> FinishedRequest | None:
+        """Emit the group's FinishedRequest once it is done: every
+        branch finished (parallel sampling), or - beam - ``width``
+        hypotheses collected / no live branch left."""
+        done = group.fanned_out and (
+            not group.slots
+            or (group.beam and len(group.finished) >= group.width))
+        if not done:
+            return None
+        for s in sorted(group.slots):       # beam early stop: surplus
+            self.drop_branch(s)
+        comps = sorted(group.finished,
+                       key=(lambda c: (-c.score, c.branch)) if group.ranked
+                       else (lambda c: c.branch))
+        comps = comps[:group.req.n]
+        return FinishedRequest(
+            rid=group.req.rid, prompt=group.req.prompt,
+            tokens=comps[0].tokens, reason=comps[0].reason,
+            preemptions=group.preemptions, completions=comps)

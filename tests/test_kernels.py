@@ -317,3 +317,86 @@ def test_ops_paged_verify_jnp_matches_pallas_and_decode():
     dec = np.asarray(ops.paged_decode_attention(
         q4[:, :1], kp, vp, pt, sl + 1, impl="fa2"))
     np.testing.assert_allclose(one, dec, atol=1e-5)
+
+
+# ------------------------------------ COW fork golden parity (groups)
+def _cow_tables(seed, *, b=2, hkv=2, g=2, d=64, page=8, pages_each=3,
+                kw=1):
+    """Two page-table views of identical KV: ``shared`` aliases one
+    physical page set across both slots (a COW fork before any
+    divergence), ``mat`` backs slot 1 with a materialized byte-for-byte
+    copy into fresh pages (what a non-COW engine would allocate)."""
+    from repro.kernels import paged_prefill as paged_pf
+    rng = np.random.default_rng(seed)
+    num_pages = 2 * pages_each + 2               # room for the copies
+    kp = _rand((num_pages, page, hkv, d), jnp.float32, seed + 1)
+    vp = _rand((num_pages, page, hkv, d), jnp.float32, seed + 2)
+    src = rng.permutation(pages_each).astype(np.int32)       # slot 0 pages
+    dst = (pages_each + rng.permutation(pages_each)).astype(np.int32)
+    kp = paged_pf.copy_pages(kp, jnp.asarray(src), jnp.asarray(dst))
+    vp = paged_pf.copy_pages(vp, jnp.asarray(src), jnp.asarray(dst))
+    shared = jnp.asarray(np.stack([src, src]))
+    mat = jnp.asarray(np.stack([src, dst]))
+    sl = jnp.asarray(
+        rng.integers(1, pages_each * page - kw + 1, b).astype(np.int32))
+    q = _rand((b, hkv, g, kw, d), jnp.float32, seed + 3)
+    return q, kp, vp, shared, mat, sl
+
+
+@pytest.mark.parametrize("use_hfa", [False, True])
+def test_paged_decode_forked_table_bit_equal_materialized(use_hfa):
+    """A decode step over a COW-shared page table (fork: two slots, one
+    physical page set) must be BIT-equal to the same step over a
+    materialized copy - page aliasing is invisible to the kernel, on
+    the fp and FIX16 H-FA rails alike.  This is what makes sequence
+    groups free: a fork costs refcounts, never numerics."""
+    from repro.kernels import paged_decode as paged
+    q, kp, vp, shared, mat, sl = _cow_tables(201)
+    q1 = q[:, :, :, 0, :]
+    o_s, m_s, l_s = paged.paged_decode_partial_pallas(
+        q1, kp, vp, shared, sl, use_hfa=use_hfa, interpret=True)
+    o_m, m_m, l_m = paged.paged_decode_partial_pallas(
+        q1, kp, vp, mat, sl, use_hfa=use_hfa, interpret=True)
+    np.testing.assert_array_equal(np.asarray(o_s), np.asarray(o_m))
+    np.testing.assert_array_equal(np.asarray(m_s), np.asarray(m_m))
+    np.testing.assert_array_equal(np.asarray(l_s), np.asarray(l_m))
+
+
+@pytest.mark.parametrize("use_hfa", [False, True])
+def test_paged_verify_forked_table_bit_equal_materialized(use_hfa):
+    """Same contract for the K-token verify walk: a speculative step
+    over a forked (COW-shared) table == the materialized copy, bit for
+    bit, fa2 + hfa."""
+    from repro.kernels import paged_verify as paged_ver
+    kw = 3
+    q, kp, vp, shared, mat, sl = _cow_tables(203, kw=kw)
+    cl = jnp.full((2,), kw, jnp.int32)
+    # KV for the verify columns is pre-written in the pools; aliasing
+    # covers it identically by construction of _cow_tables.
+    o_s, m_s, l_s = paged_ver.paged_verify_partial_pallas(
+        q, kp, vp, shared, sl, cl, use_hfa=use_hfa, interpret=True)
+    o_m, m_m, l_m = paged_ver.paged_verify_partial_pallas(
+        q, kp, vp, mat, sl, cl, use_hfa=use_hfa, interpret=True)
+    np.testing.assert_array_equal(np.asarray(o_s), np.asarray(o_m))
+    np.testing.assert_array_equal(np.asarray(m_s), np.asarray(m_m))
+    np.testing.assert_array_equal(np.asarray(l_s), np.asarray(l_m))
+
+
+@pytest.mark.parametrize("impl", ["fa2", "hfa_pallas"])
+def test_ops_paged_jnp_forked_table_bit_equal_materialized(impl):
+    """The jnp gather paths (CPU serving) honor the same aliasing
+    contract end to end through ops.paged_{decode,verify}_attention."""
+    q, kp, vp, shared, mat, sl = _cow_tables(207, kw=2)
+    b, hkv, g, kw, d = q.shape
+    q4 = jnp.swapaxes(q.reshape(b, hkv * g, kw, d), 1, 2)
+    cl = jnp.full((b,), kw, jnp.int32)
+    v_s = np.asarray(ops.paged_verify_attention(q4, kp, vp, shared, sl, cl,
+                                                impl=impl))
+    v_m = np.asarray(ops.paged_verify_attention(q4, kp, vp, mat, sl, cl,
+                                                impl=impl))
+    np.testing.assert_array_equal(v_s, v_m)
+    d_s = np.asarray(ops.paged_decode_attention(q4[:, :1], kp, vp, shared,
+                                                sl, impl=impl))
+    d_m = np.asarray(ops.paged_decode_attention(q4[:, :1], kp, vp, mat,
+                                                sl, impl=impl))
+    np.testing.assert_array_equal(d_s, d_m)

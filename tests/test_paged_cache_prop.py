@@ -1,22 +1,31 @@
 """Property-based tests for PagedKVCache sharing semantics.
 
 Drives the block pool through random admit / chunked-prefill / append /
-fork / free traces - including prefix claiming and copy-on-write - and
-asserts after every op that ``check_invariants`` holds (which includes
-refcount conservation: stored per-page refcounts must equal the number
-of page-table references across slots) and that pages never leak:
-free + cached + owned always partitions the pool.
+fork / free traces - including prefix claiming, copy-on-write,
+speculative commit/rollback, and forks taken *inside* the verify
+commit/rollback window - and asserts after every op that
+``check_invariants`` holds (which includes refcount conservation:
+stored per-page refcounts must equal the number of page-table
+references across slots) and that pages never leak: free + cached +
+owned always partitions the pool.
+
+The traces run through hypothesis when it is installed and through a
+fixed battery of numpy-seeded manual traces otherwise (the CI container
+ships hypothesis; the dev container may not) - the driver is identical,
+so the invariants are exercised either way.
 
 Pure host logic, no jax.
 """
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip(
-    "hypothesis", reason="property tests need the optional 'hypothesis' dep")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # manual traces only
+    HAVE_HYPOTHESIS = False
 
-from repro.serving import PagedKVCache  # noqa: E402
+from repro.serving import PagedKVCache
 
 PAGE = 4
 NUM_PAGES = 24
@@ -27,9 +36,22 @@ PAGES_PER_SEQ = 6
 # which makes hash-chain prefix hits (and thus page sharing) common.
 BASE = list(range(100, 100 + PAGES_PER_SEQ * PAGE))
 
-op_strategy = st.lists(
-    st.tuples(st.integers(0, 5), st.integers(0, 10 ** 6)),
-    min_size=1, max_size=80)
+N_OPS = 8          # dispatch table size below
+
+if HAVE_HYPOTHESIS:
+    op_strategy = st.lists(
+        st.tuples(st.integers(0, N_OPS - 1), st.integers(0, 10 ** 6)),
+        min_size=1, max_size=80)
+
+
+def manual_traces(n_traces, max_len, n_ops, seed=0):
+    """Numpy stand-in for the hypothesis op_strategy: n_traces random
+    (op, seed) lists."""
+    rng = np.random.default_rng(seed)
+    for _ in range(n_traces):
+        length = int(rng.integers(1, max_len + 1))
+        yield [(int(rng.integers(0, n_ops)), int(rng.integers(0, 10 ** 6)))
+               for _ in range(length)]
 
 
 class _Driver:
@@ -102,12 +124,17 @@ class _Driver:
             self.c.register_pages(slot, self.streams[slot])
 
     def fork(self, rng):
-        if not self.streams or not self.c.free_slot_count:
+        if not self.c.free_slot_count:
             return
-        slots = list(self.streams)
+        # seq_lens == 0 is the free-slot sentinel: a lazily-admitted
+        # slot with nothing materialized yet cannot be forked.
+        slots = [s for s in self.streams if int(self.c.seq_lens[s]) >= 1]
+        if not slots:
+            return
         slot = slots[int(rng.integers(len(slots)))]
         new = self.c.fork(slot)
-        self.streams[new] = list(self.streams[slot])
+        self.streams[new] = \
+            list(self.streams[slot][:int(self.c.seq_lens[slot])])
 
     def free(self, rng):
         if not self.streams:
@@ -117,13 +144,65 @@ class _Driver:
         del self.streams[slot]
         self.c.free_slot(slot)
 
+    def spec_verify(self, rng, mid_fork=False):
+        """The engine's verify-step shape: commit KV for c speculative
+        columns past the materialized stream, accept a random prefix,
+        roll the rest back - optionally taking a fork *inside* the
+        commit/rollback window, truncated at its own accepted length
+        (contract point 5 in repro.serving.paged_cache)."""
+        slots = [s for s in self.streams
+                 if int(self.c.seq_lens[s]) == len(self.streams[s])]
+        if not slots:
+            return
+        slot = slots[int(rng.integers(len(slots)))]
+        sl = int(self.c.seq_lens[slot])
+        c = int(rng.integers(1, 5))
+        if not self.c.ensure_capacity(slot, sl + c):
+            c = max(1, min(c, self.c.writable_token_capacity(slot) - sl))
+            if sl + c > self.c.writable_token_capacity(slot) or c < 1:
+                return
+        drafts = rng.integers(0, 50, c).tolist()
+        self.c.mark_prefilled(slot, sl + c)      # commit before acceptance
+        fork_slot = None
+        if mid_fork and self.c.free_slot_count:
+            # Fork inside the window: the fork's accepted length is
+            # chosen independently of the parent's (a parallel branch
+            # fanning out of the step's accepted prefix).
+            a_fork = sl + int(rng.integers(1, c + 1))
+            fork_slot = self.c.fork(slot, a_fork)
+            self.streams[fork_slot] = \
+                self.streams[slot][:sl] + drafts[:a_fork - sl]
+            assert int(self.c.seq_lens[fork_slot]) == a_fork
+            # truncated fork: shares exactly the pre-rollback pages
+            # covering its accepted prefix, nothing past them
+            assert self.c.slot_pages(fork_slot) == \
+                self.c.slot_pages(slot)[:self.c.pages_for(a_fork)]
+            self.c.check_invariants()            # refcount conservation
+        a = int(rng.integers(1, c + 1))          # parent's accepted prefix
+        self.streams[slot] = self.streams[slot] + drafts[:a]
+        if a < c:
+            self.c.rollback(slot, sl + a)
+        if fork_slot is not None:
+            # the rollback dropped only the parent's references: every
+            # page the fork reads is still owned
+            for p in self.c.slot_pages(fork_slot):
+                assert self.c.refcount(p) >= 1
+            self.c.register_pages(fork_slot, self.streams[fork_slot])
+        self.c.register_pages(slot, self.streams[slot])
 
-@settings(max_examples=60, deadline=None)
-@given(ops=op_strategy)
-def test_paged_cache_random_share_trace(ops):
+    def spec_verify_mid_fork(self, rng):
+        self.spec_verify(rng, mid_fork=True)
+
+
+def _dispatch(d):
+    return [d.admit, d.prefill_chunk, d.append, d.append, d.fork,
+            d.free, d.spec_verify, d.spec_verify_mid_fork]
+
+
+def _run_share_trace(ops):
     d = _Driver()
-    dispatch = [d.admit, d.prefill_chunk, d.append, d.append, d.fork,
-                d.free]
+    dispatch = _dispatch(d)
+    assert len(dispatch) == N_OPS
     for code, seed in ops:
         dispatch[code](np.random.default_rng(seed))
         d.check()
@@ -135,9 +214,20 @@ def test_paged_cache_random_share_trace(ops):
     assert d.c.free_slot_count == MAX_BATCH
 
 
-@settings(max_examples=30, deadline=None)
-@given(seed=st.integers(0, 10 ** 6))
-def test_refcount_conservation_under_fork_churn(seed):
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(ops=op_strategy)
+    def test_paged_cache_random_share_trace(ops):
+        _run_share_trace(ops)
+
+
+def test_paged_cache_share_trace_manual():
+    """No-hypothesis fallback: the same driver over 150 numpy traces."""
+    for ops in manual_traces(150, 80, N_OPS, seed=1):
+        _run_share_trace(ops)
+
+
+def _run_fork_churn(seed):
     """Heavy fork/free/COW churn: sum of refcounts always equals the
     total number of slot page-table references (checked inside
     check_invariants), and COW never splits a page both slots still
@@ -148,7 +238,14 @@ def test_refcount_conservation_under_fork_churn(seed):
     for _ in range(60):
         op = rng.random()
         if op < 0.35 and c.free_slot_count and slots:
-            slots.append(c.fork(slots[int(rng.integers(len(slots)))]))
+            src = slots[int(rng.integers(len(slots)))]
+            if rng.random() < 0.5:
+                slots.append(c.fork(src))
+            else:                       # truncated fork (verify window)
+                n = int(rng.integers(1, int(c.seq_lens[src]) + 1))
+                nslot = c.fork(src, n)
+                assert int(c.seq_lens[nslot]) == n
+                slots.append(nslot)
         elif op < 0.7 and slots:
             s = slots[int(rng.integers(len(slots)))]
             if c.ensure_append_capacity(s):
@@ -163,3 +260,91 @@ def test_refcount_conservation_under_fork_churn(seed):
         c.free_slot(s)
     c.check_invariants()
     assert c.available_page_count == NUM_PAGES
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 10 ** 6))
+    def test_refcount_conservation_under_fork_churn(seed):
+        _run_fork_churn(seed)
+
+
+def test_refcount_conservation_under_fork_churn_manual():
+    for seed in range(40):
+        _run_fork_churn(seed)
+
+
+# ------------------------------- fork x rollback window regressions
+def test_fork_in_verify_window_sees_pre_rollback_pages():
+    """ROADMAP sharp edge, pinned: a fork taken between the verify
+    step's ``mark_prefilled(sl + c)`` and ``rollback(sl + used)`` must
+    (a) share exactly the pre-rollback pages covering its truncated
+    length, (b) survive the parent's rollback with refcounts conserved,
+    and (c) never inherit references on pages the rollback frees."""
+    c = PagedKVCache(NUM_PAGES, PAGE, MAX_BATCH, PAGES_PER_SEQ)
+    stream = BASE[:6]                        # 1 full page + partial tail
+    slot = c.alloc_slot(len(stream))
+    c.register_pages(slot, stream)
+    assert c.ensure_capacity(slot, 6 + 4)    # commit 4 draft columns
+    c.mark_prefilled(slot, 10)               # seq_lens over-counts: 10
+    pre_pages = c.slot_pages(slot)           # 3 pages (pos 8,9 on page 2)
+    assert len(pre_pages) == 3
+    fork = c.fork(slot, 7)                   # accepted length: sl + 1
+    assert int(c.seq_lens[fork]) == 7
+    assert c.slot_pages(fork) == pre_pages[:2]
+    assert c.refcount(pre_pages[2]) == 1, "fork must not ref junk pages"
+    c.check_invariants()                     # refcount conservation
+    c.rollback(slot, 7)                      # reject 3 columns
+    c.check_invariants()
+    # the page the rollback dropped is free again; shared pages survive
+    assert c.refcount(pre_pages[2]) == 0
+    assert c.refcount(pre_pages[0]) == 2 and c.refcount(pre_pages[1]) == 2
+    c.free_slot(slot)
+    c.free_slot(fork)
+    c.check_invariants()
+    assert c.available_page_count == NUM_PAGES
+
+
+@pytest.mark.parametrize("via", ["rollback", "fork"])
+def test_rolled_over_page_is_rehashed_on_register(via):
+    """A rollback (or truncated fork) across a page boundary must
+    re-trim the hash chain: the rolled-over page's content is later
+    overwritten, and register_pages must re-hash it - the NEW prefix
+    becomes claimable and the stale one does not."""
+    c = PagedKVCache(NUM_PAGES, PAGE, MAX_BATCH, PAGES_PER_SEQ)
+    old = [1, 2, 3, 4, 5, 6, 7, 8]           # 2 full pages
+    slot = c.alloc_slot(len(old))
+    c.register_pages(slot, old)
+    assert len(c._slot_chain[slot]) == 2
+    if via == "rollback":
+        c.rollback(slot, 5)                  # back across page 1's start
+        probe = slot
+        probe_stream = old[:5]
+    else:
+        probe = c.fork(slot, 5)              # truncated fork, same point
+        probe_stream = old[:5]
+        c.free_slot(slot)                    # parent gone; fork owns page
+    assert len(c._slot_chain[probe]) == 1, "chain not re-trimmed"
+    # overwrite positions 5..7 with different tokens and publish
+    new = probe_stream + [90, 91, 92]
+    assert c.ensure_capacity(probe, 8)
+    c.mark_prefilled(probe, 8)
+    assert c.register_pages(probe, new) >= 1, \
+        "rolled-over page was never re-hashed"
+    c.check_invariants()
+    # the NEW prefix is claimable, the stale (pre-rollback) one is not
+    assert len(c.lookup_prefix(new + [0])) == 2
+    assert len(c.lookup_prefix(old + [0])) == 1
+    c.free_slot(probe)
+    c.check_invariants()
+
+
+def test_truncated_fork_rejects_bad_lengths():
+    c = PagedKVCache(NUM_PAGES, PAGE, MAX_BATCH, PAGES_PER_SEQ)
+    slot = c.alloc_slot(5)
+    with pytest.raises(AssertionError):
+        c.fork(slot, 0)
+    with pytest.raises(AssertionError):
+        c.fork(slot, 6)
+    c.free_slot(slot)
+    c.check_invariants()

@@ -1,0 +1,278 @@
+"""Conformance suite: parallel sampling + beam search over COW forks.
+
+The contracts this file pins down:
+
+  (a) *n-parallel sampling is branch-for-branch token-identical to n
+      independent single-slot requests* submitted with the derived
+      per-branch seeds (``branch_seed(seed, b)``), on both the fp and
+      ``use_hfa`` attention rails, with and without speculation, and
+      under 2-way tensor parallelism (subprocess, simulated mesh) -
+      the fan-out over ``PagedKVCache.fork`` must be invisible in the
+      tokens.
+  (b) *Beam width 1 equals greedy*: the degenerate beam reduces to the
+      engine's plain argmax stream.
+  (c) *Beam results are invariant to slot permutation*: candidate
+      ordering is a function of (score, branch, token), never of the
+      slot numbers the branches happen to occupy.
+  (d) *Group eviction is lossless*: preemption drops all branch
+      progress, and the deterministic re-derivation yields the same
+      completions.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.serving import (InvalidRequestError, Request, SamplingParams,
+                           ServingEngine, branch_seed)
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.fixture(scope="module")
+def qwen_smoke():
+    from repro.configs import get_config
+    from repro.models.model import build_model
+    cfg = get_config("qwen3-1.7b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def qwen_hfa(qwen_smoke):
+    from repro.models.model import build_model
+    cfg, _, params = qwen_smoke
+    cfg = dataclasses.replace(cfg, attn_impl="hfa")
+    return cfg, build_model(cfg), params
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("max_batch", 6)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_seq", 64)
+    return ServingEngine(model, params, **kw)
+
+
+def _run_one(model, params, req, **kw):
+    engine = _engine(model, params, **kw)
+    [fin] = engine.run([(0, req)])
+    engine.cache.check_invariants()
+    return fin, engine
+
+
+# --------------------------------------------- (a) parallel sampling
+@pytest.mark.parametrize("rail", ["fa2", "hfa"])
+def test_parallel_sampling_matches_independent_requests(
+        qwen_smoke, qwen_hfa, rail):
+    """n=4 branches of one group == 4 independent requests with the
+    derived branch seeds, token for token and branch for branch."""
+    cfg, model, params = qwen_smoke if rail == "fa2" else qwen_hfa
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(1, cfg.vocab_size, 6).tolist()
+    sp = SamplingParams(temperature=0.8, top_k=8, seed=314)
+    fin, engine = _run_one(model, params, Request(
+        rid=0, prompt=prompt, max_new_tokens=6, sampling=sp, n=4))
+    assert fin.completions is not None and len(fin.completions) == 4
+    assert [c.branch for c in fin.completions] == [0, 1, 2, 3]
+    assert engine.stats["groups"] == 1 and engine.stats["forks"] == 3
+    assert fin.tokens == fin.completions[0].tokens
+    for c in fin.completions:
+        solo, _ = _run_one(model, params, Request(
+            rid=1, prompt=prompt, max_new_tokens=6,
+            sampling=dataclasses.replace(
+                sp, seed=branch_seed(sp.seed, c.branch))))
+        assert c.tokens == solo.tokens, (rail, c.branch)
+
+
+def test_parallel_sampling_composes_with_speculation(qwen_smoke):
+    """Exact-accept speculation runs per branch: the group's streams
+    are unchanged by spec_k (the lossless-acceptance contract applied
+    branch-wise)."""
+    cfg, model, params = qwen_smoke
+    rng = np.random.default_rng(13)
+    prompt = rng.integers(1, cfg.vocab_size, 5).tolist()
+    sp = SamplingParams(temperature=0.7, top_k=4, seed=99)
+    req = lambda: Request(rid=0, prompt=prompt, max_new_tokens=12,  # noqa
+                          sampling=sp, n=3)
+    plain, _ = _run_one(model, params, req())
+    spec, eng = _run_one(model, params, req(), spec_k=3)
+    assert [c.tokens for c in spec.completions] == \
+        [c.tokens for c in plain.completions]
+    assert eng.stats["draft_tokens"] > 0, "never speculated"
+
+
+def test_best_of_returns_top_n_by_score(qwen_smoke):
+    """best_of=4, n=2 returns the 2 best of the 4 branch streams by
+    length-normalized cumulative logprob - the same streams the full
+    n=4 group produces."""
+    cfg, model, params = qwen_smoke
+    rng = np.random.default_rng(17)
+    prompt = rng.integers(1, cfg.vocab_size, 6).tolist()
+    sp = SamplingParams(temperature=0.9, top_k=8, seed=7)
+    full, _ = _run_one(model, params, Request(
+        rid=0, prompt=prompt, max_new_tokens=5, sampling=sp, n=4,
+        best_of=4))
+    top2, _ = _run_one(model, params, Request(
+        rid=0, prompt=prompt, max_new_tokens=5, sampling=sp, n=2,
+        best_of=4))
+    assert len(top2.completions) == 2
+    # ranked: scores descend, and equal the best of the full set
+    want = sorted(full.completions, key=lambda c: (-c.score, c.branch))[:2]
+    assert [(c.branch, c.tokens) for c in top2.completions] == \
+        [(c.branch, c.tokens) for c in want]
+    assert top2.completions[0].score >= top2.completions[1].score
+
+
+def test_parallel_sampling_group_preemption_is_lossless(qwen_smoke):
+    """A group evicted under pool pressure re-derives the identical
+    completions after re-admission (seeded determinism)."""
+    cfg, model, params = qwen_smoke
+    rng = np.random.default_rng(19)
+    prompt = rng.integers(1, cfg.vocab_size, 6).tolist()
+    sp = SamplingParams(temperature=0.8, top_k=4, seed=5)
+    mk = lambda rid: Request(rid=rid, prompt=prompt, max_new_tokens=8,  # noqa
+                             sampling=sp, n=2)
+    calm, _ = _run_one(model, params, mk(0))
+    # tight pool: group + a competing stream force preemptions
+    engine = _engine(model, params, max_batch=4, num_pages=8, max_seq=40)
+    longp = rng.integers(1, cfg.vocab_size, 4).tolist()
+    fins = engine.run([(0, mk(0)), (0, Request(rid=1, prompt=longp,
+                                               max_new_tokens=8))])
+    engine.cache.check_invariants()
+    by_rid = {f.rid: f for f in fins}
+    assert engine.stats["preemptions"] >= 1, "pool never pressured"
+    assert [c.tokens for c in by_rid[0].completions] == \
+        [c.tokens for c in calm.completions]
+
+
+def test_group_width_over_max_batch_rejected(qwen_smoke):
+    """Resource rejection (width over this engine's capacity) finishes
+    as reason="rejected"; contradictory knobs are client misuse and
+    raise InvalidRequestError even through run()."""
+    cfg, model, params = qwen_smoke
+    rng = np.random.default_rng(23)
+    prompt = rng.integers(1, cfg.vocab_size, 4).tolist()
+    engine = _engine(model, params, max_batch=3)
+    with pytest.raises(ValueError):
+        engine.submit(Request(rid=0, prompt=prompt, max_new_tokens=4,
+                              n=4))
+    fins = engine.run([(0, Request(rid=0, prompt=prompt, max_new_tokens=4,
+                                   n=4))])
+    assert fins[0].reason == "rejected"
+    for bad in (Request(rid=1, prompt=prompt, max_new_tokens=4,
+                        beam_width=2, best_of=3),
+                Request(rid=2, prompt=prompt, max_new_tokens=4,
+                        n=3, best_of=2),
+                Request(rid=3, prompt=prompt, max_new_tokens=4,
+                        beam_width=2,
+                        sampling=SamplingParams(temperature=0.5))):
+        with pytest.raises(InvalidRequestError):
+            engine.run([(0, bad)])
+
+
+# ------------------------------------------------------ (b) beam == greedy
+@pytest.mark.parametrize("rail", ["fa2", "hfa"])
+def test_beam_width_one_equals_greedy(qwen_smoke, qwen_hfa, rail):
+    cfg, model, params = qwen_smoke if rail == "fa2" else qwen_hfa
+    rng = np.random.default_rng(29)
+    for trial in range(2):
+        prompt = rng.integers(1, cfg.vocab_size, 5 + trial).tolist()
+        greedy, _ = _run_one(model, params, Request(
+            rid=0, prompt=prompt, max_new_tokens=6))
+        beam, _ = _run_one(model, params, Request(
+            rid=0, prompt=prompt, max_new_tokens=6, beam_width=1))
+        assert beam.completions[0].tokens == greedy.tokens, rail
+        assert beam.tokens == greedy.tokens
+
+
+# ------------------------------------- (c) slot-permutation invariance
+def test_beam_results_invariant_to_slot_permutation(qwen_smoke):
+    """The same beam request must produce identical completions whether
+    its branches land on slots 0..w-1 (alone) or on higher slots
+    (neighbors admitted first): candidate ranking keys are
+    (score, branch, token), never slot ids."""
+    cfg, model, params = qwen_smoke
+    rng = np.random.default_rng(31)
+    prompt = rng.integers(1, cfg.vocab_size, 6).tolist()
+    mk = lambda: Request(rid=9, prompt=prompt, max_new_tokens=5,  # noqa
+                         beam_width=3, n=3)
+    alone, _ = _run_one(model, params, mk())
+    engine = _engine(model, params, max_batch=6)
+    neighbors = [Request(rid=i, prompt=rng.integers(
+        1, cfg.vocab_size, 4 + i).tolist(), max_new_tokens=10)
+        for i in range(2)]
+    # neighbors first: the beam group fans out on permuted slots
+    fins = engine.run([(0, neighbors[0]), (0, neighbors[1]), (1, mk())])
+    engine.cache.check_invariants()
+    shifted = next(f for f in fins if f.rid == 9)
+    assert [(c.tokens, round(c.score, 5)) for c in shifted.completions] \
+        == [(c.tokens, round(c.score, 5)) for c in alone.completions]
+
+
+def test_beam_scores_are_ranked_and_normalized(qwen_smoke):
+    cfg, model, params = qwen_smoke
+    rng = np.random.default_rng(37)
+    prompt = rng.integers(1, cfg.vocab_size, 6).tolist()
+    fin, engine = _run_one(model, params, Request(
+        rid=0, prompt=prompt, max_new_tokens=5, beam_width=4, n=4))
+    assert len(fin.completions) == 4
+    scores = [c.score for c in fin.completions]
+    assert scores == sorted(scores, reverse=True)
+    assert all(s < 0 for s in scores), "logprob scores must be negative"
+    assert engine.stats["beam_steps"] > 0
+
+
+# ----------------------------------------------- (a cont.) under --tp 2
+_TP_CODE = """
+import dataclasses
+import numpy as np
+import jax
+from repro.configs import get_config
+from repro.launch.mesh import make_tp_mesh
+from repro.models.model import build_model
+from repro.serving import Request, SamplingParams, ServingEngine, branch_seed
+
+cfg = get_config("qwen3-1.7b").reduced()
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+rng = np.random.default_rng(41)
+prompt = rng.integers(1, cfg.vocab_size, 6).tolist()
+sp = SamplingParams(temperature=0.8, top_k=8, seed=77)
+
+def run(n, mesh=None, seed=None):
+    engine = ServingEngine(model, params, max_batch=6, page_size=4,
+                           max_seq=48, mesh=mesh)
+    s = sp if seed is None else dataclasses.replace(sp, seed=seed)
+    [fin] = engine.run([(0, Request(rid=0, prompt=prompt, max_new_tokens=5,
+                                    sampling=s, n=n))])
+    engine.cache.check_invariants()
+    return fin
+
+single = run(4)
+tp = run(4, mesh=make_tp_mesh(2))
+assert [c.tokens for c in tp.completions] == \\
+    [c.tokens for c in single.completions], "TP diverged from single shard"
+for c in tp.completions:
+    solo = run(1, mesh=make_tp_mesh(2), seed=branch_seed(77, c.branch))
+    assert solo.tokens == c.tokens, ("tp-independent", c.branch)
+print("TP-PARALLEL-OK")
+"""
+
+
+def test_parallel_sampling_token_identical_under_tp2():
+    """Group bookkeeping is host-side and replicated, so 2-way tensor
+    parallelism must not perturb any branch stream: group-under-TP ==
+    group-single-shard == independent requests under TP."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = REPO_SRC
+    proc = subprocess.run([sys.executable, "-c", _TP_CODE], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "TP-PARALLEL-OK" in proc.stdout

@@ -2,29 +2,37 @@
 
 Extends ``test_paged_cache_prop.py`` one layer up: instead of driving
 the block pool directly, random traces of *engine-shaped* events -
-admit / chunked-prefill / pause / preempt / speculative-accept (with
-rollback) / retire - flow through the real ``Scheduler`` against a real
-``PagedKVCache``, mirroring exactly the bookkeeping ``ServingEngine``
-performs around each jitted call.  After every event:
+admit / admit-group / chunked-prefill / fan-out / pause / preempt /
+group-preempt / speculative-accept (with rollback) / branch-retire /
+beam-reorder / retire - flow through the real ``Scheduler`` against a
+real ``PagedKVCache``, mirroring exactly the bookkeeping
+``ServingEngine`` performs around each jitted call.  After every event:
 
   * ``check_invariants`` holds (refcount conservation, page-set
     partition, hash-table bijection, LRU cap);
   * no slot is double-used: the scheduler's running set and the cache's
-    owned/free slot sets stay mutually consistent;
+    owned/free slot sets stay mutually consistent, and the free pool
+    always covers the group slot reservations;
   * scheduler progress counters and cache ``seq_lens`` agree (a
     decoding slot's KV is always exactly one token behind its stream -
-    the carry token's KV lands during the next verify step).
+    the carry token's KV lands during the next verify step);
+  * sequence-group invariants: live branch slots are running, every
+    branch stream extends the group's prompt, and the full prompt
+    pages recorded at fan-out stay physically shared by every branch
+    (COW never splits a page below the prompt).
 
-Pure host logic, no jax.
+Runs through hypothesis when installed, through a numpy manual-trace
+battery otherwise.  Pure host logic, no jax.
 """
 import numpy as np
-import pytest
 
-hypothesis = pytest.importorskip(
-    "hypothesis", reason="property tests need the optional 'hypothesis' dep")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # manual traces only
+    HAVE_HYPOTHESIS = False
 
-from repro.serving import PagedKVCache, Request, Scheduler  # noqa: E402
+from repro.serving import PagedKVCache, Request, Scheduler
 
 PAGE = 4
 NUM_PAGES = 24
@@ -36,9 +44,20 @@ EOS = 7
 # prefix-cache hits (shared pages at admission) common in the trace.
 BASE = list(range(100, 100 + PAGES_PER_SEQ * PAGE))
 
-op_strategy = st.lists(
-    st.tuples(st.integers(0, 5), st.integers(0, 10 ** 6)),
-    min_size=1, max_size=100)
+N_OPS = 8
+
+if HAVE_HYPOTHESIS:
+    op_strategy = st.lists(
+        st.tuples(st.integers(0, N_OPS - 1), st.integers(0, 10 ** 6)),
+        min_size=1, max_size=100)
+
+
+def manual_traces(n_traces, max_len, n_ops, seed=0):
+    rng = np.random.default_rng(seed)
+    for _ in range(n_traces):
+        length = int(rng.integers(1, max_len + 1))
+        yield [(int(rng.integers(0, n_ops)), int(rng.integers(0, 10 ** 6)))
+               for _ in range(length)]
 
 
 class _Driver:
@@ -64,6 +83,8 @@ class _Driver:
         assert running == set(self.c._slot_pages), \
             "scheduler running set != cache owned-slot set"
         assert not running & set(self.c._free_slots), "slot double-use"
+        assert self.c.free_slot_count >= self.s._reserved_slots(), \
+            "group slot reservation exceeds the free pool"
         for slot, rst in self.s.running.items():
             sl = int(self.c.seq_lens[slot])
             if rst.decoding:
@@ -73,6 +94,31 @@ class _Driver:
             else:
                 assert sl == rst.computed, (slot, sl, rst.computed)
                 assert rst.computed < rst.target
+        self._check_groups()
+
+    def _check_groups(self):
+        groups = {}
+        for slot, rst in self.s.running.items():
+            if rst.group is not None:
+                groups[id(rst.group)] = rst.group
+        for g in groups.values():
+            if not g.fanned_out:
+                continue
+            assert g.slots <= set(self.s.running), "dead branch slot"
+            n_prefix = len(g.req.prompt) // PAGE
+            assert len(g.prefix_pages) == n_prefix
+            for slot in g.slots:
+                rst = self.s.running[slot]
+                assert rst.group is g
+                # branch streams extend the shared prompt
+                assert rst.tokens()[:len(g.req.prompt)] == g.req.prompt
+                # shared-prefix invariant: the full prompt pages stay
+                # physically shared - branches never write below the
+                # prompt, so COW can never have split them
+                assert self.c.slot_pages(slot)[:n_prefix] == \
+                    g.prefix_pages, (slot, g.prefix_pages)
+                for p in g.prefix_pages:
+                    assert self.c.refcount(p) >= 1
 
     # --------------------------------------------------------------- ops
     def submit(self, rng):
@@ -84,6 +130,19 @@ class _Driver:
                               eos_id=EOS))
         self.rid += 1
 
+    def submit_group(self, rng):
+        """Admit-group event: a parallel-sampling or beam request."""
+        n_shared = int(rng.integers(0, len(BASE)))
+        tail = rng.integers(0, 50, int(rng.integers(1, 6))).tolist()
+        prompt = (BASE[:n_shared] + tail)[:PAGES_PER_SEQ * PAGE - 2]
+        width = int(rng.integers(2, MAX_BATCH + 1))
+        kw = {"beam_width": width} if rng.integers(0, 2) \
+            else {"n": width}
+        self.s.submit(Request(rid=self.rid, prompt=prompt,
+                              max_new_tokens=int(rng.integers(1, 7)),
+                              eos_id=EOS, **kw))
+        self.rid += 1
+
     def prefill(self, rng):
         budget = [None, 3, 7, 16][int(rng.integers(0, 4))]
         chunks, _ = self.s.schedule_prefill(budget)
@@ -91,36 +150,63 @@ class _Driver:
             self.s.complete_chunk(ck)
             self.c.register_pages(ck.slot, self.s.running[ck.slot].tokens())
             if ck.is_final:
-                self._record(ck.slot, 1, rng)
+                self._first_tokens(ck.slot, rng)
+
+    def _first_tokens(self, slot, rng):
+        """Engine's _finish_prefills: plain sequences record one sampled
+        token; groups fan out (parallel: width branches + one token
+        each; beam: top-2k root expansion)."""
+        st = self.s.running[slot]
+        if st.group is None:
+            self._record(slot, 1, rng)
+        elif st.group.beam:
+            fr = self.s.fan_out_beam(slot,
+                                     self._beam_cands(st.group.width, rng))
+            if fr is not None:
+                self.finished.append(fr)
+        else:
+            for bslot, _ in self.s.fan_out(slot):
+                self._record(bslot, 1, rng)
+
+    def _beam_cands(self, width, rng):
+        toks = rng.choice(12, size=2 * width, replace=False)
+        lps = -np.sort(rng.random(2 * width))
+        return [(int(t), float(lp)) for t, lp in zip(toks, lps)]
 
     def _capacity_pass(self):
         for slot in self.s.decoding_slots():
             if slot not in self.s.running:
                 continue
-            while not self.c.ensure_append_capacity(slot):
+            while slot in self.s.running and \
+                    not self.c.ensure_append_capacity(slot):
                 at_ceiling = self.c.pages_for(
                     int(self.c.seq_lens[slot]) + 1) > PAGES_PER_SEQ
                 victim = slot if at_ceiling else self.s.choose_victim()
                 self.s.preempt(victim)
-                if victim == slot:
-                    break
 
     def decode(self, rng):
         """One speculative decode step: capacity, draft trim, optimistic
-        KV commit, random acceptance, rollback - the engine's
-        _run_decode without the device call."""
+        KV commit, random acceptance, rollback, beam reorder - the
+        engine's _run_decode without the device call."""
         self._capacity_pass()
         steps = self.s.schedule_decode(self.spec_k)
+        beam_groups = {}
         for step in steps:
             slot = step.slot
             if slot not in self.s.running:
                 continue
+            st = self.s.running[slot]
             sl = int(self.c.seq_lens[slot])
             c = len(step.tokens)
             if c > 1 and not self.c.ensure_capacity(slot, sl + c):
                 c = max(1, min(
                     c, self.c.writable_token_capacity(slot) - sl))
             self.c.mark_prefilled(slot, sl + c)
+            if st.group is not None and st.group.beam:
+                assert c == 1, "speculation not disabled in a beam group"
+                beam_groups[id(st.group)] = st.group
+                self.c.register_pages(slot, st.tokens())
+                continue
             a = int(rng.integers(1, c + 1))      # accepted prefix length
             used = self._record(slot, a, rng)
             if used is None:
@@ -128,17 +214,27 @@ class _Driver:
             if used < c:
                 self.c.rollback(slot, sl + used)
             self.c.register_pages(slot, self.s.running[slot].tokens())
+        for group in beam_groups.values():
+            if not group.slots:
+                continue
+            per_slot = {s: self._beam_cands(group.width, rng)
+                        for s in group.slots}
+            fr = self.s.beam_reorder(group, per_slot)
+            if fr is not None:
+                self.finished.append(fr)
 
     def _record(self, slot, n, rng):
         """Record up to n sampled tokens; returns tokens consumed, or
-        None when the request finished (slot retired)."""
+        None when the sequence finished (slot retired / branch done)."""
         used = 0
         for _ in range(n):
             tok = int(rng.integers(0, 12))        # EOS sometimes
             used += 1
             status = self.s.record_token(slot, tok)
             if status != "running":
-                self.finished.append(self.s.retire(slot, status))
+                fr = self.s.finish(slot, status)
+                if fr is not None:
+                    self.finished.append(fr)
                 return None
         return used
 
@@ -147,6 +243,17 @@ class _Driver:
             return
         slots = sorted(self.s.running)
         self.s.preempt(slots[int(rng.integers(len(slots)))])
+
+    def preempt_group(self, rng):
+        """Group-preempt event: evict a whole live group explicitly."""
+        groups = {}
+        for st in self.s.running.values():
+            if st.group is not None:
+                groups[id(st.group)] = st.group
+        if not groups:
+            return
+        keys = sorted(groups)
+        self.s.preempt_group(groups[keys[int(rng.integers(len(keys)))]])
 
     def pause_probe(self, rng):
         """Pool-pressure pause: schedule prefill with a huge budget while
@@ -162,30 +269,53 @@ class _Driver:
             self.s.complete_chunk(ck)
             self.c.register_pages(ck.slot, self.s.running[ck.slot].tokens())
             if ck.is_final:
-                self._record(ck.slot, 1, rng)
+                self._first_tokens(ck.slot, rng)
 
 
-@settings(max_examples=50, deadline=None)
-@given(ops=op_strategy, spec_k=st.integers(0, 4),
-       max_cached=st.sampled_from([None, 0, 4, 12]))
-def test_scheduler_random_trace(ops, spec_k, max_cached):
+def _run_trace(ops, spec_k, max_cached):
     d = _Driver(spec_k, max_cached)
-    dispatch = [d.submit, d.prefill, d.decode, d.decode, d.preempt,
-                d.pause_probe]
+    dispatch = [d.submit, d.submit_group, d.prefill, d.decode, d.decode,
+                d.preempt, d.preempt_group, d.pause_probe]
+    assert len(dispatch) == N_OPS
     for code, seed in ops:
         dispatch[code](np.random.default_rng(seed))
         d.check()
     # teardown: retire everything; nothing leaks
     for slot in sorted(d.s.running):
-        d.s.retire(slot, "length")
+        if slot not in d.s.running:
+            continue
+        st = d.s.running[slot]
+        if st.group is not None:
+            d.s.drop_branch(slot)
+        else:
+            d.s.retire(slot, "length")
     d.c.check_invariants()
     assert d.c.available_page_count == NUM_PAGES
     assert d.c.free_slot_count == MAX_BATCH
+    for fr in d.finished:
+        if fr.completions is not None:
+            assert 1 <= len(fr.completions) <= MAX_BATCH
+            assert fr.tokens == fr.completions[0].tokens
 
 
-@settings(max_examples=40, deadline=None)
-@given(seed=st.integers(0, 10 ** 6), spec_k=st.integers(1, 4))
-def test_rollback_conserves_pages_and_refcounts(seed, spec_k):
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(ops=op_strategy, spec_k=st.integers(0, 4),
+           max_cached=st.sampled_from([None, 0, 4, 12]))
+    def test_scheduler_random_trace(ops, spec_k, max_cached):
+        _run_trace(ops, spec_k, max_cached)
+
+
+def test_scheduler_trace_manual():
+    """No-hypothesis fallback: the same driver over numpy traces across
+    the spec_k x LRU-cap grid."""
+    cfgs = [(0, None), (1, 4), (2, 12), (4, 0), (3, None)]
+    for i, (spec_k, max_cached) in enumerate(cfgs):
+        for ops in manual_traces(60, 100, N_OPS, seed=100 + i):
+            _run_trace(ops, spec_k, max_cached)
+
+
+def _run_rollback_churn(seed, spec_k):
     """Focused rollback churn: speculative commits that mostly reject
     must never leak a page or corrupt a refcount, including when the
     rolled-back tail pages are shared with a forked sibling."""
@@ -202,6 +332,11 @@ def test_rollback_conserves_pages_and_refcounts(seed, spec_k):
                 break
         c.mark_prefilled(slot, want)
         keep = sl + int(rng.integers(1, want - sl + 1))
+        if rng.random() < 0.3 and c.free_slot_count:
+            # fork INSIDE the commit/rollback window, truncated at the
+            # accepted prefix (contract point 5)
+            forks.append(c.fork(slot, keep))
+            c.check_invariants()
         if keep < want:
             c.rollback(slot, keep)
         c.check_invariants()
@@ -217,3 +352,15 @@ def test_rollback_conserves_pages_and_refcounts(seed, spec_k):
     c.free_slot(slot)
     c.check_invariants()
     assert c.available_page_count == NUM_PAGES
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 10 ** 6), spec_k=st.integers(1, 4))
+    def test_rollback_conserves_pages_and_refcounts(seed, spec_k):
+        _run_rollback_churn(seed, spec_k)
+
+
+def test_rollback_churn_manual():
+    for seed in range(30):
+        _run_rollback_churn(seed, 1 + seed % 4)
