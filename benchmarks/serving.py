@@ -33,8 +33,20 @@ Workloads:
     engine step; ``--smoke`` asserts zero violations and a shared
     fraction above 0.5.
 
+  open-loop: Poisson arrivals through the asyncio streaming front-end
+    (repro.serving.frontend) - requests arrive at ``--rate``/sec
+    regardless of completions, mixed across latency classes per
+    ``--class-mix``, with every ``--cancel-every``-th client abandoning
+    its stream mid-flight.  Reports client-side p50/p99 TTFT and TPOT
+    per class - the SLA scoreboard - and re-checks pool invariants
+    after the cancellations.  This is the workload behind the committed
+    ``BENCH_serving.json`` baseline (see tools/check_bench.py).
+
 Both paths run the identical model + greedy decode; tok/s counts useful
 generated tokens.
+
+``--json PATH`` writes the run's headline metrics as a flat JSON dict -
+the raw material of the CI perf-trajectory gate.
 
 ``--tp N`` switches to the tensor-parallel scoreboard: the same paged
 workload runs single-shard and with the KV pools KV-head-sharded over an
@@ -53,13 +65,26 @@ jax only after argument parsing and sets
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
 
-# jax-free import (serve.py defers its own jax import past argparse):
-# shares the pre-jax-init simulated-device bootstrap for --tp runs.
+# jax-free imports (serve.py / serve_async.py defer their own jax import
+# past argparse): shares the pre-jax-init simulated-device bootstrap for
+# --tp runs and the open-loop workload helpers.
 from repro.launch.serve import ensure_host_devices
+from repro.launch.serve_async import parse_class_mix, poisson_gaps
+
+
+def _write_json(path: str | None, metrics: dict) -> None:
+    """Persist a run's headline metrics (tools/check_bench.py input)."""
+    if not path:
+        return
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(metrics, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"metrics -> {path}")
 
 
 def make_workload(n, prompt_len, vocab, seed=0):
@@ -242,7 +267,8 @@ def main():
     ap.add_argument("--full", action="store_true",
                     help="full-size config (default: reduced smoke scale)")
     ap.add_argument("--workload",
-                    choices=("churn", "shared-prefix", "parallel-sample"),
+                    choices=("churn", "shared-prefix", "parallel-sample",
+                             "open-loop"),
                     default="churn")
     ap.add_argument("--n", type=int, default=16,
                     help="total requests (churn/shared-prefix) / sampled "
@@ -282,6 +308,20 @@ def main():
     ap.add_argument("--decode-len", type=int, default=0,
                     help="fixed per-request decode budget (0 = the "
                          "workload's randomized 4..16/4..24 budgets)")
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="Poisson arrival rate, requests/sec "
+                         "(open-loop; <= 0: all arrive at t=0)")
+    ap.add_argument("--class-mix", type=parse_class_mix,
+                    default="interactive=0.25,standard=0.5,batch=0.25",
+                    help="latency-class weights (open-loop), e.g. "
+                         "interactive=0.5,standard=0.3,batch=0.2")
+    ap.add_argument("--cancel-every", type=int, default=0,
+                    help="every k-th open-loop client abandons its "
+                         "stream after --cancel-after tokens (0 = never)")
+    ap.add_argument("--cancel-after", type=int, default=4)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the run's headline metrics as JSON "
+                         "(the tools/check_bench.py input)")
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel scoreboard: run the paged "
                          "workload single-shard AND with the KV pools "
@@ -299,7 +339,17 @@ def main():
     if args.tp < 1:
         ap.error("--tp must be >= 1")
     ensure_host_devices(args.tp)
-    if args.smoke and args.workload != "parallel-sample":
+    if isinstance(args.class_mix, str):      # argparse skips the default
+        args.class_mix = parse_class_mix(args.class_mix)
+    if args.workload == "open-loop" and args.smoke:
+        args.full = False
+        args.n = min(args.n, 8)
+        args.rate = 50.0
+        args.decode_len = args.decode_len or 8
+        if args.cancel_every == 0:
+            args.cancel_every = 3
+    if args.smoke and args.workload not in ("parallel-sample",
+                                            "open-loop"):
         args.workload = "shared-prefix"
         args.full = False
         args.n = min(args.n, 9)
@@ -342,6 +392,8 @@ def main():
         cfg = cfg.reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    if args.workload == "open-loop":
+        return _run_open_loop(model, params, args)
     if args.workload == "parallel-sample":
         return _run_parallel_sample(model, params, args)
     if args.workload == "shared-prefix":
@@ -399,6 +451,22 @@ def main():
               f"{stats['rollbacks']} rollbacks")
     print(f"speedup paged/dense: {p_tps / d_tps:.2f}x")
 
+    # Structural metrics (token/page/step counts) are deterministic for
+    # a fixed workload+seed; tok/s metrics are wall-clock (check_bench
+    # applies loose tolerances to those).
+    metrics = {
+        "workload": args.workload,
+        "dense_tok_s": d_tps,
+        "paged_tok_s": p_tps,
+        "decode_stalls": stalls,
+        "prefill_tokens": stats["prefill_tokens"],
+        "cached_prefill_tokens": stats["cached_prefill_tokens"],
+        "accept_rate": accept_rate,
+        "tokens_per_step": tok_per_step,
+        "steps": stats["steps"],
+        "preemptions": stats["preemptions"],
+    }
+    ok = p_tps >= d_tps
     if args.smoke:
         ok = True
         if stalls != 0:
@@ -421,8 +489,9 @@ def main():
                 print(f"SMOKE FAIL: spec decode below {floor} tokens/step")
                 ok = False
         print("smoke:", "OK" if ok else "FAIL")
-        return ok
-    return p_tps >= d_tps
+    metrics["smoke_ok"] = bool(ok)
+    _write_json(args.json, metrics)
+    return ok
 
 
 def _run_parallel_sample(model, params, args):
@@ -510,6 +579,132 @@ def _run_parallel_sample(model, params, args):
                   f"completions, got {n_comp}")
             ok = False
         print("smoke:", "OK" if ok else "FAIL")
+    _write_json(args.json, {
+        "workload": "parallel-sample",
+        "shared_page_frac": stats["shared_page_frac"],
+        "shared_page_frac_peak": stats["shared_page_frac_peak"],
+        "forks": stats["forks"],
+        "completions": n_comp,
+        "paged_tok_s": tok / dt,
+        "steps": stats["steps"],
+        "smoke_ok": bool(ok),
+    })
+    return ok
+
+
+def _run_open_loop(model, params, args):
+    """SLA scoreboard: Poisson open-loop traffic through the asyncio
+    streaming front-end, mixed across latency classes, with optional
+    mid-stream abandonment.  Client-side p50/p99 TTFT and TPOT per
+    class are the committed-baseline metrics (BENCH_serving.json).
+
+    Runs the identical workload twice on the same model (jit compile
+    cache is shared across engines), timing only the second run, so the
+    reported latencies measure serving - not tracing.
+
+    ``--smoke`` is the CI gate: every request resolves, the expected
+    abandonments come back ``reason="cancelled"``, the pool is
+    invariant-clean after all of it, and the adaptive prefill budget
+    stayed inside its [floor, ceiling] clamp.
+    """
+    import asyncio
+
+    from repro.launch.serve_async import open_loop, summarize
+    from repro.serving import (LATENCY_CLASSES, AsyncFrontend, Request,
+                               SamplingParams, ServingEngine)
+    cfg = model.cfg
+    n = args.n
+    prompts, budgets = make_shared_prefix_workload(
+        n, args.sys_len, args.prompt_len, args.long_len, cfg.vocab_size,
+        seed=args.seed)
+    if args.decode_len:
+        budgets = np.full(n, args.decode_len, int)
+    rng = np.random.default_rng(args.seed)
+    names = sorted(args.class_mix)
+    picks = rng.choice(len(names), size=n,
+                       p=[args.class_mix[c] for c in names])
+    gaps = poisson_gaps(rng, n, args.rate)
+
+    def build_arrivals():
+        return [(gaps[i], Request(
+            rid=i, prompt=list(prompts[i]),
+            max_new_tokens=int(budgets[i]),
+            sampling=SamplingParams(temperature=args.temperature,
+                                    top_k=args.top_k, top_p=args.top_p,
+                                    seed=args.seed + i)
+            if args.temperature > 0 else None,
+            latency_class=LATENCY_CLASSES[names[int(picks[i])]]))
+            for i in range(n)]
+
+    def run_once():
+        engine = ServingEngine(
+            model, params, max_batch=args.batch, page_size=args.page_size,
+            max_seq=args.max_seq, prefill_budget="adaptive",
+            spec_k=args.spec_k)
+        t0 = time.perf_counter()
+        records = asyncio.run(open_loop(
+            AsyncFrontend(engine), build_arrivals(),
+            cancel_every=args.cancel_every,
+            cancel_after=args.cancel_after))
+        dt = time.perf_counter() - t0
+        engine.cache.check_invariants()
+        return records, dt, engine
+
+    run_once()                                    # warm the jit shapes
+    records, dt, engine = run_once()
+    summary = summarize(records)
+    st = engine.stats
+
+    print(f"open-loop: {n} requests at {args.rate}/s over {dt:.2f}s "
+          f"({st['steps']} steps, {st['cancelled']} cancelled, "
+          f"{st['preemptions']} preemptions, adaptive budget last "
+          f"{st['adaptive_budget_last']} in [{engine.adaptive_floor}, "
+          f"{engine.adaptive_ceiling}])")
+    metrics = {"workload": "open-loop", "requests": n,
+               "cancelled": st["cancelled"],
+               "steps": st["steps"],
+               "adaptive_budget_last": st["adaptive_budget_last"]}
+    for cls, ent in summary.items():
+        tgt = LATENCY_CLASSES[cls]
+        fmt = lambda v: "-" if v is None else f"{1e3 * v:.0f}ms"  # noqa: E731
+        print(f"  {cls:<12} n={ent['n']:<3} "
+              f"ttft p50/p99 {fmt(ent['ttft_p50'])}/{fmt(ent['ttft_p99'])} "
+              f"(target {1e3 * tgt.ttft_target:.0f}ms)  "
+              f"tpot p50/p99 {fmt(ent['tpot_p50'])}/{fmt(ent['tpot_p99'])} "
+              f"(target {1e3 * tgt.tpot_target:.0f}ms)  "
+              f"cancelled={ent['cancelled']}")
+        for k in ("ttft_p50", "ttft_p99", "tpot_p50", "tpot_p99"):
+            metrics[f"{k}_{cls}"] = ent[k]
+        metrics[f"n_{cls}"] = ent["n"]
+
+    ok = True
+    if args.smoke:
+        if len(records) != n:
+            print(f"SMOKE FAIL: {len(records)}/{n} requests resolved")
+            ok = False
+        want_cancel = n // args.cancel_every if args.cancel_every else 0
+        got_cancel = sum(r["reason"] == "cancelled" for r in records)
+        if got_cancel != want_cancel:
+            print(f"SMOKE FAIL: {got_cancel} cancelled, expected "
+                  f"{want_cancel}")
+            ok = False
+        if not (engine.adaptive_floor <= st["adaptive_budget_last"]
+                <= engine.adaptive_ceiling):
+            print("SMOKE FAIL: adaptive budget escaped its clamp")
+            ok = False
+        missing = [r["rid"] for r in records
+                   if r["reason"] in ("eos", "length")
+                   and r["tokens"] != int(budgets[r["rid"]])]
+        # eos on a random-weight model is improbable but legal; only a
+        # short stream WITHOUT eos is a lost-token bug.
+        missing = [rid for rid in missing
+                   if records[rid]["reason"] != "eos"]
+        if missing:
+            print(f"SMOKE FAIL: streams {missing} lost tokens")
+            ok = False
+        print("smoke:", "OK" if ok else "FAIL")
+    metrics["smoke_ok"] = bool(ok)
+    _write_json(args.json, metrics)
     return ok
 
 

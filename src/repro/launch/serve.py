@@ -23,21 +23,62 @@ import time
 import numpy as np
 
 
+def parse_prefill_budget(value: str | None) -> "int | str | None":
+    """CLI form of the engine's ``prefill_budget``: "none"/"" -> None
+    (unbounded), "adaptive" -> SLA-headroom-derived per-step budget
+    (see repro.serving.scheduler.Scheduler.adaptive_prefill_budget),
+    else an int token budget.  Lives here (not in the engine) so
+    argparse can use it before jax is imported."""
+    if value is None or value.lower() in ("", "none"):
+        return None
+    if value.lower() == "adaptive":
+        return "adaptive"
+    try:
+        return int(value)
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"expected an int, 'none' or 'adaptive', got {value!r}")
+
+
+_DEV_COUNT_FLAG = "--xla_force_host_platform_device_count"
+
+
+def merge_xla_flags(flags: str, n: int) -> str:
+    """Merge ``--xla_force_host_platform_device_count=n`` into an
+    existing ``XLA_FLAGS`` string, preserving every other flag.
+
+    A pre-existing device-count flag is *raised* to ``n`` when it is
+    lower (a CI env block pinning count=2 must not silently break a
+    --tp 4 run) and kept verbatim when it already covers ``n`` (the
+    user asked for more simulated devices than we need - fine)."""
+    parts = flags.split()
+    for i, part in enumerate(parts):
+        if part.startswith(_DEV_COUNT_FLAG + "="):
+            try:
+                have = int(part.split("=", 1)[1])
+            except ValueError:
+                have = 0
+            if have < n:
+                parts[i] = f"{_DEV_COUNT_FLAG}={n}"
+            return " ".join(parts)
+    parts.append(f"{_DEV_COUNT_FLAG}={n}")
+    return " ".join(parts)
+
+
 def ensure_host_devices(tp: int) -> None:
-    """Force ``tp`` simulated host devices for --tp runs.
+    """Force at least ``tp`` simulated host devices for --tp runs.
 
     Must run before jax initializes, which is why this module (and
     benchmarks/serving.py, which imports this helper) defers ``import
-    jax`` past argument parsing.  A pre-existing user-set device-count
-    flag is respected.
+    jax`` past argument parsing.  Other pre-existing ``XLA_FLAGS`` are
+    preserved; a pre-existing device-count flag is raised to ``tp`` if
+    too low and respected otherwise (see :func:`merge_xla_flags`).
     """
     import sys
     if tp <= 1 or "jax" in sys.modules:
         return
     flags = os.environ.get("XLA_FLAGS", "")
-    if "--xla_force_host_platform_device_count" not in flags:
-        os.environ["XLA_FLAGS"] = (
-            flags + f" --xla_force_host_platform_device_count={tp}").strip()
+    os.environ["XLA_FLAGS"] = merge_xla_flags(flags, tp)
 
 
 def main():
@@ -53,9 +94,12 @@ def main():
     ap.add_argument("--requests", type=int, default=0,
                     help="total requests (paged mode; default 2x batch)")
     ap.add_argument("--page-size", type=int, default=16)
-    ap.add_argument("--prefill-budget", type=int, default=None,
+    ap.add_argument("--prefill-budget", type=parse_prefill_budget,
+                    default=None,
                     help="prefill token budget per engine step (chunked "
-                         "prefill, Sarathi-style); default: unbounded")
+                         "prefill, Sarathi-style): an int, 'none' "
+                         "(unbounded, the default) or 'adaptive' "
+                         "(derived from the decode batch's SLA headroom)")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable shared-prefix page reuse")
     ap.add_argument("--spec-k", type=int, default=0,

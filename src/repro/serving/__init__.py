@@ -5,21 +5,26 @@ scheduler.py     request admission / preemption / retirement + decode plans
 sampler.py       device-side temperature/top-k/top-p/penalty sampling
 spec.py          prompt-lookup draft proposer (self-speculation)
 engine.py        ServingEngine: jitted paged prefill/verify over the model
+frontend.py      AsyncFrontend: asyncio token streaming + cancellation
 
 Device-side pieces live next to the kernels they pair with
 (:mod:`repro.kernels.paged_decode`, :mod:`repro.kernels.paged_verify`)
 and in the model facade (:meth:`repro.models.model.LM.paged_verify_step`).
 """
 from repro.serving.engine import ServingEngine
+from repro.serving.frontend import AsyncFrontend
 from repro.serving.paged_cache import PagedKVCache
 from repro.serving.sampler import SamplingParams, branch_seed
-from repro.serving.scheduler import (Completion, DecodeStep,
+from repro.serving.scheduler import (BATCH, INTERACTIVE, LATENCY_CLASSES,
+                                     STANDARD, Completion, DecodeStep,
                                      FinishedRequest, InvalidRequestError,
-                                     PrefillChunk, Request, Scheduler,
-                                     SequenceGroup)
+                                     LatencyClass, PrefillChunk, Request,
+                                     Scheduler, SequenceGroup)
 from repro.serving.spec import propose_draft
 
-__all__ = ["Completion", "DecodeStep", "InvalidRequestError",
-           "PagedKVCache", "PrefillChunk", "Request", "FinishedRequest",
-           "SamplingParams", "Scheduler", "SequenceGroup",
-           "ServingEngine", "branch_seed", "propose_draft"]
+__all__ = ["AsyncFrontend", "BATCH", "Completion", "DecodeStep",
+           "INTERACTIVE", "InvalidRequestError", "LATENCY_CLASSES",
+           "LatencyClass", "PagedKVCache", "PrefillChunk", "Request",
+           "FinishedRequest", "STANDARD", "SamplingParams", "Scheduler",
+           "SequenceGroup", "ServingEngine", "branch_seed",
+           "propose_draft"]

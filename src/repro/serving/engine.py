@@ -65,6 +65,8 @@ ordering of mark_prefilled / rollback / register_pages below.
 """
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
 import jax
@@ -217,14 +219,26 @@ class ServingEngine:
     def __init__(self, model, params, *, max_batch: int = 8,
                  page_size: int = 16, num_pages: int | None = None,
                  max_seq: int | None = None,
-                 prefill_budget: int | None = None,
+                 prefill_budget: int | str | None = None,
                  prefix_caching: bool = True,
                  spec_k: int = 0,
                  cached_frac: float = 0.5,
+                 adaptive_floor: int | None = None,
+                 adaptive_ceiling: int | None = None,
                  mesh=None):
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
-        if prefill_budget is not None and prefill_budget < 1:
+        # prefill_budget: None = unbounded, int = fixed token budget per
+        # step, "adaptive" = derived each step from the decode batch's
+        # SLA headroom (see Scheduler.adaptive_prefill_budget), clamped
+        # to [adaptive_floor, adaptive_ceiling].
+        self.adaptive_prefill = prefill_budget == "adaptive"
+        if isinstance(prefill_budget, str) and not self.adaptive_prefill:
+            raise ValueError(
+                f"prefill_budget must be an int, None or 'adaptive', "
+                f"got {prefill_budget!r}")
+        if not self.adaptive_prefill and prefill_budget is not None \
+                and prefill_budget < 1:
             raise ValueError(
                 f"prefill_budget must be >= 1, got {prefill_budget}")
         if spec_k < 0:
@@ -253,6 +267,19 @@ class ServingEngine:
         self.page_size = page_size
         self.max_batch = max_batch
         self.prefill_budget = prefill_budget
+        self.adaptive_floor = adaptive_floor if adaptive_floor is not None \
+            else page_size
+        self.adaptive_ceiling = adaptive_ceiling \
+            if adaptive_ceiling is not None \
+            else max(8 * page_size, self.adaptive_floor)
+        if not 1 <= self.adaptive_floor <= self.adaptive_ceiling:
+            raise ValueError(
+                f"need 1 <= adaptive_floor <= adaptive_ceiling, got "
+                f"{self.adaptive_floor}..{self.adaptive_ceiling}")
+        # EMA of measured prefill throughput (tokens/sec of wall time in
+        # _run_chunks) - the rate adaptive_prefill_budget converts SLA
+        # headroom seconds into a token budget with.
+        self._prefill_rate = 0.0
         self.prefix_caching = prefix_caching
         self.spec_k = spec_k
         max_seq = max_seq if max_seq is not None else model.cfg.max_seq
@@ -285,7 +312,8 @@ class ServingEngine:
                       "decode_slot_steps": 0, "decode_tokens": 0,
                       "draft_tokens": 0, "draft_accepted": 0,
                       "rollbacks": 0, "triplet_bytes": 0,
-                      "groups": 0, "forks": 0, "beam_steps": 0}
+                      "groups": 0, "forks": 0, "beam_steps": 0,
+                      "cancelled": 0, "adaptive_budget_last": 0}
         (self._prefill, self._decode, self._verify, self._copy,
          self._sample, self._topk) = _serving_jits(model, mesh)
 
@@ -334,7 +362,30 @@ class ServingEngine:
                 f"max_batch {self.max_batch}")
         self.sched.submit(req)
 
+    def cancel(self, rid: int) -> bool:
+        """Drop request ``rid`` wherever it is (waiting / mid-prefill /
+        mid-decode / fanned-out group), freeing its slots and pages
+        refcount-clean.  Pending COW copies are flushed *first*: a
+        queued device copy whose destination page gets freed here and
+        reallocated next step would clobber the new owner's KV.
+        Returns True if the request was found.  Must be called between
+        engine steps (the async frontend serializes this)."""
+        self._apply_pending_copies()
+        hit = self.sched.cancel(rid)
+        if hit:
+            self.stats["cancelled"] += 1
+        return hit
+
     # -------------------------------------------------------------- step
+    def _step_budget(self) -> int | None:
+        """This step's prefill token budget (None = unbounded)."""
+        if not self.adaptive_prefill:
+            return self.prefill_budget
+        budget = self.sched.adaptive_prefill_budget(
+            self._prefill_rate, self.adaptive_floor, self.adaptive_ceiling)
+        self.stats["adaptive_budget_last"] = budget
+        return budget
+
     def step(self) -> list[FinishedRequest]:
         """One token-budget step: continue/admit prefill chunks, run one
         batched (speculative) decode over every decoding slot; returns
@@ -345,7 +396,8 @@ class ServingEngine:
         # pages and evict an in-flight decode into a costly replay.
         self._capacity_pass()
 
-        chunks, reused = self.sched.schedule_prefill(self.prefill_budget)
+        budget = self._step_budget()
+        chunks, reused = self.sched.schedule_prefill(budget)
         if not chunks and not self.sched.decoding_slots() \
                 and self.sched.running:
             # Gridlock: every running slot is a paused prefill and the
@@ -356,13 +408,20 @@ class ServingEngine:
             if victim is not None:
                 self.sched.preempt(victim)
                 self.stats["preemptions"] += 1
-                chunks, r2 = self.sched.schedule_prefill(
-                    self.prefill_budget)
+                chunks, r2 = self.sched.schedule_prefill(budget)
                 reused += r2
         self.stats["cached_prefill_tokens"] += reused
 
         self._apply_pending_copies()
+        t0 = time.perf_counter()
         self._run_chunks(chunks, finished)
+        if chunks:
+            dt = time.perf_counter() - t0
+            n_tok = sum(len(ck.tokens) for ck in chunks)
+            if dt > 0.0 and n_tok:
+                rate = n_tok / dt
+                self._prefill_rate = rate if self._prefill_rate == 0.0 \
+                    else 0.8 * self._prefill_rate + 0.2 * rate
         # Second (idempotent) capacity pass: slots that finished their
         # prefill this step also append a token below, and a prompt
         # ending exactly on a page boundary needs its next page before

@@ -1,0 +1,236 @@
+"""Asyncio streaming front-end over :meth:`ServingEngine.step`.
+
+:class:`AsyncFrontend` turns the engine's synchronous step loop into a
+per-request token stream: ``submit(request)`` returns an async generator
+that yields generated token ids as the engine produces them.  One
+background *drive task* owns the engine; each iteration
+
+  1. applies cancellations (abandoned generators), then
+  2. feeds queued submissions to the engine, then
+  3. runs exactly one ``engine.step()`` in a thread-pool executor (the
+     event loop stays responsive during the jitted device work), then
+  4. publishes each running request's newly generated tokens to its
+     stream.
+
+Everything that mutates engine state happens inside the drive task,
+*between* steps - client coroutines only enqueue intents (submit /
+cancel) and read from per-stream queues, so the scheduler and paged
+cache never see concurrent mutation and cancellation is always applied
+at a step boundary (``engine.cancel`` flushes pending COW copies before
+freeing slots, see :mod:`repro.serving.engine`).
+
+Cancellation: abandoning the generator (``break`` / ``aclose()`` / GC)
+triggers its ``finally`` block, which files a cancel intent; the next
+drive iteration frees the request's slot and pages refcount-clean -
+mid-prefill, mid-decode, or fanned-out group alike.  ``drain()`` waits
+for every in-flight stream to finish; ``close()`` drains (optionally)
+and stops the drive task.
+
+Token publishing is diff-based: a plain request streams each token the
+step it is recorded (``_Running.generated`` grows monotonically between
+preemption replays, which replay *into the KV*, not into ``generated``);
+a sequence group (n > 1 / best_of / beam) bursts its primary
+completion's tokens at retirement - branch streams diverge, so there is
+no single incremental stream to publish.  The full
+:class:`FinishedRequest` (completions, scores, scheduler TTFT) is
+available via :meth:`AsyncFrontend.result` once the stream ends.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+
+from repro.serving.engine import ServingEngine
+from repro.serving.scheduler import (FinishedRequest, InvalidRequestError,
+                                     Request)
+
+
+@dataclasses.dataclass
+class _End:
+    """Stream terminator carrying the request's FinishedRequest."""
+    fr: FinishedRequest
+
+
+@dataclasses.dataclass
+class _Stream:
+    req: Request
+    queue: asyncio.Queue
+    sent: int = 0              # generated tokens published so far
+    done: bool = False
+
+
+class AsyncFrontend:
+    """Async streaming facade over one :class:`ServingEngine`.
+
+    Single-event-loop, single-drive-task; not thread-safe.  Typical use::
+
+        fe = AsyncFrontend(engine)
+        async for tok in fe.submit(req):
+            ...
+        fr = fe.result(req.rid)
+        await fe.close()
+    """
+
+    def __init__(self, engine: ServingEngine):
+        self.engine = engine
+        self._streams: dict[int, _Stream] = {}
+        self._pending: list[Request] = []
+        self._cancels: list[int] = []
+        self.results: dict[int, FinishedRequest] = {}
+        self._wake = asyncio.Event()
+        self._idle = asyncio.Event()
+        self._idle.set()
+        self._task: asyncio.Task | None = None
+        self._closed = False
+
+    # ------------------------------------------------------------- client
+    def submit(self, req: Request):
+        """Enqueue ``req`` and return an async generator of its token
+        ids.  The request enters the engine on the next drive iteration;
+        abandoning the generator cancels the request and frees its
+        slot/pages refcount-clean."""
+        if self._closed:
+            raise RuntimeError("frontend is closed")
+        if req.rid in self._streams:
+            raise ValueError(f"rid {req.rid} already in flight")
+        st = _Stream(req=req, queue=asyncio.Queue())
+        self._streams[req.rid] = st
+        self._pending.append(req)
+        self._idle.clear()
+        self._wake.set()
+        self._ensure_task()
+        return self._stream(st)
+
+    async def _stream(self, st: _Stream):
+        try:
+            while True:
+                item = await st.queue.get()
+                if isinstance(item, _End):
+                    return
+                if isinstance(item, BaseException):
+                    raise item
+                yield item
+        finally:
+            # Runs on normal exhaustion AND on abandonment (break /
+            # aclose / GC closing the generator mid-iteration).
+            if not st.done:
+                self._request_cancel(st.req.rid)
+
+    def result(self, rid: int) -> FinishedRequest | None:
+        """The FinishedRequest of a completed stream (None while the
+        stream is live)."""
+        return self.results.get(rid)
+
+    def _request_cancel(self, rid: int) -> None:
+        if rid in self._streams and not self._streams[rid].done:
+            self._cancels.append(rid)
+            self._wake.set()
+
+    async def drain(self) -> None:
+        """Wait until every submitted stream has finished (or been
+        cancelled) and the engine is idle."""
+        self._ensure_task()
+        await self._idle.wait()
+
+    async def close(self, drain: bool = True) -> None:
+        """Stop the drive task; ``drain=True`` finishes in-flight work
+        first, ``drain=False`` cancels every live stream."""
+        if drain:
+            await self.drain()
+        else:
+            for rid, st in self._streams.items():
+                if not st.done:
+                    self._cancels.append(rid)
+            self._wake.set()
+            await self.drain()
+        self._closed = True
+        if self._task is not None:
+            self._wake.set()        # unblock the wait, task sees _closed
+            await self._task
+            self._task = None
+
+    # -------------------------------------------------------- drive task
+    def _ensure_task(self) -> None:
+        if self._task is None or self._task.done():
+            self._task = asyncio.get_running_loop().create_task(
+                self._drive())
+
+    async def _drive(self) -> None:
+        loop = asyncio.get_running_loop()
+        while True:
+            self._apply_cancels()
+            self._apply_submissions()
+            if not self.engine.sched.has_work:
+                self._idle.set()
+                if self._closed:
+                    return
+                self._wake.clear()
+                # Intents filed between the clear and this wait were
+                # filed with _wake.set() afterwards, so no lost wakeup.
+                if not (self._pending or self._cancels):
+                    await self._wake.wait()
+                continue
+            finished = await loop.run_in_executor(None, self.engine.step)
+            self._publish(finished)
+
+    def _apply_cancels(self) -> None:
+        while self._cancels:
+            rid = self._cancels.pop()
+            st = self._streams.get(rid)
+            if st is None or st.done:
+                continue
+            # Snapshot generated-so-far before the scheduler forgets it.
+            toks: list[int] = []
+            for run in self.engine.sched.running.values():
+                if run.req.rid == rid and run.group is None:
+                    toks = list(run.generated)
+                    break
+            self._pending = [r for r in self._pending if r.rid != rid]
+            self.engine.cancel(rid)
+            self._finish(st, FinishedRequest(
+                rid=rid, prompt=st.req.prompt, tokens=toks,
+                reason="cancelled"))
+
+    def _apply_submissions(self) -> None:
+        while self._pending:
+            req = self._pending.pop(0)
+            st = self._streams[req.rid]
+            try:
+                self.engine.submit(req)
+            except InvalidRequestError as e:
+                # Client misuse: raise it out of the client's generator.
+                st.done = True
+                del self._streams[req.rid]
+                st.queue.put_nowait(e)
+            except ValueError:
+                # Resource rejection (prompt/width over capacity) -
+                # mirrors ServingEngine.run's per-request rejection.
+                self.engine.stats["rejected"] += 1
+                self._finish(st, FinishedRequest(
+                    rid=req.rid, prompt=req.prompt, tokens=[],
+                    reason="rejected"))
+
+    def _publish(self, finished: list[FinishedRequest]) -> None:
+        for fr in finished:
+            st = self._streams.get(fr.rid)
+            if st is None or st.done:
+                continue
+            for tok in fr.tokens[st.sent:]:
+                st.queue.put_nowait(tok)
+            st.sent = len(fr.tokens)
+            self._finish(st, fr)
+        # Incremental: publish each live plain request's new tokens.
+        for run in self.engine.sched.running.values():
+            st = self._streams.get(run.req.rid)
+            if st is None or st.done or run.group is not None:
+                continue
+            gen = run.generated
+            for tok in gen[st.sent:]:
+                st.queue.put_nowait(tok)
+            st.sent = len(gen)
+
+    def _finish(self, st: _Stream, fr: FinishedRequest) -> None:
+        st.done = True
+        self.results[fr.rid] = fr
+        del self._streams[fr.rid]
+        st.queue.put_nowait(_End(fr))

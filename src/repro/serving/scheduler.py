@@ -31,16 +31,57 @@ deterministic (seeded keys / beam scores are pure functions of the
 request), so the group re-derives the same completions from whatever
 shared prefix pages survive in the cache LRU.
 
-Pure host logic - fully testable without jax.
+Latency classes (SLA-aware scheduling): every request carries a
+:class:`LatencyClass` - a TTFT target (admission to first token), a
+TPOT target (gap between subsequent tokens) and a priority rank.
+Admission is priority-ordered across classes (FCFS within a class, and
+the best-ranked waiting request head-blocks the queue so a big
+interactive prompt is never starved by a stream of batch arrivals),
+preemption evicts the least-urgent class first, and
+:meth:`Scheduler.adaptive_prefill_budget` derives the per-step chunked
+prefill budget from the decode batch's TPOT headroom instead of a
+fixed ``--prefill-budget``: the tighter the most-urgent decoding slot's
+next-token deadline, the fewer prompt tokens ride along in its step.
+
+Cancellation (:meth:`Scheduler.cancel`): an abandoned stream is removed
+wherever it is - waiting, mid-prefill, mid-decode, or a fanned-out
+sequence group - and every slot/page reference it held is released
+refcount-clean (published prefix pages park in the cache LRU as on any
+retirement).
+
+Pure host logic - fully testable without jax.  Wall-clock is injected
+(``clock``) so SLA behavior is deterministic under test.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 
 from repro.serving import spec
 from repro.serving.paged_cache import PagedKVCache
 from repro.serving.sampler import SamplingParams
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyClass:
+    """One SLA tier: targets in seconds, lower ``priority`` = more
+    urgent.  The targets are *scheduling inputs* (headroom / ordering),
+    not hard guarantees - the open-loop benchmark reports the achieved
+    p50/p99 TTFT and TPOT per class against them."""
+    name: str
+    ttft_target: float      # admission -> first token, seconds
+    tpot_target: float      # per-token gap while decoding, seconds
+    priority: int           # admission / eviction rank (0 = most urgent)
+
+
+INTERACTIVE = LatencyClass("interactive", ttft_target=0.5,
+                           tpot_target=0.05, priority=0)
+STANDARD = LatencyClass("standard", ttft_target=2.0,
+                        tpot_target=0.2, priority=1)
+BATCH = LatencyClass("batch", ttft_target=30.0,
+                     tpot_target=2.0, priority=2)
+LATENCY_CLASSES = {c.name: c for c in (INTERACTIVE, STANDARD, BATCH)}
 
 
 @dataclasses.dataclass
@@ -50,6 +91,7 @@ class Request:
     max_new_tokens: int
     eos_id: int | None = None
     sampling: SamplingParams | None = None     # None = greedy
+    latency_class: LatencyClass = STANDARD     # SLA tier (see above)
     # -- sequence-group knobs (parallel sampling / beam search) -----------
     n: int = 1                    # completions returned
     best_of: int | None = None    # branches sampled (>= n); None = n
@@ -71,8 +113,13 @@ class FinishedRequest:
     rid: int
     prompt: list[int]
     tokens: list[int]          # generated tokens (includes eos if hit)
-    reason: str                # "eos" | "length" | "rejected"
+    reason: str                # "eos" | "length" | "rejected" | "cancelled"
     preemptions: int = 0
+    # Scheduler-side time to first token (seconds, submit -> first
+    # recorded token); None for rejected/cancelled-before-first-token
+    # and for sequence groups (the async frontend measures groups and
+    # client-visible latency itself).
+    ttft: float | None = None
     # Sequence groups only: the n returned completions (tokens/reason
     # above mirror completions[0]).  Ordered by branch id for plain
     # n-parallel sampling, by score (desc) when ranking applies
@@ -159,6 +206,12 @@ class _Running:
     group: SequenceGroup | None = None
     branch: int = 0            # branch id within the group
     cum_logprob: float = 0.0   # beam / best_of ranking state
+    # -- SLA bookkeeping (scheduler clock) --------------------------------
+    submit_time: float = 0.0          # original submission (survives
+    #                                   preemption replay)
+    first_token_time: float | None = None
+    last_token_time: float = 0.0      # base of the next-token deadline
+    queue_seq: int = 0                # waiting order within a class
 
     def __post_init__(self):
         # Maintained incrementally by record_token: tokens() is on the
@@ -202,13 +255,23 @@ class PrefillChunk:
 
 
 class Scheduler:
-    """Admission / chunked prefill / preemption / retirement."""
+    """Admission / chunked prefill / preemption / retirement.
 
-    def __init__(self, cache: PagedKVCache):
+    ``clock`` is the monotonic time source for the SLA bookkeeping
+    (defaults to ``time.monotonic``); tests inject a fake."""
+
+    def __init__(self, cache: PagedKVCache, clock=time.monotonic):
         self.cache = cache
+        self.clock = clock
         self.waiting: deque[_Running] = deque()
         self.running: dict[int, _Running] = {}     # slot -> state
         self._seq_no = 0
+        # Waiting order: requests are admitted by (class priority,
+        # queue_seq).  Fresh submissions draw increasing seqs (FCFS
+        # within a class); preempted work draws decreasing ones, so it
+        # resumes ahead of every later arrival of its class.
+        self._queue_seq_next = 0
+        self._queue_seq_front = -1
         # Monotone accounting the engine reads as deltas around group
         # operations (beam reorders emit tokens and fork slots deep
         # inside the scheduler).
@@ -219,7 +282,26 @@ class Scheduler:
     def submit(self, req: Request) -> None:
         assert len(req.prompt) >= 1, "empty prompt"
         assert req.max_new_tokens >= 1
-        self.waiting.append(_Running(req, [], group=_make_group(req)))
+        now = self.clock()
+        st = _Running(req, [], group=_make_group(req))
+        st.submit_time = st.last_token_time = now
+        st.queue_seq = self._queue_seq_next
+        self._queue_seq_next += 1
+        self.waiting.append(st)
+
+    @staticmethod
+    def _waiting_key(st: _Running) -> tuple[int, int]:
+        return (st.req.latency_class.priority, st.queue_seq)
+
+    def _next_waiting(self) -> _Running | None:
+        """Best waiting candidate: most urgent class first, FCFS within
+        a class, preempted work ahead of fresh arrivals.  This is the
+        *only* candidate admission tries - a blocked urgent request
+        head-blocks the queue (no lower-class bypass) so it cannot be
+        starved by a stream of small batch-class arrivals."""
+        if not self.waiting:
+            return None
+        return min(self.waiting, key=self._waiting_key)
 
     @property
     def has_work(self) -> bool:
@@ -282,11 +364,12 @@ class Scheduler:
                 if left is not None:
                     left -= len(ck.tokens)
         while self.waiting and (left is None or left > 0):
-            st = self.waiting[0]
+            st = self._next_waiting()
             toks = st.tokens()
             shared = self.cache.lookup_prefix(toks)
             if not self.cache.can_admit(len(toks), shared):
-                break                      # FCFS: head blocks the queue
+                break          # priority head blocks the queue (no
+                #                lower-class bypass - starvation-free)
             # Group-aware slot budget: a group needs its full fan-out
             # width, and slots reserved for other live groups (pending
             # fan-outs, beam regrowth) are off-limits.
@@ -294,7 +377,7 @@ class Scheduler:
             if self.cache.free_slot_count - self._reserved_slots() \
                     < need_slots:
                 break
-            self.waiting.popleft()
+            self.waiting.remove(st)
             slot = self.cache.alloc_slot(len(toks), shared, lazy=True)
             st.computed = len(shared) * self.cache.page_size
             st.decoding = False
@@ -353,7 +436,7 @@ class Scheduler:
         """
         out = []
         while self.waiting:
-            st = self.waiting[0]
+            st = self._next_waiting()
             toks = st.tokens()
             if not self.cache.can_admit(len(toks)):
                 break
@@ -361,7 +444,7 @@ class Scheduler:
             if self.cache.free_slot_count - self._reserved_slots() \
                     < need_slots:
                 break
-            self.waiting.popleft()
+            self.waiting.remove(st)
             slot = self.cache.alloc_slot(len(toks))
             st.computed = st.target
             st.decoding = True
@@ -405,6 +488,10 @@ class Scheduler:
         """Append a generated token; returns "running"|"eos"|"length"."""
         st = self.running[slot]
         self.tokens_emitted += 1
+        now = self.clock()
+        if st.first_token_time is None:
+            st.first_token_time = now
+        st.last_token_time = now
         st.generated.append(tok)
         st._stream.append(tok)
         if st.req.eos_id is not None and tok == st.req.eos_id:
@@ -414,13 +501,17 @@ class Scheduler:
         return "running"
 
     def choose_victim(self) -> int | None:
-        """Preemption victim: the running sequence with the least
-        accumulated work (fewest materialized KV tokens - cheapest to
-        replay); newest admission loses ties (FCFS fairness)."""
+        """Preemption victim: the least-urgent latency class first
+        (evicting a batch request to keep an interactive decode alive is
+        the whole point of the classes), then the sequence with the
+        least accumulated work (fewest materialized KV tokens - cheapest
+        to replay); newest admission loses ties (FCFS fairness)."""
         if not self.running:
             return None
         return min(self.running,
-                   key=lambda s: (int(self.cache.seq_lens[s]),
+                   key=lambda s: (-self.running[s].req.latency_class
+                                  .priority,
+                                  int(self.cache.seq_lens[s]),
                                   -self.running[s].seq_no))
 
     def preempt(self, slot: int) -> None:
@@ -428,8 +519,9 @@ class Scheduler:
         kept as tokens: the resumed prefill replays prompt + generated
         (minus whatever prefix pages are still cached).
 
-        Re-queued at the *front*: oldest work resumes first, and a
-        preempted sequence never starves behind new arrivals.
+        Re-queued at the *front of its class* (a decreasing queue_seq):
+        oldest work resumes first, and a preempted sequence never
+        starves behind new arrivals of the same class.
 
         A slot belonging to a sequence group evicts the *whole group*
         (branch streams diverge right after the shared prefill, so no
@@ -444,7 +536,12 @@ class Scheduler:
         st.computed = 0
         st.decoding = False
         self.cache.free_slot(slot)
-        self.waiting.appendleft(st)
+        self._requeue_front(st)
+
+    def _requeue_front(self, st: _Running) -> None:
+        st.queue_seq = self._queue_seq_front
+        self._queue_seq_front -= 1
+        self.waiting.append(st)
 
     def preempt_group(self, group: SequenceGroup) -> None:
         """Evict every live branch of ``group`` and re-queue the request
@@ -454,24 +551,34 @@ class Scheduler:
         group re-derives the same completions after re-admission,
         resuming from whatever shared prefix pages survive in the
         cache's LRU."""
+        submit_time = None
         for s, st in list(self.running.items()):
             if st.group is group:           # branches + mid-prefill parent
                 self.running.pop(s)
                 self.cache.free_slot(s)
+                submit_time = st.submit_time if submit_time is None \
+                    else min(submit_time, st.submit_time)
         group.slots.clear()
         group.finished.clear()
         group.fanned_out = False
         group.prefix_pages = ()
         group.next_branch = 0
         group.preemptions += 1
-        self.waiting.appendleft(_Running(group.req, [], group=group))
+        nst = _Running(group.req, [], group=group)
+        nst.submit_time = submit_time if submit_time is not None \
+            else self.clock()
+        nst.last_token_time = nst.submit_time
+        self._requeue_front(nst)
 
     def retire(self, slot: int, reason: str) -> FinishedRequest:
         st = self.running.pop(slot)
         self.cache.free_slot(slot)
+        ttft = None
+        if st.first_token_time is not None:
+            ttft = st.first_token_time - st.submit_time
         return FinishedRequest(rid=st.req.rid, prompt=st.req.prompt,
                                tokens=st.generated, reason=reason,
-                               preemptions=st.preemptions)
+                               preemptions=st.preemptions, ttft=ttft)
 
     def finish(self, slot: int, reason: str) -> FinishedRequest | None:
         """Group-aware retirement: a plain sequence retires immediately;
@@ -483,6 +590,61 @@ class Scheduler:
         group = st.group
         self._retire_branch(slot, reason)
         return self._maybe_retire_group(group)
+
+    # ----------------------------------------------- SLA / cancellation
+    def sla_headroom(self, now: float | None = None) -> float | None:
+        """Seconds until the most-urgent decoding slot blows its TPOT
+        target: min over decoding slots of
+        ``last_token_time + tpot_target - now``.  None when nothing is
+        decoding (no deadline to protect).  Negative = already late."""
+        if now is None:
+            now = self.clock()
+        deadlines = [st.last_token_time + st.req.latency_class.tpot_target
+                     for st in self.running.values() if st.decoding]
+        if not deadlines:
+            return None
+        return min(deadlines) - now
+
+    def adaptive_prefill_budget(self, prefill_rate: float, floor: int,
+                                ceiling: int,
+                                now: float | None = None) -> int:
+        """Per-step chunked-prefill token budget from the decode batch's
+        SLA headroom: roughly the prompt tokens the engine can process
+        (at the measured ``prefill_rate`` tokens/sec) before the tightest
+        decoding slot's next-token deadline.  Clamped to
+        [``floor``, ``ceiling``]: the floor keeps prefill from starving
+        outright when decodes are already late, the ceiling bounds a
+        step's latency when nothing is decoding (full ceiling)."""
+        assert 1 <= floor <= ceiling
+        headroom = self.sla_headroom(now)
+        if headroom is None:
+            return ceiling
+        budget = int(max(0.0, headroom) * max(prefill_rate, 0.0))
+        return max(floor, min(ceiling, budget))
+
+    def cancel(self, rid: int) -> bool:
+        """Remove request ``rid`` wherever it is - waiting, mid-prefill,
+        mid-decode, or a fanned-out sequence group - freeing every slot
+        it holds refcount-clean.  Returns True if anything was removed.
+
+        The engine must flush pending COW copies *before* calling this
+        (a queued device copy targeting a freed-and-reallocated page
+        would clobber the new owner's KV)."""
+        hit = False
+        for st in [w for w in self.waiting if w.req.rid == rid]:
+            self.waiting.remove(st)
+            hit = True
+        group = None
+        for s, st in list(self.running.items()):
+            if st.req.rid == rid:
+                self.running.pop(s)
+                self.cache.free_slot(s)
+                group = st.group or group
+                hit = True
+        if group is not None:
+            group.slots.clear()
+            group.finished.clear()
+        return hit
 
     # ------------------------------------------------- sequence groups
     def fan_out(self, slot: int) -> list[tuple[int, int]]:

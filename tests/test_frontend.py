@@ -1,0 +1,288 @@
+"""Async streaming frontend tests (AsyncFrontend over ServingEngine).
+
+Covers, per the streaming/SLA subsystem spec:
+  * streamed tokens == ServingEngine.run's batch tokens (greedy parity);
+  * sequence groups burst the primary completion at retirement and the
+    full FinishedRequest (completions, scores) lands in result();
+  * abandoning a stream cancels the request wherever it is - before
+    admission, mid-prefill (chunked), mid-decode - and leaves the paged
+    pool fully free with check_invariants clean (no leaked refcounts);
+  * drain()/close(drain=False) semantics, per-request resource
+    rejection and loud InvalidRequestError propagation;
+  * launch-layer CLI plumbing: merge_xla_flags preserves/raises a
+    pre-existing XLA_FLAGS (the ensure_host_devices bugfix) and
+    parse_prefill_budget accepts none/int/adaptive.
+"""
+import asyncio
+import contextlib
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.serving import AsyncFrontend, InvalidRequestError, Request
+from repro.serving import SamplingParams, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def qwen_smoke():
+    from repro.configs import get_config
+    from repro.models.model import build_model
+    cfg = get_config("qwen3-1.7b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_seq", 64)
+    return ServingEngine(model, params, **kw)
+
+
+def _prompt(cfg, seed, n):
+    rng = np.random.default_rng(seed)
+    return rng.integers(1, cfg.vocab_size, n).tolist()
+
+
+def _pool_clean(engine):
+    """Every page back in the allocator, bookkeeping consistent."""
+    engine.cache.check_invariants()
+    assert engine.cache.available_page_count == engine.cache.num_pages
+    assert not engine.sched.has_work
+
+
+# ------------------------------------------------------ streaming parity
+def test_stream_parity_with_engine_run(qwen_smoke):
+    """Tokens streamed by the frontend == the synchronous batch loop's,
+    request by request, and the FinishedRequest carries a TTFT."""
+    cfg, model, params = qwen_smoke
+    reqs = [Request(rid=i, prompt=_prompt(cfg, 20 + i, 3 + i),
+                    max_new_tokens=6 + i) for i in range(3)]
+    gold = {f.rid: f.tokens for f in _engine(model, params).run(
+        [(0, r) for r in reqs])}
+
+    async def main():
+        fe = AsyncFrontend(_engine(model, params))
+        streams = {r.rid: fe.submit(r) for r in reqs}
+
+        async def consume(rid, gen):
+            return rid, [tok async for tok in gen]
+
+        got = dict(await asyncio.gather(
+            *(consume(rid, g) for rid, g in streams.items())))
+        await fe.close()
+        return fe, got
+
+    fe, got = asyncio.run(main())
+    assert got == gold
+    for r in reqs:
+        fr = fe.result(r.rid)
+        assert fr.tokens == gold[r.rid]
+        assert fr.reason in ("stop", "length")
+        assert fr.ttft is not None and fr.ttft >= 0.0
+    _pool_clean(fe.engine)
+
+
+def test_group_request_bursts_at_retirement(qwen_smoke):
+    """A parallel-sampling group streams its primary completion in one
+    burst when the group retires; result() has every completion."""
+    cfg, model, params = qwen_smoke
+    req = Request(rid=0, prompt=_prompt(cfg, 31, 5), max_new_tokens=5,
+                  sampling=SamplingParams(temperature=0.8, top_k=8,
+                                          seed=7), n=3)
+
+    async def main():
+        fe = AsyncFrontend(_engine(model, params, max_batch=6))
+        toks = [tok async for tok in fe.submit(req)]
+        await fe.close()
+        return fe, toks
+
+    fe, toks = asyncio.run(main())
+    fr = fe.result(0)
+    assert toks == fr.tokens
+    assert len(fr.completions) == 3
+    assert fr.tokens == fr.completions[0].tokens
+    _pool_clean(fe.engine)
+
+
+# -------------------------------------------------------- cancellation
+async def _abandon(gen):
+    """Abandon a live stream the way a disconnecting client does: the
+    task awaiting the next token gets cancelled, which runs the
+    generator's finally block (an unstarted generator's aclose() would
+    skip it)."""
+    nxt = asyncio.ensure_future(gen.__anext__())
+    await asyncio.sleep(0)        # let the stream body start
+    nxt.cancel()
+    with contextlib.suppress(asyncio.CancelledError, StopAsyncIteration):
+        await nxt
+    await gen.aclose()
+
+
+def test_cancel_at_first_step_frees_everything(qwen_smoke):
+    cfg, model, params = qwen_smoke
+
+    async def main():
+        fe = AsyncFrontend(_engine(model, params))
+        gen = fe.submit(Request(rid=0, prompt=_prompt(cfg, 40, 6),
+                                max_new_tokens=40))
+        await _abandon(gen)       # dropped before/at the first step
+        await fe.close()
+        return fe
+
+    fe = asyncio.run(main())
+    fr = fe.result(0)
+    assert fr.reason == "cancelled"
+    assert len(fr.tokens) < 40
+    _pool_clean(fe.engine)
+
+
+def test_cancel_mid_prefill_frees_pages(qwen_smoke):
+    """Abandon a chunked prefill after >= 1 chunk ran but before the
+    first token: partially-materialized KV pages must come back."""
+    cfg, model, params = qwen_smoke
+
+    async def main():
+        # 24-token prompt at budget 4 -> 6 prefill steps before any
+        # token, so waiting for the first chunk lands us mid-prefill.
+        eng = _engine(model, params, prefill_budget=4)
+        fe = AsyncFrontend(eng)
+        gen = fe.submit(Request(rid=0, prompt=_prompt(cfg, 41, 24),
+                                max_new_tokens=8))
+        nxt = asyncio.ensure_future(gen.__anext__())
+        while eng.stats["prefill_chunks"] == 0:
+            await asyncio.sleep(0.001)
+        nxt.cancel()              # client disconnects mid-prefill
+        with contextlib.suppress(asyncio.CancelledError,
+                                 StopAsyncIteration):
+            await nxt
+        await gen.aclose()
+        await fe.close()
+        return fe
+
+    fe = asyncio.run(main())
+    fr = fe.result(0)
+    assert fr.reason == "cancelled"
+    assert fe.engine.stats["cancelled"] == 1
+    # mid-prefill: the engine ran chunks but never emitted a token
+    assert fe.engine.stats["prefill_chunks"] >= 1
+    _pool_clean(fe.engine)
+
+
+def test_cancel_mid_decode_frees_pages(qwen_smoke):
+    """Break out of the token stream mid-decode: slot + pages freed,
+    refcounts clean, snapshot of generated-so-far in the result."""
+    cfg, model, params = qwen_smoke
+
+    async def main():
+        fe = AsyncFrontend(_engine(model, params))
+        gen = fe.submit(Request(rid=0, prompt=_prompt(cfg, 42, 6),
+                                max_new_tokens=48))
+        got = []
+        async for tok in gen:
+            got.append(tok)
+            if len(got) == 3:
+                break
+        await gen.aclose()
+        await fe.close()
+        return fe, got
+
+    fe, got = asyncio.run(main())
+    fr = fe.result(0)
+    assert fr.reason == "cancelled"
+    assert len(got) == 3
+    # the cancel snapshot holds everything generated up to the cancel -
+    # at least what the client saw, possibly a step more
+    assert fr.tokens[:3] == got
+    assert fe.engine.stats["cancelled"] == 1
+    _pool_clean(fe.engine)
+
+
+def test_close_without_drain_cancels_live_streams(qwen_smoke):
+    cfg, model, params = qwen_smoke
+
+    async def main():
+        fe = AsyncFrontend(_engine(model, params))
+        gens = [fe.submit(Request(rid=i, prompt=_prompt(cfg, 50 + i, 4),
+                                  max_new_tokens=40)) for i in range(3)]
+        [await g.__anext__() for g in gens]      # all three decoding
+        await fe.close(drain=False)
+        for g in gens:
+            await g.aclose()
+        return fe
+
+    fe = asyncio.run(main())
+    assert sorted(fe.results) == [0, 1, 2]
+    assert all(fr.reason == "cancelled" for fr in fe.results.values())
+    _pool_clean(fe.engine)
+
+
+# ------------------------------------------------- rejection / misuse
+def test_resource_rejection_and_invalid_request(qwen_smoke):
+    cfg, model, params = qwen_smoke
+
+    async def main():
+        fe = AsyncFrontend(_engine(model, params))
+        # prompt + budget over the per-sequence ceiling: rejected, not
+        # raised (mirrors ServingEngine.run)
+        toks = [t async for t in fe.submit(
+            Request(rid=0, prompt=_prompt(cfg, 60, 8),
+                    max_new_tokens=4096))]
+        assert toks == []
+        # contradictory knobs: raised out of the client's generator
+        with pytest.raises(InvalidRequestError):
+            async for _ in fe.submit(Request(rid=1,
+                                             prompt=_prompt(cfg, 61, 4),
+                                             max_new_tokens=4,
+                                             n=4, best_of=2)):
+                pass
+        # the frontend survives both and still serves
+        good = [t async for t in fe.submit(
+            Request(rid=2, prompt=_prompt(cfg, 62, 4),
+                    max_new_tokens=3))]
+        await fe.close()
+        return fe, good
+
+    fe, good = asyncio.run(main())
+    assert fe.result(0).reason == "rejected"
+    assert fe.engine.stats["rejected"] == 1
+    assert len(good) == 3 or fe.result(2).reason == "stop"
+    _pool_clean(fe.engine)
+
+
+# ------------------------------------------- launch-layer CLI plumbing
+def test_merge_xla_flags_preserves_existing():
+    from repro.launch.serve import merge_xla_flags
+    # no prior flags: appended
+    assert merge_xla_flags("", 4) == \
+        "--xla_force_host_platform_device_count=4"
+    # other flags preserved, count appended
+    out = merge_xla_flags("--xla_cpu_foo=1 --xla_bar=baz", 2)
+    assert out.split() == ["--xla_cpu_foo=1", "--xla_bar=baz",
+                           "--xla_force_host_platform_device_count=2"]
+    # pre-existing lower count raised (the CI env-block bug), order and
+    # neighbors intact
+    out = merge_xla_flags(
+        "--xla_cpu_foo=1 --xla_force_host_platform_device_count=2 "
+        "--xla_bar=baz", 4)
+    assert out.split() == ["--xla_cpu_foo=1",
+                           "--xla_force_host_platform_device_count=4",
+                           "--xla_bar=baz"]
+    # pre-existing higher count respected verbatim
+    flags = "--xla_force_host_platform_device_count=8"
+    assert merge_xla_flags(flags, 2) == flags
+
+
+def test_parse_prefill_budget():
+    import argparse
+    from repro.launch.serve import parse_prefill_budget
+    assert parse_prefill_budget("none") is None
+    assert parse_prefill_budget("") is None
+    assert parse_prefill_budget("adaptive") == "adaptive"
+    assert parse_prefill_budget("Adaptive") == "adaptive"
+    assert parse_prefill_budget("8") == 8
+    with pytest.raises(argparse.ArgumentTypeError):
+        parse_prefill_budget("fast")

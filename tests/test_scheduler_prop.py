@@ -21,6 +21,14 @@ real ``PagedKVCache``, mirroring exactly the bookkeeping
     pages recorded at fan-out stay physically shared by every branch
     (COW never splits a page below the prompt).
 
+Latency-class / SLA events (PR 6): every submission carries a random
+latency class, a cancel event drops a random in-flight request (the
+pool must come back refcount-clean wherever it was), admission is
+asserted priority-ordered (the scheduler only ever admits the best
+(class priority, queue_seq) waiting candidate), and the adaptive
+prefill budget is asserted inside its [floor, ceiling] clamp for
+arbitrary headroom/rate combinations (deterministic fake clock).
+
 Runs through hypothesis when installed, through a numpy manual-trace
 battery otherwise.  Pure host logic, no jax.
 """
@@ -32,7 +40,8 @@ try:
 except ImportError:                                   # manual traces only
     HAVE_HYPOTHESIS = False
 
-from repro.serving import PagedKVCache, Request, Scheduler
+from repro.serving import (BATCH, INTERACTIVE, LATENCY_CLASSES, STANDARD,
+                           PagedKVCache, Request, Scheduler)
 
 PAGE = 4
 NUM_PAGES = 24
@@ -44,7 +53,9 @@ EOS = 7
 # prefix-cache hits (shared pages at admission) common in the trace.
 BASE = list(range(100, 100 + PAGES_PER_SEQ * PAGE))
 
-N_OPS = 8
+CLASSES = sorted(LATENCY_CLASSES.values(), key=lambda c: c.priority)
+
+N_OPS = 9
 
 if HAVE_HYPOTHESIS:
     op_strategy = st.lists(
@@ -66,7 +77,10 @@ class _Driver:
     def __init__(self, spec_k: int, max_cached: int | None):
         self.c = PagedKVCache(NUM_PAGES, PAGE, MAX_BATCH, PAGES_PER_SEQ,
                               max_cached_pages=max_cached)
-        self.s = Scheduler(self.c)
+        # Deterministic fake clock, bumped by random deltas per op, so
+        # SLA state (headroom, TTFT) is exercised without wall time.
+        self.now = 0.0
+        self.s = Scheduler(self.c, clock=lambda: self.now)
         self.spec_k = spec_k
         self.rid = 0
         self.finished: list = []
@@ -119,15 +133,29 @@ class _Driver:
                     g.prefix_pages, (slot, g.prefix_pages)
                 for p in g.prefix_pages:
                     assert self.c.refcount(p) >= 1
+        self._check_sla()
+
+    def _check_sla(self):
+        """Adaptive budget stays clamped for any headroom x rate, and
+        headroom exists iff something is decoding."""
+        headroom = self.s.sla_headroom()
+        decoding = bool(self.s.decoding_slots())
+        assert (headroom is None) == (not decoding)
+        for rate in (0.0, 50.0, 1e9):
+            b = self.s.adaptive_prefill_budget(rate, floor=2, ceiling=10)
+            assert 2 <= b <= 10, (rate, headroom, b)
+            if not decoding:
+                assert b == 10          # no deadline -> full ceiling
 
     # --------------------------------------------------------------- ops
     def submit(self, rng):
         n_shared = int(rng.integers(0, len(BASE)))
         tail = rng.integers(0, 50, int(rng.integers(1, 6))).tolist()
         prompt = (BASE[:n_shared] + tail)[:PAGES_PER_SEQ * PAGE - 2]
+        cls = CLASSES[int(rng.integers(len(CLASSES)))]
         self.s.submit(Request(rid=self.rid, prompt=prompt,
                               max_new_tokens=int(rng.integers(1, 9)),
-                              eos_id=EOS))
+                              eos_id=EOS, latency_class=cls))
         self.rid += 1
 
     def submit_group(self, rng):
@@ -138,14 +166,42 @@ class _Driver:
         width = int(rng.integers(2, MAX_BATCH + 1))
         kw = {"beam_width": width} if rng.integers(0, 2) \
             else {"n": width}
+        cls = CLASSES[int(rng.integers(len(CLASSES)))]
         self.s.submit(Request(rid=self.rid, prompt=prompt,
                               max_new_tokens=int(rng.integers(1, 7)),
-                              eos_id=EOS, **kw))
+                              eos_id=EOS, latency_class=cls, **kw))
         self.rid += 1
+
+    def cancel(self, rng):
+        """Cancel event: drop a random in-flight request - waiting,
+        mid-prefill, mid-decode, or a whole fanned-out group - and
+        demand it is gone everywhere (the post-op check() then proves
+        the pool is refcount-clean)."""
+        rids = sorted({st.req.rid for st in self.s.running.values()} |
+                      {w.req.rid for w in self.s.waiting})
+        if not rids:
+            assert not self.s.cancel(10 ** 9)     # miss reports False
+            return
+        rid = rids[int(rng.integers(len(rids)))]
+        assert self.s.cancel(rid)
+        assert all(st.req.rid != rid for st in self.s.running.values())
+        assert all(w.req.rid != rid for w in self.s.waiting)
+
+    def _schedule_prefill_checked(self, budget):
+        """schedule_prefill + the priority-ordering property: whatever
+        was admitted must be exactly the best (class priority,
+        queue_seq) prefix of the waiting queue."""
+        before = {w.req.rid: self.s._waiting_key(w) for w in self.s.waiting}
+        chunks, reused = self.s.schedule_prefill(budget)
+        left = {w.req.rid for w in self.s.waiting}
+        admitted = sorted(k for rid, k in before.items() if rid not in left)
+        assert admitted == sorted(before.values())[:len(admitted)], \
+            "admission skipped a more urgent waiting request"
+        return chunks, reused
 
     def prefill(self, rng):
         budget = [None, 3, 7, 16][int(rng.integers(0, 4))]
-        chunks, _ = self.s.schedule_prefill(budget)
+        chunks, _ = self._schedule_prefill_checked(budget)
         for ck in chunks:
             self.s.complete_chunk(ck)
             self.c.register_pages(ck.slot, self.s.running[ck.slot].tokens())
@@ -259,7 +315,7 @@ class _Driver:
         """Pool-pressure pause: schedule prefill with a huge budget while
         pages are scarce - paused sequences must keep slot + pages and
         stay consistent (the scheduler returns no chunk for them)."""
-        chunks, _ = self.s.schedule_prefill(None)
+        chunks, _ = self._schedule_prefill_checked(None)
         scheduled = {ck.slot for ck in chunks}
         for slot in self.s.prefilling_slots():
             if slot not in scheduled:
@@ -275,9 +331,10 @@ class _Driver:
 def _run_trace(ops, spec_k, max_cached):
     d = _Driver(spec_k, max_cached)
     dispatch = [d.submit, d.submit_group, d.prefill, d.decode, d.decode,
-                d.preempt, d.preempt_group, d.pause_probe]
+                d.preempt, d.preempt_group, d.pause_probe, d.cancel]
     assert len(dispatch) == N_OPS
     for code, seed in ops:
+        d.now += (seed % 997) / 100.0        # deterministic clock advance
         dispatch[code](np.random.default_rng(seed))
         d.check()
     # teardown: retire everything; nothing leaks
@@ -364,3 +421,115 @@ if HAVE_HYPOTHESIS:
 def test_rollback_churn_manual():
     for seed in range(30):
         _run_rollback_churn(seed, 1 + seed % 4)
+
+
+# ----------------------------------------------------- SLA determinism
+def _sla_sched():
+    clock = {"t": 0.0}
+    c = PagedKVCache(NUM_PAGES, PAGE, MAX_BATCH, PAGES_PER_SEQ)
+    s = Scheduler(c, clock=lambda: clock["t"])
+    return s, c, clock
+
+
+def _req(rid, cls, n_prompt=4, budget=8):
+    return Request(rid=rid, prompt=list(range(10, 10 + n_prompt)),
+                   max_new_tokens=budget, latency_class=cls)
+
+
+def test_priority_admission_order():
+    """Classes jump the FCFS queue by priority; FCFS holds within a
+    class; preempted work resumes ahead of later same-class arrivals."""
+    s, c, clock = _sla_sched()
+    s.submit(_req(0, BATCH))
+    s.submit(_req(1, STANDARD))
+    s.submit(_req(2, INTERACTIVE))
+    s.submit(_req(3, INTERACTIVE))
+    admitted = s.admit()           # everything fits: one legacy admit
+    order = [s.running[slot].req.rid for slot, _ in admitted]
+    assert order == [2, 3, 1, 0]
+
+    # Preempt the first interactive: it re-queues ahead of a NEW
+    # interactive arrival but still ahead of nothing more urgent.
+    first = next(sl for sl, st in s.running.items() if st.req.rid == 2)
+    s.preempt(first)
+    s.submit(_req(4, INTERACTIVE))
+    nxt = s._next_waiting()
+    assert nxt.req.rid == 2, "preempted work lost its place"
+
+
+def test_choose_victim_prefers_least_urgent_class():
+    s, c, clock = _sla_sched()
+    s.submit(_req(0, INTERACTIVE))
+    s.submit(_req(1, BATCH))
+    s.admit()
+    by_rid = {st.req.rid: sl for sl, st in s.running.items()}
+    assert s.choose_victim() == by_rid[1]
+
+
+def test_adaptive_budget_headroom_arithmetic():
+    """budget = clamp(headroom * rate): exact on a fake clock."""
+    s, c, clock = _sla_sched()
+    assert s.sla_headroom() is None
+    assert s.adaptive_prefill_budget(100.0, 4, 64) == 64   # no deadline
+
+    s.submit(_req(0, STANDARD))          # tpot_target = 0.2s
+    slot, toks = s.admit()[0]
+    s.record_token(slot, 1)              # last_token_time = 0.0
+    clock["t"] = 0.1                     # 0.1s headroom left
+    assert abs(s.sla_headroom() - 0.1) < 1e-9
+    assert s.adaptive_prefill_budget(100.0, 4, 64) == 10   # 0.1 * 100
+    assert s.adaptive_prefill_budget(100.0, 4, 8) == 8     # ceiling
+    clock["t"] = 10.0                    # already late
+    assert s.adaptive_prefill_budget(100.0, 4, 64) == 4    # floor
+    # The most urgent decoding slot sets the headroom.
+    s.retire(slot, "length")
+    s.submit(_req(1, INTERACTIVE))       # tpot_target = 0.05s
+    slot2, _ = s.admit()[0]
+    s.record_token(slot2, 1)             # last_token_time = 10.0
+    clock["t"] = 10.01
+    assert abs(s.sla_headroom() - 0.04) < 1e-9
+
+
+def test_retire_reports_ttft():
+    s, c, clock = _sla_sched()
+    s.submit(_req(0, STANDARD))
+    clock["t"] = 1.5
+    slot, _ = s.admit()[0]
+    clock["t"] = 2.0
+    s.record_token(slot, 1)
+    clock["t"] = 9.0                     # later tokens don't move TTFT
+    s.record_token(slot, 2)
+    fr = s.retire(slot, "length")
+    assert abs(fr.ttft - 2.0) < 1e-9
+    # Never-started requests report no TTFT.
+    s.submit(_req(1, STANDARD))
+    slot, _ = s.admit()[0]
+    assert s.retire(slot, "cancelled").ttft is None
+
+
+def test_cancel_everywhere_frees_pages():
+    """Cancel while waiting, mid-prefill, and mid-decode: the pool must
+    return to fully free every time."""
+    s, c, clock = _sla_sched()
+    # waiting
+    s.submit(_req(0, STANDARD))
+    assert s.cancel(0) and not s.waiting
+    # mid-prefill (chunked, partial progress)
+    s.submit(_req(1, STANDARD, n_prompt=12))
+    chunks, _ = s.schedule_prefill(4)
+    s.complete_chunk(chunks[0])
+    assert s.prefilling_slots()
+    assert s.cancel(1)
+    c.check_invariants()
+    assert c.available_page_count == NUM_PAGES
+    assert c.free_slot_count == MAX_BATCH
+    # mid-decode
+    s.submit(_req(2, STANDARD))
+    slot, _ = s.admit()[0]
+    s.record_token(slot, 1)
+    assert s.cancel(2)
+    c.check_invariants()
+    assert c.available_page_count == NUM_PAGES
+    assert c.free_slot_count == MAX_BATCH
+    # a miss is reported, not raised
+    assert not s.cancel(99)

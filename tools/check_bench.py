@@ -1,0 +1,195 @@
+#!/usr/bin/env python
+"""CI perf-trajectory gate: fresh benchmark smokes vs the committed
+``BENCH_serving.json`` baseline.
+
+Runs the table of ``benchmarks/serving.py --smoke --json`` invocations
+below (one per workload section), merges their metric dicts, and
+compares every metric against the committed baseline under a per-key
+tolerance rule:
+
+  * structural metrics (token/page/step/fork counts, accept-rate,
+    shared-page fraction, cancellation counts) are *deterministic* for
+    the pinned workload seeds -> compared exactly.  A structural drift
+    is a behavior change and must be justified by regenerating the
+    baseline in the same PR (``--update``);
+  * wall-clock metrics (tok/s, TTFT/TPOT percentiles, open-loop step
+    counts) vary across runner hardware -> compared under a loose
+    multiplicative factor (plus an absolute slack for sub-second
+    latencies), one-sided in the direction that means "got worse";
+  * ``smoke_ok`` must simply be true - the smoke's own gate already
+    failed the run otherwise.
+
+Usage:
+  python tools/check_bench.py                 # compare vs baseline
+  python tools/check_bench.py --update        # regenerate the baseline
+  python tools/check_bench.py --fresh-out f.json   # also keep the fresh
+                                                   # run (CI artifact)
+
+Exit 0 = within tolerance.  The committed baseline records the perf
+trajectory across PRs: regenerate it (and eyeball the diff) whenever a
+change legitimately moves a structural metric.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(REPO, "BENCH_serving.json")
+BENCH = os.path.join(REPO, "benchmarks", "serving.py")
+
+# One row per baseline section: (section, extra benchmark args).
+# Every row runs `python benchmarks/serving.py --smoke --json <tmp>`.
+RUNS = [
+    ("shared_prefix", []),
+    ("spec_greedy", ["--spec-k", "4"]),
+    ("parallel_sample", ["--workload", "parallel-sample", "--n", "4"]),
+    ("open_loop", ["--workload", "open-loop"]),
+]
+
+# Wall-clock factor: a metric may be this many times worse than the
+# committed baseline before the gate trips - wide enough for the spread
+# of CI runner hardware, tight enough to catch a real cliff (an
+# accidental recompile-per-step, a lost fast path).
+TIME_FACTOR = 5.0
+ABS_SLACK = 0.5          # seconds, absorbs scheduler jitter on tiny runs
+
+
+def rule_for(section: str, key: str):
+    """Tolerance rule for one metric: ("exact",) |
+    ("latency", factor, slack) - higher is worse |
+    ("throughput", factor) - lower is worse |
+    ("true",) - must be truthy."""
+    if key == "smoke_ok":
+        return ("true",)
+    if key.startswith(("ttft_", "tpot_")):
+        return ("latency", TIME_FACTOR, ABS_SLACK)
+    if key.endswith("_tok_s"):
+        return ("throughput", TIME_FACTOR)
+    if section == "open_loop" and key in ("steps", "adaptive_budget_last",
+                                          "preemptions", "cancelled"):
+        # Step/cancel interleaving depends on wall-clock arrival timing.
+        return ("latency", TIME_FACTOR, ABS_SLACK) if key == "steps" \
+            else ("any",)
+    return ("exact",)
+
+
+def check_metric(section, key, base, fresh) -> str | None:
+    """None = within tolerance, else a human-readable failure."""
+    rule = rule_for(section, key)
+    kind = rule[0]
+    if kind == "any":
+        return None
+    if kind == "true":
+        return None if fresh else f"{section}.{key}: smoke gate failed"
+    if base is None or fresh is None:
+        if base is None and fresh is None:
+            return None
+        return (f"{section}.{key}: baseline={base!r} fresh={fresh!r} "
+                f"(one side missing)")
+    if kind == "exact":
+        if fresh != base:
+            return (f"{section}.{key}: {fresh!r} != baseline {base!r} "
+                    f"(structural metric - regenerate with --update if "
+                    f"intended)")
+        return None
+    if kind == "latency":
+        _, factor, slack = rule
+        if fresh > base * factor + slack:
+            return (f"{section}.{key}: {fresh:.3f} > {factor:.0f}x "
+                    f"baseline {base:.3f} (+{slack}s slack)")
+        return None
+    if kind == "throughput":
+        _, factor = rule
+        if fresh < base / factor:
+            return (f"{section}.{key}: {fresh:.1f} < baseline "
+                    f"{base:.1f} / {factor:.0f}")
+        return None
+    raise AssertionError(rule)
+
+
+def run_fresh(tmpdir: str) -> dict:
+    """Run every benchmark row, returning {section: metrics}."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    fresh = {}
+    for section, extra in RUNS:
+        out = os.path.join(tmpdir, f"bench_{section}.json")
+        cmd = [sys.executable, BENCH, "--smoke", "--json", out] + extra
+        print(f"[check_bench] {section}: {' '.join(cmd[1:])}", flush=True)
+        proc = subprocess.run(cmd, env=env, cwd=REPO)
+        if proc.returncode != 0:
+            raise SystemExit(
+                f"check_bench: benchmark row {section!r} exited "
+                f"{proc.returncode}")
+        with open(out, encoding="utf-8") as fh:
+            fresh[section] = json.load(fh)
+    return fresh
+
+
+def compare(baseline: dict, fresh: dict) -> list[str]:
+    errors = []
+    for section in baseline:
+        if section not in fresh:
+            errors.append(f"{section}: missing from fresh run")
+            continue
+        base_m, fresh_m = baseline[section], fresh[section]
+        for key in sorted(set(base_m) | set(fresh_m)):
+            err = check_metric(section, key, base_m.get(key),
+                               fresh_m.get(key))
+            if err:
+                errors.append(err)
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--update", action="store_true",
+                    help="regenerate the committed baseline from a "
+                         "fresh run instead of comparing")
+    ap.add_argument("--fresh-out", default=None, metavar="PATH",
+                    help="also write the fresh merged metrics (the CI "
+                         "build artifact)")
+    args = ap.parse_args()
+
+    import tempfile
+    with tempfile.TemporaryDirectory() as tmp:
+        fresh = run_fresh(tmp)
+    if args.fresh_out:
+        with open(args.fresh_out, "w", encoding="utf-8") as fh:
+            json.dump(fresh, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"fresh metrics -> {args.fresh_out}")
+
+    if args.update:
+        with open(args.baseline, "w", encoding="utf-8") as fh:
+            json.dump(fresh, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"baseline regenerated -> {args.baseline}")
+        return 0
+
+    if not os.path.isfile(args.baseline):
+        print(f"check_bench: no baseline at {args.baseline} "
+              f"(run with --update to create it)")
+        return 1
+    with open(args.baseline, encoding="utf-8") as fh:
+        baseline = json.load(fh)
+    errors = compare(baseline, fresh)
+    if errors:
+        print(f"check_bench: {len(errors)} metric(s) out of tolerance:")
+        for e in errors:
+            print("  " + e)
+        return 1
+    n = sum(len(m) for m in baseline.values())
+    print(f"check_bench: OK ({n} metrics across {len(baseline)} "
+          f"sections within tolerance)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

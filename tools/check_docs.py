@@ -19,8 +19,8 @@ Checks, per scanned document:
   * relative markdown link targets -> must resolve from the doc's
     directory;
   * `--flag` tokens -> must be defined by some argparse entry point
-    (benchmarks/*.py, src/repro/launch/*.py) or be on the allowlist of
-    external flags (XLA/pytest flags we merely quote).
+    (benchmarks/*.py, src/repro/launch/*.py, tools/*.py) or be on the
+    allowlist of external flags (XLA/pytest flags we merely quote).
 
 Usage: python tools/check_docs.py   (exit 0 = consistent)
 """
@@ -55,7 +55,8 @@ FLAG_ALLOWLIST = {
 def _defined_flags() -> set[str]:
     flags = set()
     scan = []
-    for d in ("benchmarks", os.path.join("src", "repro", "launch")):
+    for d in ("benchmarks", "tools",
+              os.path.join("src", "repro", "launch")):
         full = os.path.join(REPO, d)
         scan += [os.path.join(full, f) for f in os.listdir(full)
                  if f.endswith(".py")]

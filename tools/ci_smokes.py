@@ -1,0 +1,139 @@
+#!/usr/bin/env python
+"""Table-driven CI smoke runner: every end-to-end serve / benchmark
+gate is one row in ``SMOKES`` below, not one copy-pasted YAML block in
+.github/workflows/ci.yml.  Adding a gate = adding a row.
+
+Each row is (key, description, argv-after-python).  All rows run with
+the repo root as cwd and ``src`` on PYTHONPATH; the entry points set
+any XLA device-count flags they need themselves (see
+repro.launch.serve.ensure_host_devices - a pre-existing XLA_FLAGS is
+merged, not clobbered), so no row needs a per-step env block.
+
+Usage:
+  python tools/ci_smokes.py                 # run everything
+  python tools/ci_smokes.py --list          # show the table
+  python tools/ci_smokes.py --only serve-async,bench-open-loop
+  python tools/ci_smokes.py --keep-going    # don't stop at first failure
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SERVE = ["-m", "repro.launch.serve", "--arch", "qwen3-1.7b", "--reduced"]
+ASYNC = ["-m", "repro.launch.serve_async", "--arch", "qwen3-1.7b",
+         "--reduced"]
+BENCH = [os.path.join("benchmarks", "serving.py")]
+
+SMOKES = [
+    ("serve",
+     "Paged continuous-batching serve smoke",
+     SERVE + ["--batch", "2", "--steps", "4"]),
+    ("serve-chunked",
+     "Chunked-prefill serve smoke (bounded prefill budget)",
+     SERVE + ["--batch", "2", "--steps", "4", "--prefill-budget", "8"]),
+    ("serve-adaptive",
+     "Adaptive-prefill-budget serve smoke (SLA-headroom-derived)",
+     SERVE + ["--batch", "2", "--steps", "4",
+              "--prefill-budget", "adaptive"]),
+    ("serve-sampled-spec",
+     "Sampled + speculative serve smoke",
+     SERVE + ["--batch", "2", "--steps", "8", "--spec-k", "4",
+              "--temperature", "0.8", "--top-k", "4"]),
+    ("serve-dense",
+     "Dense fallback serve smoke",
+     SERVE + ["--batch", "2", "--steps", "4", "--dense"]),
+    ("serve-async",
+     "Async streaming smoke (Poisson open loop + mid-stream cancels)",
+     ASYNC + ["--smoke", "--cancel-every", "3"]),
+    ("bench-shared-prefix",
+     "Shared-prefix + chunked-prefill benchmark smoke",
+     BENCH + ["--smoke"]),
+    ("bench-spec-greedy",
+     "Speculative greedy gate (accept-rate > 0, tokens/step >= 1.1)",
+     BENCH + ["--spec-k", "4", "--smoke"]),
+    ("bench-spec-sampled",
+     "Speculative sampling gate (accept-rate > 0, tokens/step >= 1)",
+     BENCH + ["--spec-k", "4", "--temperature", "0.8", "--smoke"]),
+    ("bench-parallel-sample",
+     "Parallel-sampling gate (shared pages > 50%, refcounts clean)",
+     BENCH + ["--workload", "parallel-sample", "--n", "4", "--smoke"]),
+    ("bench-beam",
+     "Beam-search gate (shared pages > 50%, refcounts clean)",
+     BENCH + ["--workload", "parallel-sample", "--beam-width", "4",
+              "--smoke"]),
+    ("bench-open-loop",
+     "Open-loop SLA gate (streams resolve, cancels refcount-clean)",
+     BENCH + ["--workload", "open-loop", "--smoke"]),
+    ("serve-tp",
+     "Tensor-parallel serve smoke (2-shard simulated mesh)",
+     SERVE + ["--batch", "2", "--steps", "4", "--tp", "2"]),
+    ("bench-tp",
+     "Tensor-parallel gate (token parity + pool/shard halved)",
+     BENCH + ["--tp", "2", "--smoke"]),
+    ("bench-tp-spec",
+     "Tensor-parallel speculative gate (spec-k parity under TP)",
+     BENCH + ["--tp", "2", "--spec-k", "4", "--smoke"]),
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--list", action="store_true",
+                    help="print the smoke table and exit")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated row keys to run")
+    ap.add_argument("--keep-going", action="store_true",
+                    help="run every row even after a failure")
+    args = ap.parse_args()
+
+    rows = SMOKES
+    if args.only:
+        want = [k.strip() for k in args.only.split(",") if k.strip()]
+        by_key = {k: (k, d, c) for k, d, c in SMOKES}
+        unknown = [k for k in want if k not in by_key]
+        if unknown:
+            ap.error(f"unknown smoke key(s) {unknown}; have "
+                     f"{[k for k, _, _ in SMOKES]}")
+        rows = [by_key[k] for k in want]
+    if args.list:
+        for key, desc, cmd in rows:
+            print(f"{key:<22} {desc}")
+            print(f"{'':<22} python {' '.join(cmd)}")
+        return 0
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    results: list[tuple[str, int, float]] = []
+    for key, desc, cmd in rows:
+        print(f"\n=== [{key}] {desc}", flush=True)
+        t0 = time.perf_counter()
+        rc = subprocess.run([sys.executable] + cmd, env=env,
+                            cwd=REPO).returncode
+        dt = time.perf_counter() - t0
+        results.append((key, rc, dt))
+        if rc != 0 and not args.keep_going:
+            break
+
+    print("\n=== smoke summary")
+    failed = [k for k, rc, _ in results if rc != 0]
+    for key, rc, dt in results:
+        print(f"  {'PASS' if rc == 0 else 'FAIL':<5} {key:<22} {dt:6.1f}s")
+    skipped = len(rows) - len(results)
+    if skipped:
+        print(f"  (stopped early: {skipped} row(s) not run)")
+    if failed:
+        print(f"smokes: FAIL ({len(failed)}/{len(results)} failed)")
+        return 1
+    print(f"smokes: OK ({len(results)} gates)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
