@@ -111,6 +111,17 @@ def make_shared_prefix_workload(n, sys_len, uniq_len, long_len, vocab,
     return prompts, budgets
 
 
+def _fp_bytes_per_token(cfg) -> int:
+    """Reference pool bytes/token of raw ``fp`` storage for this model -
+    the denominator of the equal-pool-bytes slot multiplier (layers,
+    heads and head dim identical across codecs, so the ratio is exactly
+    the per-row storage ratio)."""
+    from repro.kernels import page_codec
+    from repro.models.model import _dtype
+    return cfg.n_layers * page_codec.bytes_per_token(
+        "fp", cfg.n_kv_heads, cfg.d_head, _dtype(cfg.compute_dtype))
+
+
 def _dense_jits(model):
     """One jit wrapper pair per model, so the timed run reuses the
     warmup run's compile cache (mirrors the engine's shared jits)."""
@@ -165,7 +176,7 @@ def run_dense(model, params, prompts, budgets, batch, max_seq):
 
 def run_paged(model, params, prompts, budgets, batch, max_seq, page_size,
               prefill_budget=None, spec_k=0, sampling=None, mesh=None,
-              group=None, check_every_step=False):
+              group=None, check_every_step=False, kv_codec="fp"):
     """Continuous batching with chunked prefill + prefix caching, and
     optionally self-speculative decode (``spec_k`` drafts per step),
     per-request stochastic sampling, tensor parallelism (``mesh``
@@ -189,7 +200,7 @@ def run_paged(model, params, prompts, budgets, batch, max_seq, page_size,
     engine = ServingEngine(model, params, max_batch=batch,
                            page_size=page_size, max_seq=max_seq,
                            prefill_budget=prefill_budget, spec_k=spec_k,
-                           mesh=mesh)
+                           mesh=mesh, kv_codec=kv_codec)
     def samp(i):
         if sampling is None:
             return None
@@ -293,6 +304,14 @@ def main():
                     help="dense reserves this per slot up front; paged "
                          "allocates pages on demand - the gap is the win")
     ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--kv-codec", choices=("fp", "int8", "log16"),
+                    default="fp",
+                    help="paged KV page codec (see repro.kernels."
+                         "page_codec): quantized codecs shrink pool "
+                         "bytes/token, so a fixed byte budget admits "
+                         "proportionally more concurrent sequences; "
+                         "with --smoke, a non-fp codec additionally "
+                         "gates on >= 2x equal-pool-bytes slots vs fp")
     ap.add_argument("--prefill-budget", type=int, default=None,
                     help="prefill token budget per engine step (chunked "
                          "prefill); default: unbounded")
@@ -418,13 +437,15 @@ def main():
     # region; engines share one compile cache via the model.
     run_dense(model, params, prompts, budgets, args.batch, args.max_seq)
     run_paged(model, params, prompts, budgets, args.batch, args.max_seq,
-              args.page_size, args.prefill_budget, args.spec_k, sampling)
+              args.page_size, args.prefill_budget, args.spec_k, sampling,
+              kv_codec=args.kv_codec)
 
     d_tok, d_dt = run_dense(model, params, prompts, budgets, args.batch,
                             args.max_seq)
-    p_tok, p_dt, stats, stalls, _, _ = run_paged(
+    p_tok, p_dt, stats, stalls, _, engine = run_paged(
         model, params, prompts, budgets, args.batch, args.max_seq,
-        args.page_size, args.prefill_budget, args.spec_k, sampling)
+        args.page_size, args.prefill_budget, args.spec_k, sampling,
+        kv_codec=args.kv_codec)
     d_tps = d_tok / d_dt
     p_tps = p_tok / p_dt
     total_prompt = sum(len(p) for p in prompts)
@@ -438,6 +459,14 @@ def main():
           f"{total_prompt} submitted "
           f"({stats['cached_prefill_tokens']} reused from prefix cache)")
     print(f"decode stalls:      {stalls} steps")
+    # Byte accounting: pool bytes per stored KV token-row under this
+    # codec vs raw fp storage.  At a fixed pool byte budget the codec
+    # admits equal_bytes_slots_x times the concurrent sequences.
+    bpt = engine.bytes_per_token()
+    fp_bpt = _fp_bytes_per_token(model.cfg)
+    slots_x = fp_bpt / bpt
+    print(f"kv codec {args.kv_codec}: {bpt} B/token vs fp {fp_bpt} "
+          f"-> {slots_x:.2f}x concurrent slots at equal pool bytes")
     accept_rate = stats["draft_accepted"] / max(stats["draft_tokens"], 1)
     # Accepted tokens per slot per decode step: 1.0 = plain decode,
     # spec_k + 1 = every draft accepted every step.
@@ -465,6 +494,9 @@ def main():
         "tokens_per_step": tok_per_step,
         "steps": stats["steps"],
         "preemptions": stats["preemptions"],
+        "kv_codec": args.kv_codec,
+        "bytes_per_token": bpt,
+        "equal_bytes_slots_x": slots_x,
     }
     ok = p_tps >= d_tps
     if args.smoke:
@@ -488,6 +520,13 @@ def main():
             if tok_per_step < floor:
                 print(f"SMOKE FAIL: spec decode below {floor} tokens/step")
                 ok = False
+        if args.kv_codec != "fp" and slots_x < 2.0:
+            # The codec tentpole's capacity claim: a quantized pool
+            # must at least double the sequences a fixed byte budget
+            # can hold.
+            print(f"SMOKE FAIL: {args.kv_codec} equal-pool-bytes slots "
+                  f"{slots_x:.2f}x < 2x vs fp")
+            ok = False
         print("smoke:", "OK" if ok else "FAIL")
     metrics["smoke_ok"] = bool(ok)
     _write_json(args.json, metrics)
@@ -531,7 +570,8 @@ def _run_parallel_sample(model, params, args):
     common = dict(batch=args.batch, max_seq=args.max_seq,
                   page_size=args.page_size,
                   prefill_budget=args.prefill_budget, spec_k=args.spec_k,
-                  sampling=sampling, group=group, check_every_step=True)
+                  sampling=sampling, group=group, check_every_step=True,
+                  kv_codec=args.kv_codec)
     if args.tp > 1:
         from repro.launch.mesh import make_tp_mesh
         common["mesh"] = make_tp_mesh(args.tp)
@@ -640,7 +680,7 @@ def _run_open_loop(model, params, args):
         engine = ServingEngine(
             model, params, max_batch=args.batch, page_size=args.page_size,
             max_seq=args.max_seq, prefill_budget="adaptive",
-            spec_k=args.spec_k)
+            spec_k=args.spec_k, kv_codec=args.kv_codec)
         t0 = time.perf_counter()
         records = asyncio.run(open_loop(
             AsyncFrontend(engine), build_arrivals(),
@@ -663,7 +703,9 @@ def _run_open_loop(model, params, args):
     metrics = {"workload": "open-loop", "requests": n,
                "cancelled": st["cancelled"],
                "steps": st["steps"],
-               "adaptive_budget_last": st["adaptive_budget_last"]}
+               "adaptive_budget_last": st["adaptive_budget_last"],
+               "kv_codec": engine.kv_codec,
+               "bytes_per_token": engine.bytes_per_token()}
     for cls, ent in summary.items():
         tgt = LATENCY_CLASSES[cls]
         fmt = lambda v: "-" if v is None else f"{1e3 * v:.0f}ms"  # noqa: E731
@@ -718,11 +760,14 @@ def _run_tp(model, params, prompts, budgets, sampling, args):
     mesh = make_tp_mesh(args.tp)
     common = (model, params, prompts, budgets, args.batch, args.max_seq,
               args.page_size, args.prefill_budget, args.spec_k, sampling)
-    run_paged(*common)                       # warm single-shard jits
-    run_paged(*common, mesh=mesh)            # warm TP jits
-    s_tok, s_dt, s_stats, s_stalls, s_fin, s_eng = run_paged(*common)
+    codec = dict(kv_codec=args.kv_codec)
+    run_paged(*common, **codec)              # warm single-shard jits
+    run_paged(*common, mesh=mesh, **codec)   # warm TP jits
+    s_tok, s_dt, s_stats, s_stalls, s_fin, s_eng = run_paged(*common,
+                                                             **codec)
     p_tok, p_dt, stats, stalls, p_fin, p_eng = run_paged(*common,
-                                                         mesh=mesh)
+                                                         mesh=mesh,
+                                                         **codec)
     s_out = {f.rid: f.tokens for f in s_fin}
     p_out = {f.rid: f.tokens for f in p_fin}
     identical = s_out == p_out

@@ -321,6 +321,27 @@ def _prefill_jnp_grouped(qg, k_cache, v_cache, q_pos, kv_lens, *, scale,
 # shard's local heads and merges the gathered triplets with the
 # log-domain ACC rule instead - so sharded and unsharded serving share
 # one set of numerics.
+#
+# ``codec`` / ``k_scales`` / ``v_scales`` select a page codec
+# (:mod:`repro.kernels.page_codec`): the Pallas kernels decode each page
+# tile inside the loop (scales streamed via the same scalar-prefetch
+# index map), and the jnp fallbacks decode the gathered dense view with
+# the *same* codec.decode - codec=None is the raw fp pool, bit-exact to
+# the pre-codec path.
+
+def _gathered_kv(k_pages, v_pages, page_table, codec, k_scales, v_scales):
+    """Dense per-sequence KV view for the jnp fallbacks, codec-decoded."""
+    k_cache = paged_k.gather_pages(k_pages, page_table)
+    v_cache = paged_k.gather_pages(v_pages, page_table)
+    if codec is not None:
+        ks = None if k_scales is None else \
+            paged_k.gather_pages(k_scales, page_table)
+        vs = None if v_scales is None else \
+            paged_k.gather_pages(v_scales, page_table)
+        k_cache = codec.decode(k_cache, ks)
+        v_cache = codec.decode(v_cache, vs)
+    return k_cache, v_cache
+
 
 def paged_decode_partials(
     qg: jax.Array,          # (B, Hkv, G, d) grouped queries
@@ -332,6 +353,9 @@ def paged_decode_partials(
     impl: str = "fa2",
     scale: float | None = None,
     force_pallas: bool = False,
+    codec=None,
+    k_scales: jax.Array | None = None,
+    v_scales: jax.Array | None = None,
 ):
     """Paged decode partial triplet: (o~ (B,Hkv,G,d), m/l (B,Hkv,G))."""
     b = qg.shape[0]
@@ -339,9 +363,10 @@ def paged_decode_partials(
     if force_pallas or (_on_tpu() and impl in ("fa2_pallas", "hfa_pallas")):
         return paged_k.paged_decode_partial_pallas(
             qg, k_pages, v_pages, page_table, kv_lens, scale=scale,
-            use_hfa=use_hfa, interpret=not _on_tpu())
-    k_cache = paged_k.gather_pages(k_pages, page_table)
-    v_cache = paged_k.gather_pages(v_pages, page_table)
+            use_hfa=use_hfa, interpret=not _on_tpu(), codec=codec,
+            k_scales=k_scales, v_scales=v_scales)
+    k_cache, v_cache = _gathered_kv(k_pages, v_pages, page_table, codec,
+                                    k_scales, v_scales)
     kvl = jnp.broadcast_to(jnp.asarray(kv_lens, jnp.int32), (b,))
     o, m, l = _prefill_jnp_partial(qg[:, :, :, None, :], k_cache, v_cache,
                                    kvl[:, None] - 1, kvl, scale=scale,
@@ -360,15 +385,19 @@ def paged_prefill_partials(
     impl: str = "fa2",
     scale: float | None = None,
     force_pallas: bool = False,
+    codec=None,
+    k_scales: jax.Array | None = None,
+    v_scales: jax.Array | None = None,
 ):
     """Paged chunked-prefill partial triplet: shapes (B,Hkv,G,L,[d])."""
     use_hfa = impl.startswith("hfa")
     if force_pallas or (_on_tpu() and impl in ("fa2_pallas", "hfa_pallas")):
         return paged_pf_k.paged_prefill_partial_pallas(
             qg, k_pages, v_pages, page_table, start_pos, kv_lens,
-            scale=scale, use_hfa=use_hfa, interpret=not _on_tpu())
-    k_cache = paged_k.gather_pages(k_pages, page_table)
-    v_cache = paged_k.gather_pages(v_pages, page_table)
+            scale=scale, use_hfa=use_hfa, interpret=not _on_tpu(),
+            codec=codec, k_scales=k_scales, v_scales=v_scales)
+    k_cache, v_cache = _gathered_kv(k_pages, v_pages, page_table, codec,
+                                    k_scales, v_scales)
     l = qg.shape[3]
     q_pos = start_pos.astype(jnp.int32)[:, None] + \
         jnp.arange(l, dtype=jnp.int32)[None]
@@ -388,15 +417,19 @@ def paged_verify_partials(
     impl: str = "fa2",
     scale: float | None = None,
     force_pallas: bool = False,
+    codec=None,
+    k_scales: jax.Array | None = None,
+    v_scales: jax.Array | None = None,
 ):
     """Paged speculative-verify partial triplet: shapes (B,Hkv,G,K,[d])."""
     use_hfa = impl.startswith("hfa")
     if force_pallas or (_on_tpu() and impl in ("fa2_pallas", "hfa_pallas")):
         return paged_v_k.paged_verify_partial_pallas(
             qg, k_pages, v_pages, page_table, seq_lens, chunk_lens,
-            scale=scale, use_hfa=use_hfa, interpret=not _on_tpu())
-    k_cache = paged_k.gather_pages(k_pages, page_table)
-    v_cache = paged_k.gather_pages(v_pages, page_table)
+            scale=scale, use_hfa=use_hfa, interpret=not _on_tpu(),
+            codec=codec, k_scales=k_scales, v_scales=v_scales)
+    k_cache, v_cache = _gathered_kv(k_pages, v_pages, page_table, codec,
+                                    k_scales, v_scales)
     kw = qg.shape[3]
     sl = seq_lens.astype(jnp.int32)
     q_pos = sl[:, None] + jnp.arange(kw, dtype=jnp.int32)[None]
@@ -417,6 +450,9 @@ def paged_prefill_attention(
     impl: str = "fa2",
     scale: float | None = None,
     force_pallas: bool = False,
+    codec=None,
+    k_scales: jax.Array | None = None,
+    v_scales: jax.Array | None = None,
 ) -> jax.Array:
     """Chunked-prefill attention against a paged KV cache.
 
@@ -438,7 +474,8 @@ def paged_prefill_attention(
     qg = jnp.swapaxes(q, 1, 2).reshape(b, hkv, g, l, d)
     o, m, ell = paged_prefill_partials(
         qg, k_pages, v_pages, page_table, start_pos, kv_lens, impl=impl,
-        scale=scale, force_pallas=force_pallas)
+        scale=scale, force_pallas=force_pallas, codec=codec,
+        k_scales=k_scales, v_scales=v_scales)
     out = decode_k.finalize_decode(o, ell, use_hfa=use_hfa)
     # (B, Hkv, G, L, d) -> (B, L, H, d)
     return jnp.swapaxes(out.reshape(b, h, l, d), 1, 2).astype(q.dtype)
@@ -454,6 +491,9 @@ def paged_decode_attention(
     impl: str = "fa2",
     scale: float | None = None,
     force_pallas: bool = False,
+    codec=None,
+    k_scales: jax.Array | None = None,
+    v_scales: jax.Array | None = None,
 ) -> jax.Array:
     """Continuous-batching decode attention against a paged KV cache.
 
@@ -473,7 +513,8 @@ def paged_decode_attention(
     qg = q.reshape(b, h, d).reshape(b, hkv, g, d)
     o, m, l = paged_decode_partials(qg, k_pages, v_pages, page_table,
                                     kv_lens, impl=impl, scale=scale,
-                                    force_pallas=force_pallas)
+                                    force_pallas=force_pallas, codec=codec,
+                                    k_scales=k_scales, v_scales=v_scales)
     out = decode_k.finalize_decode(o, l, use_hfa=use_hfa)
     return out.reshape(b, 1, h, d).astype(q.dtype)
 
@@ -489,6 +530,9 @@ def paged_verify_attention(
     impl: str = "fa2",
     scale: float | None = None,
     force_pallas: bool = False,
+    codec=None,
+    k_scales: jax.Array | None = None,
+    v_scales: jax.Array | None = None,
 ) -> jax.Array:
     """Multi-query speculative-verify attention against a paged KV cache.
 
@@ -511,7 +555,8 @@ def paged_verify_attention(
     qg = jnp.swapaxes(q, 1, 2).reshape(b, hkv, g, kw, d)
     o, m, l = paged_verify_partials(
         qg, k_pages, v_pages, page_table, seq_lens, chunk_lens, impl=impl,
-        scale=scale, force_pallas=force_pallas)
+        scale=scale, force_pallas=force_pallas, codec=codec,
+        k_scales=k_scales, v_scales=v_scales)
     out = decode_k.finalize_decode(o, l, use_hfa=use_hfa)
     # (B, Hkv, G, K, d) -> (B, K, H, d)
     return jnp.swapaxes(out.reshape(b, h, kw, d), 1, 2).astype(q.dtype)

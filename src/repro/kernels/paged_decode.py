@@ -34,9 +34,28 @@ from repro.kernels import bitmath
 from repro.kernels.decode import LANES, NEG_INF
 
 
-def _paged_decode_kernel(pt_ref, sl_ref, q_ref, k_ref, v_ref,
-                         o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr, *,
-                         page_size: int, scale: float, use_hfa: bool):
+def _load_tile(codec, ref, s_ref):
+    """Decode one (page, d) KV tile to f32 right after its DMA.
+
+    ``codec is None`` is the raw fp pool (astype only - bit-exact to the
+    pre-codec kernel); otherwise the codec's decode runs inside the tile
+    loop, with the per-page scale tile (page, 1) from the sidecar pool.
+    """
+    tile = ref[0, :, 0, :]
+    if codec is None:
+        return tile.astype(jnp.float32)
+    s = None if s_ref is None else s_ref[0, :, 0, :].astype(jnp.float32)
+    return codec.decode(tile, s).astype(jnp.float32)
+
+
+def _paged_decode_kernel(pt_ref, sl_ref, q_ref, k_ref, v_ref, *rest,
+                         page_size: int, scale: float, use_hfa: bool,
+                         codec=None):
+    if codec is not None and codec.has_scales:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr = rest
     b = pl.program_id(0)
     j = pl.program_id(2)
     nj = pl.num_programs(2)
@@ -48,8 +67,8 @@ def _paged_decode_kernel(pt_ref, sl_ref, q_ref, k_ref, v_ref,
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     q = q_ref[0, 0].astype(jnp.float32)           # (G, d)
-    k = k_ref[0, :, 0, :].astype(jnp.float32)     # (page, d)
-    v = v_ref[0, :, 0, :].astype(jnp.float32)     # (page, d)
+    k = _load_tile(codec, k_ref, ks_ref)          # (page, d)
+    v = _load_tile(codec, v_ref, vs_ref)          # (page, d)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
     kv_ids = j * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
@@ -89,12 +108,20 @@ def paged_decode_partial_pallas(
     scale: float | None = None,
     use_hfa: bool = False,
     interpret: bool = True,
+    codec=None,
+    k_scales: jax.Array | None = None,  # (P, page, Hkv, 1) f32 sidecar
+    v_scales: jax.Array | None = None,
 ):
     """Partial paged decode attention: one block-FAU triplet per (b, hkv).
 
     Page-table entries past ``ceil(kv_lens[b] / page)`` may be any valid
     page id (their contribution is masked out); ``kv_lens[b] == 0`` marks
     a free slot and yields an all-zero triplet.
+
+    ``codec`` (a :class:`repro.kernels.page_codec.PageCodec`, or None for
+    the raw fp pool) decodes each page tile inside the loop; codecs with
+    scales stream the matching sidecar page through the same
+    scalar-prefetch index map as the KV pages.
 
     Returns:
       (o~, m, l): o~ (B, Hkv, G, d) unnormalized f32 accumulator, m/l
@@ -106,19 +133,30 @@ def paged_decode_partial_pallas(
     assert hkv_p == hkv, (hkv_p, hkv)
     pages_per_seq = page_table.shape[1]
     scale_v = (1.0 / d ** 0.5) if scale is None else scale
+    has_scales = codec is not None and codec.has_scales
 
     kernel = functools.partial(_paged_decode_kernel, page_size=page_size,
-                               scale=scale_v, use_hfa=use_hfa)
+                               scale=scale_v, use_hfa=use_hfa, codec=codec)
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d), lambda b, h, j, pt, sl: (b, h, 0, 0)),
+        pl.BlockSpec((1, page_size, 1, d),
+                     lambda b, h, j, pt, sl: (pt[b, j], 0, h, 0)),
+        pl.BlockSpec((1, page_size, 1, d),
+                     lambda b, h, j, pt, sl: (pt[b, j], 0, h, 0)),
+    ]
+    operands = [q, k_pages, v_pages]
+    if has_scales:
+        in_specs += [
+            pl.BlockSpec((1, page_size, 1, 1),
+                         lambda b, h, j, pt, sl: (pt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, 1),
+                         lambda b, h, j, pt, sl: (pt[b, j], 0, h, 0)),
+        ]
+        operands += [k_scales, v_scales]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, hkv, pages_per_seq),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, d), lambda b, h, j, pt, sl: (b, h, 0, 0)),
-            pl.BlockSpec((1, page_size, 1, d),
-                         lambda b, h, j, pt, sl: (pt[b, j], 0, h, 0)),
-            pl.BlockSpec((1, page_size, 1, d),
-                         lambda b, h, j, pt, sl: (pt[b, j], 0, h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, g, d), lambda b, h, j, pt, sl: (b, h, 0, 0)),
             pl.BlockSpec((1, 1, g, 1), lambda b, h, j, pt, sl: (b, h, 0, 0)),
@@ -142,8 +180,7 @@ def paged_decode_partial_pallas(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="paged_flash_decode_partial",
-    )(page_table.astype(jnp.int32), kv_lens.astype(jnp.int32), q,
-      k_pages, v_pages)
+    )(page_table.astype(jnp.int32), kv_lens.astype(jnp.int32), *operands)
     return o, m[..., 0], l[..., 0]
 
 

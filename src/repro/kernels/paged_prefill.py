@@ -32,13 +32,17 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels import pallas_compat
 from repro.kernels import bitmath
 from repro.kernels.decode import LANES, NEG_INF
-from repro.kernels.paged_decode import _flat_write_pos
+from repro.kernels.paged_decode import _flat_write_pos, _load_tile
 
 
 def _paged_prefill_kernel(pt_ref, sp_ref, kl_ref, q_ref, k_ref, v_ref,
-                          o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr, *,
-                          page_size: int, chunk: int, scale: float,
-                          use_hfa: bool):
+                          *rest, page_size: int, chunk: int, scale: float,
+                          use_hfa: bool, codec=None):
+    if codec is not None and codec.has_scales:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr = rest
     b = pl.program_id(0)
     j = pl.program_id(2)
     nj = pl.num_programs(2)
@@ -50,8 +54,8 @@ def _paged_prefill_kernel(pt_ref, sp_ref, kl_ref, q_ref, k_ref, v_ref,
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     q = q_ref[0, 0].astype(jnp.float32)           # (G * chunk, d)
-    k = k_ref[0, :, 0, :].astype(jnp.float32)     # (page, d)
-    v = v_ref[0, :, 0, :].astype(jnp.float32)     # (page, d)
+    k = _load_tile(codec, k_ref, ks_ref)          # (page, d)
+    v = _load_tile(codec, v_ref, vs_ref)          # (page, d)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
     kv_ids = j * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
@@ -96,6 +100,9 @@ def paged_prefill_partial_pallas(
     scale: float | None = None,
     use_hfa: bool = False,
     interpret: bool = True,
+    codec=None,
+    k_scales: jax.Array | None = None,  # (P, page, Hkv, 1) f32 sidecar
+    v_scales: jax.Array | None = None,
 ):
     """Partial paged chunked-prefill attention.
 
@@ -120,20 +127,32 @@ def paged_prefill_partial_pallas(
     scale_v = (1.0 / d ** 0.5) if scale is None else scale
     rows = g * chunk
     q3 = q.reshape(b, hkv, rows, d)
+    has_scales = codec is not None and codec.has_scales
 
     kernel = functools.partial(_paged_prefill_kernel, page_size=page_size,
-                               chunk=chunk, scale=scale_v, use_hfa=use_hfa)
+                               chunk=chunk, scale=scale_v, use_hfa=use_hfa,
+                               codec=codec)
+    in_specs = [
+        pl.BlockSpec((1, 1, rows, d),
+                     lambda b, h, j, pt, sp, kl: (b, h, 0, 0)),
+        pl.BlockSpec((1, page_size, 1, d),
+                     lambda b, h, j, pt, sp, kl: (pt[b, j], 0, h, 0)),
+        pl.BlockSpec((1, page_size, 1, d),
+                     lambda b, h, j, pt, sp, kl: (pt[b, j], 0, h, 0)),
+    ]
+    operands = [q3, k_pages, v_pages]
+    if has_scales:
+        in_specs += [
+            pl.BlockSpec((1, page_size, 1, 1),
+                         lambda b, h, j, pt, sp, kl: (pt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, 1),
+                         lambda b, h, j, pt, sp, kl: (pt[b, j], 0, h, 0)),
+        ]
+        operands += [k_scales, v_scales]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(b, hkv, pages_per_seq),
-        in_specs=[
-            pl.BlockSpec((1, 1, rows, d),
-                         lambda b, h, j, pt, sp, kl: (b, h, 0, 0)),
-            pl.BlockSpec((1, page_size, 1, d),
-                         lambda b, h, j, pt, sp, kl: (pt[b, j], 0, h, 0)),
-            pl.BlockSpec((1, page_size, 1, d),
-                         lambda b, h, j, pt, sp, kl: (pt[b, j], 0, h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, rows, d),
                          lambda b, h, j, pt, sp, kl: (b, h, 0, 0)),
@@ -161,7 +180,7 @@ def paged_prefill_partial_pallas(
         interpret=interpret,
         name="paged_prefill_partial",
     )(page_table.astype(jnp.int32), start_pos.astype(jnp.int32),
-      kv_lens.astype(jnp.int32), q3, k_pages, v_pages)
+      kv_lens.astype(jnp.int32), *operands)
     return (o.reshape(b, hkv, g, chunk, d),
             m[..., 0].reshape(b, hkv, g, chunk),
             l[..., 0].reshape(b, hkv, g, chunk))

@@ -41,13 +41,17 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels import pallas_compat
 from repro.kernels import bitmath
 from repro.kernels.decode import LANES, NEG_INF
-from repro.kernels.paged_decode import gather_pages
+from repro.kernels.paged_decode import _load_tile, gather_pages
 
 
 def _paged_verify_kernel(pt_ref, sl_ref, cl_ref, q_ref, k_ref, v_ref,
-                         o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr, *,
-                         page_size: int, spec_width: int, scale: float,
-                         use_hfa: bool):
+                         *rest, page_size: int, spec_width: int,
+                         scale: float, use_hfa: bool, codec=None):
+    if codec is not None and codec.has_scales:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr = rest
     b = pl.program_id(0)
     j = pl.program_id(2)
     nj = pl.num_programs(2)
@@ -59,8 +63,8 @@ def _paged_verify_kernel(pt_ref, sl_ref, cl_ref, q_ref, k_ref, v_ref,
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     q = q_ref[0, 0].astype(jnp.float32)           # (G * K, d)
-    k = k_ref[0, :, 0, :].astype(jnp.float32)     # (page, d)
-    v = v_ref[0, :, 0, :].astype(jnp.float32)     # (page, d)
+    k = _load_tile(codec, k_ref, ks_ref)          # (page, d)
+    v = _load_tile(codec, v_ref, vs_ref)          # (page, d)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
     kv_ids = j * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
@@ -105,6 +109,9 @@ def paged_verify_partial_pallas(
     scale: float | None = None,
     use_hfa: bool = False,
     interpret: bool = True,
+    codec=None,
+    k_scales: jax.Array | None = None,  # (P, page, Hkv, 1) f32 sidecar
+    v_scales: jax.Array | None = None,
 ):
     """Partial paged verify attention: one block-FAU triplet per
     (sequence, kv head, verify position).
@@ -123,21 +130,32 @@ def paged_verify_partial_pallas(
     scale_v = (1.0 / d ** 0.5) if scale is None else scale
     rows = g * spec_width
     q3 = q.reshape(b, hkv, rows, d)
+    has_scales = codec is not None and codec.has_scales
 
     kernel = functools.partial(_paged_verify_kernel, page_size=page_size,
                                spec_width=spec_width, scale=scale_v,
-                               use_hfa=use_hfa)
+                               use_hfa=use_hfa, codec=codec)
+    in_specs = [
+        pl.BlockSpec((1, 1, rows, d),
+                     lambda b, h, j, pt, sl, cl: (b, h, 0, 0)),
+        pl.BlockSpec((1, page_size, 1, d),
+                     lambda b, h, j, pt, sl, cl: (pt[b, j], 0, h, 0)),
+        pl.BlockSpec((1, page_size, 1, d),
+                     lambda b, h, j, pt, sl, cl: (pt[b, j], 0, h, 0)),
+    ]
+    operands = [q3, k_pages, v_pages]
+    if has_scales:
+        in_specs += [
+            pl.BlockSpec((1, page_size, 1, 1),
+                         lambda b, h, j, pt, sl, cl: (pt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, 1),
+                         lambda b, h, j, pt, sl, cl: (pt[b, j], 0, h, 0)),
+        ]
+        operands += [k_scales, v_scales]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(b, hkv, pages_per_seq),
-        in_specs=[
-            pl.BlockSpec((1, 1, rows, d),
-                         lambda b, h, j, pt, sl, cl: (b, h, 0, 0)),
-            pl.BlockSpec((1, page_size, 1, d),
-                         lambda b, h, j, pt, sl, cl: (pt[b, j], 0, h, 0)),
-            pl.BlockSpec((1, page_size, 1, d),
-                         lambda b, h, j, pt, sl, cl: (pt[b, j], 0, h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, rows, d),
                          lambda b, h, j, pt, sl, cl: (b, h, 0, 0)),
@@ -165,24 +183,32 @@ def paged_verify_partial_pallas(
         interpret=interpret,
         name="paged_verify_partial",
     )(page_table.astype(jnp.int32), seq_lens.astype(jnp.int32),
-      chunk_lens.astype(jnp.int32), q3, k_pages, v_pages)
+      chunk_lens.astype(jnp.int32), *operands)
     return (o.reshape(b, hkv, g, spec_width, d),
             m[..., 0].reshape(b, hkv, g, spec_width),
             l[..., 0].reshape(b, hkv, g, spec_width))
 
 
 def paged_verify_partial_ref(q, k_pages, v_pages, page_table, seq_lens,
-                             chunk_lens, *, scale=None, use_hfa=False):
+                             chunk_lens, *, scale=None, use_hfa=False,
+                             codec=None, k_scales=None, v_scales=None):
     """jnp triplet oracle: dense gather + one-shot softmax pieces.
 
     Same signature/returns as :func:`paged_verify_partial_pallas`.  The
     running max equals the global max, so ``m`` matches the kernel
-    exactly; ``l``/``o~`` differ only by f32 summation order.
+    exactly; ``l``/``o~`` differ only by f32 summation order.  With a
+    ``codec`` the gathered pages (and sidecar scales) are decoded before
+    the dense softmax - the same decode the kernel applies per tile.
     """
     b, hkv, g, spec_width, d = q.shape
     scale_v = (1.0 / d ** 0.5) if scale is None else scale
     kc = gather_pages(k_pages, page_table)        # (B, S, Hkv, d)
     vc = gather_pages(v_pages, page_table)
+    if codec is not None:
+        ks = None if k_scales is None else gather_pages(k_scales, page_table)
+        vs = None if v_scales is None else gather_pages(v_scales, page_table)
+        kc = codec.decode(kc, ks)
+        vc = codec.decode(vc, vs)
     s = jnp.einsum("bhgld,bshd->bhgls", q.astype(jnp.float32),
                    kc.astype(jnp.float32),
                    preferred_element_type=jnp.float32) * scale_v

@@ -130,6 +130,17 @@ def main():
     ap.add_argument("--length-penalty", type=float, default=1.0,
                     help="score = cum_logprob / len**length_penalty "
                          "(1.0 = mean logprob, 0 = raw sum)")
+    ap.add_argument("--kv-codec", choices=("fp", "int8", "log16"),
+                    default="fp",
+                    help="paged KV page codec: 'fp' stores raw "
+                         "compute-dtype rows, 'int8' per-row absmax "
+                         "quantization with an f32 scale sidecar (~4x "
+                         "fewer pool bytes/token), 'log16' 16-bit "
+                         "log-domain rows on the HFA rail (2x)")
+    ap.add_argument("--logprobs", action="store_true",
+                    help="return per-token logprobs: prompt positions "
+                         "(full-position LM head during prefill) and "
+                         "every generated token")
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel shards: KV-head-shard the paged "
                          "pools over a 'model' mesh axis (CPU simulates "
@@ -191,7 +202,8 @@ def main():
                            page_size=args.page_size, max_seq=args.max_seq,
                            prefill_budget=args.prefill_budget,
                            prefix_caching=not args.no_prefix_cache,
-                           spec_k=args.spec_k, mesh=mesh)
+                           spec_k=args.spec_k, mesh=mesh,
+                           kv_codec=args.kv_codec)
     # one new arrival per step: requests join and leave mid-flight
     arrivals = [(i, Request(rid=i, prompt=prompts[i].tolist(),
                             max_new_tokens=args.steps,
@@ -202,7 +214,8 @@ def main():
                                 seed=args.seed + i),
                             n=args.n, best_of=args.best_of,
                             beam_width=args.beam_width,
-                            length_penalty=args.length_penalty))
+                            length_penalty=args.length_penalty,
+                            logprobs=args.logprobs))
                 for i in range(n_req)]
     t0 = time.perf_counter()
     finished = engine.run(arrivals)
@@ -216,6 +229,14 @@ def main():
           f"{st['cached_prefill_tokens']} reused from prefix cache")
     print(f"generated {st['generated_tokens']} tokens in {dt:.2f} s "
           f"-> {st['generated_tokens']/dt:.1f} tok/s")
+    print(f"kv codec {engine.kv_codec}: pool {engine.pool_bytes()} B, "
+          f"{engine.bytes_per_token()} B/token")
+    if args.logprobs:
+        fr = finished[0]
+        plp = [f"{x:+.2f}" if x is not None else "None"
+               for x in (fr.prompt_logprobs or [])[:6]]
+        tlp = [f"{x:+.2f}" for x in (fr.token_logprobs or [])[:6]]
+        print(f"logprobs rid {fr.rid}: prompt {plp} tokens {tlp}")
     if args.tp > 1:
         print(f"tp={args.tp}: pool {engine.pool_bytes()} B total, "
               f"{engine.pool_bytes_per_shard()} B/shard; "

@@ -246,11 +246,17 @@ def _paged_attention(p, q, k, v, cfg, cache, page_state, *, impl, causal,
     each shard scatters/attends its local heads and only the tiny
     (m, l, o~) triplets cross the interconnect.
     """
+    from repro.kernels import page_codec
     from repro.kernels import paged_decode as paged_k
     from repro.kernels import paged_prefill as paged_pf_k
     assert page_state is not None, "paged cache requires page_state"
     pt = page_state["page_table"]
     mesh = page_state.get("mesh")
+    codec = page_codec.get_codec(page_state.get("codec"))
+    # The fp codec's read path is kept on codec=None so the raw-pool
+    # kernels/fallbacks run byte-for-byte unchanged (fp stays bit-exact
+    # to the pre-codec pool); encode_write is already the identity.
+    rcodec = None if codec.name == "fp" else codec
     if mesh is not None and mesh.shape.get("model", 1) > 1:
         from repro.parallel import collectives
         if page_state.get("verify", False):
@@ -269,9 +275,9 @@ def _paged_attention(p, q, k, v, cfg, cache, page_state, *, impl, causal,
             mode = "prefill"
             la = jnp.zeros((b_,), jnp.int32)
             lb = jnp.full((b_,), l_, jnp.int32)
-        out, kp, vp = collectives.shardmap_paged_attention(
-            q, k, v, cache["k_pages"], cache["v_pages"], pt, la, lb,
-            mesh=mesh, mode=mode, impl=_decode_impl(impl))
+        out, new_pools = collectives.shardmap_paged_attention(
+            q, k, v, cache, pt, la, lb,
+            mesh=mesh, mode=mode, impl=_decode_impl(impl), codec=codec)
     elif page_state.get("verify", False):
         # Speculative multi-token verify: scatter the K step tokens at
         # positions seq_lens[b].. (rows past chunk_lens are dropped, so
@@ -279,34 +285,43 @@ def _paged_attention(p, q, k, v, cfg, cache, page_state, *, impl, causal,
         # page-table walk.  K == 1 degenerates to the decode path.
         sl = page_state["seq_lens"]
         cl = page_state["chunk_lens"]
-        kp, vp = paged_pf_k.write_chunk_kv(cache["k_pages"],
-                                           cache["v_pages"], k, v, pt,
-                                           sl, cl)
-        out = kops.paged_verify_attention(q, kp, vp, pt, sl, cl,
-                                          impl=_decode_impl(impl))
+        new_pools = page_codec.encode_write(
+            paged_pf_k.write_chunk_kv, codec, cache, k, v, pt, sl, cl)
+        out = kops.paged_verify_attention(
+            q, new_pools["k_pages"], new_pools["v_pages"], pt, sl, cl,
+            impl=_decode_impl(impl), codec=rcodec,
+            k_scales=new_pools.get("k_scale"),
+            v_scales=new_pools.get("v_scale"))
     elif not page_state.get("prefill", False):
         sl = page_state["seq_lens"]
-        kp, vp = paged_k.append_kv(cache["k_pages"], cache["v_pages"],
-                                   k, v, pt, sl)
+        new_pools = page_codec.encode_write(
+            paged_k.append_kv, codec, cache, k, v, pt, sl)
         kv_lens = jnp.where(sl > 0, sl + 1, 0)
-        out = kops.paged_decode_attention(q, kp, vp, pt, kv_lens,
-                                          impl=_decode_impl(impl))
+        out = kops.paged_decode_attention(
+            q, new_pools["k_pages"], new_pools["v_pages"], pt, kv_lens,
+            impl=_decode_impl(impl), codec=rcodec,
+            k_scales=new_pools.get("k_scale"),
+            v_scales=new_pools.get("v_scale"))
     elif "start_pos" in page_state:
         sp = page_state["start_pos"]
         cl = page_state["chunk_lens"]
-        kp, vp = paged_pf_k.write_chunk_kv(cache["k_pages"],
-                                           cache["v_pages"], k, v, pt,
-                                           sp, cl)
-        out = kops.paged_prefill_attention(q, kp, vp, pt, sp, cl,
-                                           impl=_decode_impl(impl))
+        new_pools = page_codec.encode_write(
+            paged_pf_k.write_chunk_kv, codec, cache, k, v, pt, sp, cl)
+        out = kops.paged_prefill_attention(
+            q, new_pools["k_pages"], new_pools["v_pages"], pt, sp, cl,
+            impl=_decode_impl(impl), codec=rcodec,
+            k_scales=new_pools.get("k_scale"),
+            v_scales=new_pools.get("v_scale"))
     else:
-        kp, vp = paged_k.write_prefill_kv(cache["k_pages"],
-                                          cache["v_pages"], k, v, pt)
+        # Legacy fresh prefill: pages are storage only - attention runs
+        # on the raw chunk, so the codec only affects later reads.
+        new_pools = page_codec.encode_write(
+            paged_k.write_prefill_kv, codec, cache, k, v, pt)
         out = kops.multihead_attention(q, k, v, impl=impl, causal=causal,
                                        block_q=cfg.attn_block,
                                        block_kv=cfg.attn_block)
     out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x_dtype))
-    return out, {"k_pages": kp, "v_pages": vp}
+    return out, new_pools
 
 
 def _decode_impl(impl: str) -> str:

@@ -218,7 +218,8 @@ class LM:
 
 
     # ------------------------------------------------ paged decode (serving)
-    def init_paged_cache(self, num_pages: int, page_size: int, mesh=None):
+    def init_paged_cache(self, num_pages: int, page_size: int, mesh=None,
+                         codec: str = "fp"):
         """Shared block-pool KV caches for continuous-batching decode.
 
         Unlike :meth:`init_cache` there is no per-slot ``max_seq``
@@ -233,12 +234,19 @@ class LM:
         page layout but only ``n_kv_heads / tp`` heads, so per-shard
         pool HBM shrinks by tp while the host page tables (and all the
         refcount/COW/prefix-cache bookkeeping) stay replicated.
+
+        ``codec`` selects the page codec ("fp" | "int8" | "log16", see
+        :mod:`repro.kernels.page_codec`): the pools take the codec's
+        storage dtype and quantized codecs add f32 scale sidecar pools;
+        the same NamedSharding placement covers every leaf (scale
+        sidecars share the data pools' rank and Hkv axis).
         """
         cfg = self.cfg
         assert cfg.pos_emb == "rope", (
             "paged serving requires rope positions, got %r" % cfg.pos_emb)
         cdt = _dtype(cfg.compute_dtype)
-        layers = T.stack_init_paged_cache(cfg, num_pages, page_size, cdt)
+        layers = T.stack_init_paged_cache(cfg, num_pages, page_size, cdt,
+                                          codec=codec)
         tp = 1 if mesh is None else int(mesh.shape.get("model", 1))
         if tp > 1:
             if cfg.n_kv_heads % tp or cfg.n_heads % tp:
@@ -254,7 +262,8 @@ class LM:
         return layers
 
     def paged_prefill(self, params, layers, tokens, page_table,
-                      last_pos=None, start_pos=None, mesh=None):
+                      last_pos=None, start_pos=None, mesh=None,
+                      codec: str = "fp", return_all_logits: bool = False):
         """Prefill sequences into paged KV storage.
 
         tokens: (B, L) token rows padded to a common length L.
@@ -276,6 +285,9 @@ class LM:
         seq_lens and overwritten by later appends).
         mesh: optional tensor-parallel mesh (a "model" axis > 1 routes
         attention through the KV-head-sharded cascaded-ACC-merge path).
+        return_all_logits: keep logits at every position even when
+        ``last_pos`` is given - the prompt-logprobs path pays the full
+        (B, L, V) projection to score each prompt token.
         Returns (logits, new layer caches).
         """
         cfg = self.cfg
@@ -285,6 +297,7 @@ class LM:
         if start_pos is None:
             positions = None
             ps = {"page_table": page_table, "prefill": True, "mesh": mesh,
+                  "codec": codec,
                   "seq_lens": jnp.zeros((tokens.shape[0],), jnp.int32)}
         else:
             assert last_pos is not None, "chunked prefill needs last_pos"
@@ -299,19 +312,20 @@ class LM:
             positions = start_pos[:, None] + jnp.arange(
                 tokens.shape[1], dtype=jnp.int32)[None]
             ps = {"page_table": page_table, "prefill": True, "mesh": mesh,
-                  "start_pos": start_pos,
+                  "codec": codec, "start_pos": start_pos,
                   "chunk_lens": last_pos.astype(jnp.int32) + 1}
         x, new_layers, _ = T.stack_apply(
             params["layers"], x, cfg, positions=positions, caches=layers,
             cache_pos=0, page_state=ps, causal=True)
-        if last_pos is not None:
+        if last_pos is not None and not return_all_logits:
             x = jnp.take_along_axis(x, last_pos[:, None, None].astype(
                 jnp.int32), axis=1)
         x = T._norm_apply(cfg, params["final_norm"], x)
         return self._head(params, x), new_layers
 
     def paged_verify_step(self, params, layers, tokens, page_table,
-                          seq_lens, chunk_lens, mesh=None):
+                          seq_lens, chunk_lens, mesh=None,
+                          codec: str = "fp"):
         """K-token speculative verify step across every slot.
 
         tokens: (B, K) input tokens per slot - the carry token followed
@@ -332,6 +346,7 @@ class LM:
         positions = seq_lens[:, None] + jnp.arange(
             tokens.shape[1], dtype=jnp.int32)[None]
         ps = {"page_table": page_table, "seq_lens": seq_lens, "mesh": mesh,
+              "codec": codec,
               "chunk_lens": chunk_lens.astype(jnp.int32), "verify": True}
         x, new_layers, _ = T.stack_apply(
             params["layers"], x, cfg, positions=positions, caches=layers,
@@ -340,7 +355,7 @@ class LM:
         return self._head(params, x), new_layers
 
     def paged_decode_step(self, params, layers, tokens, page_table,
-                          seq_lens, mesh=None):
+                          seq_lens, mesh=None, codec: str = "fp"):
         """One continuous-batching decode step across every slot.
 
         tokens: (B, 1) next input token per slot; seq_lens: (B,) int32
@@ -353,7 +368,8 @@ class LM:
         cdt = _dtype(cfg.compute_dtype)
         x = self._embed_in(params, tokens, cdt, pos0=0)
         x = constrain(x, ("batch", None, "embed"))
-        ps = {"page_table": page_table, "seq_lens": seq_lens, "mesh": mesh}
+        ps = {"page_table": page_table, "seq_lens": seq_lens, "mesh": mesh,
+              "codec": codec}
         x, new_layers, _ = T.stack_apply(
             params["layers"], x, cfg, positions=seq_lens[:, None],
             caches=layers, page_state=ps, causal=True)

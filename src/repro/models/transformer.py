@@ -85,8 +85,12 @@ def block_apply(p, x, cfg, *, kind: str, ffn_kind: str,
         if cache is None:
             attn_cache = None
         elif "k_pages" in cache:
-            attn_cache = {"k_pages": cache["k_pages"],
-                          "v_pages": cache["v_pages"]}
+            # Codec pools carry per-page scale sidecars next to the data
+            # pools; they ride the same per-layer cache dict.
+            attn_cache = {key: cache[key]
+                          for key in ("k_pages", "v_pages",
+                                      "k_scale", "v_scale")
+                          if key in cache}
         else:
             attn_cache = {"k": cache["k"], "v": cache["v"]}
         y, new_attn_cache = L.attention_apply(
@@ -233,23 +237,39 @@ def stack_apply(params, x, cfg, *, positions=None, caches=None,
     return x, new_caches, aux
 
 
-def stack_init_paged_cache(cfg, num_pages: int, page_size: int, dtype):
+def stack_init_paged_cache(cfg, num_pages: int, page_size: int, dtype,
+                           codec: str = "fp"):
     """Paged block-pool caches, stacked (groups, P, page, Hkv, dh).
 
     One shared pool per layer; sequences address it through the
     engine-owned page table, so no per-slot ``max_seq`` is reserved.
     Attention-only stacks for now (Mamba/hybrid state is per-slot and
     dense; cross caches are tied to a fixed batch).
+
+    ``codec`` selects the page codec (:mod:`repro.kernels.page_codec`):
+    the data pools take the codec's storage dtype, and codecs with
+    scales get f32 sidecar pools "k_scale"/"v_scale" of the same rank
+    with trailing dim 1 - rank-matched so every page-table mechanism
+    (scatter writers, COW copies, gathers, head sharding) treats scale
+    leaves exactly like data leaves.
     """
+    from repro.kernels import page_codec
     kinds, _, period = period_pattern(cfg)
     groups = cfg.n_layers // period
     assert all(k == "attn" for k in kinds), (
         "paged KV cache supports attention-only stacks, got %r" % (kinds,))
+    c = page_codec.get_codec(codec)
+    sdt = c.storage_dtype(dtype)
 
     def one_layer():
         shape = (groups, num_pages, page_size, cfg.n_kv_heads, cfg.d_head)
-        return {"k_pages": jnp.zeros(shape, dtype),
-                "v_pages": jnp.zeros(shape, dtype)}
+        leaves = {"k_pages": jnp.zeros(shape, sdt),
+                  "v_pages": jnp.zeros(shape, sdt)}
+        if c.has_scales:
+            sshape = shape[:-1] + (1,)
+            leaves["k_scale"] = jnp.zeros(sshape, jnp.float32)
+            leaves["v_scale"] = jnp.zeros(sshape, jnp.float32)
+        return leaves
 
     return {f"l{i}": one_layer() for i in range(period)}
 

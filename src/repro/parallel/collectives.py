@@ -131,8 +131,8 @@ def shardmap_paged_attention(
     q: jax.Array,        # (B, L, H, dh) decode L=1 / verify L=K / chunk L
     k_new: jax.Array,    # (B, L, Hkv, dh) this step's K/V to scatter
     v_new: jax.Array,    # (B, L, Hkv, dh)
-    k_pages: jax.Array,  # (P, page, Hkv, dh), Hkv sharded over `axis`
-    v_pages: jax.Array,  # (P, page, Hkv, dh)
+    pools: dict,         # {"k_pages", "v_pages"[, "k_scale", "v_scale"]}
+                         # each (P, page, Hkv, ·), Hkv sharded over `axis`
     page_table: jax.Array,  # (B, pages_per_seq) int32, replicated
     lens_a: jax.Array,   # (B,) int32: decode/verify seq_lens; prefill start
     lens_b: jax.Array,   # (B,) int32: verify/prefill chunk_lens; decode 0s
@@ -142,6 +142,7 @@ def shardmap_paged_attention(
     impl: str = "fa2",
     axis: str = "model",
     scale: float | None = None,
+    codec=None,          # page codec (name or PageCodec); None/"fp" = raw
 ):
     """Tensor-parallel paged attention: the cascaded ACC merge over a
     KV-head-sharded page pool.
@@ -172,46 +173,68 @@ def shardmap_paged_attention(
     exactly 0), the merged output is bit-equal to the single-shard
     finalize per head - which is what makes TP serving token-exact.
 
-    Returns (out (B, L, H, dh), new_k_pages, new_v_pages) with the pools
-    still KV-head-sharded.
+    With a page ``codec``, each shard encodes its local heads' K/V
+    before the scatter (encode is elementwise per head, so shard-local
+    encode == global encode) and the scale sidecar pools ride the same
+    head-sharded spec as the data pools; decode-in-kernel happens inside
+    the shard-local partials, so the sharded rail quantizes exactly like
+    the single-shard one.
+
+    Returns (out (B, L, H, dh), new_pools) with the pools (and any scale
+    sidecars) still KV-head-sharded.
     """
     from repro.kernels import ops as kops
+    from repro.kernels import page_codec
     from repro.kernels import paged_decode as paged_k
     from repro.kernels import paged_prefill as paged_pf_k
 
     assert mode in ("decode", "verify", "prefill"), mode
     b, l_q, h, dh = q.shape
-    hkv = k_pages.shape[2]
+    hkv = pools["k_pages"].shape[2]
     g = h // hkv
     n = tp_shards(mesh, axis)
     assert hkv % n == 0, (
         f"paged TP needs kv_heads % tp == 0, got {hkv} % {n}")
     hkv_l = hkv // n
     use_hfa = impl.startswith("hfa")
+    cod = page_codec.get_codec(codec)
+    rcodec = None if cod.name == "fp" else cod
 
-    def local(q, k_new, v_new, kp, vp, pt, la, lb):
+    def local(q, k_new, v_new, pools, pt, la, lb):
         # q arrives head-sharded: (B, L, H/n, dh) - heads are kv-major,
         # so the slice is exactly this shard's hkv_l KV-head groups.
         idx = jax.lax.axis_index(axis)
         if mode == "decode":
-            kp, vp = paged_k.append_kv(kp, vp, k_new, v_new, pt, la)
+            pools = page_codec.encode_write(
+                paged_k.append_kv, cod, pools, k_new, v_new, pt, la)
             kv_lens = jnp.where(la > 0, la + 1, 0)
             qg = q.reshape(b, hkv_l, g, dh)
             o, m, l = kops.paged_decode_partials(
-                qg, kp, vp, pt, kv_lens, impl=impl, scale=scale)
+                qg, pools["k_pages"], pools["v_pages"], pt, kv_lens,
+                impl=impl, scale=scale, codec=rcodec,
+                k_scales=pools.get("k_scale"),
+                v_scales=pools.get("v_scale"))
         elif mode == "verify":
-            kp, vp = paged_pf_k.write_chunk_kv(kp, vp, k_new, v_new, pt,
-                                               la, lb)
+            pools = page_codec.encode_write(
+                paged_pf_k.write_chunk_kv, cod, pools, k_new, v_new, pt,
+                la, lb)
             qg = jnp.swapaxes(q, 1, 2).reshape(b, hkv_l, g, l_q, dh)
             o, m, l = kops.paged_verify_partials(
-                qg, kp, vp, pt, la, lb, impl=impl, scale=scale)
+                qg, pools["k_pages"], pools["v_pages"], pt, la, lb,
+                impl=impl, scale=scale, codec=rcodec,
+                k_scales=pools.get("k_scale"),
+                v_scales=pools.get("v_scale"))
         else:
-            kp, vp = paged_pf_k.write_chunk_kv(kp, vp, k_new, v_new, pt,
-                                               la, lb)
+            pools = page_codec.encode_write(
+                paged_pf_k.write_chunk_kv, cod, pools, k_new, v_new, pt,
+                la, lb)
             kv_lens = (la + lb).astype(jnp.int32)
             qg = jnp.swapaxes(q, 1, 2).reshape(b, hkv_l, g, l_q, dh)
             o, m, l = kops.paged_prefill_partials(
-                qg, kp, vp, pt, la, kv_lens, impl=impl, scale=scale)
+                qg, pools["k_pages"], pools["v_pages"], pt, la, kv_lens,
+                impl=impl, scale=scale, codec=rcodec,
+                k_scales=pools.get("k_scale"),
+                v_scales=pools.get("v_scale"))
 
         # Pad the local triplet to full head width with the neutral
         # element, so the gathered merge reconstitutes every head.
@@ -234,13 +257,15 @@ def shardmap_paged_attention(
         else:
             # (B, Hkv, G, L, dh) -> (B, L, H, dh)
             out = jnp.swapaxes(out.reshape(b, h, l_q, dh), 1, 2)
-        return out.astype(q.dtype), kp, vp
+        return out.astype(q.dtype), pools
 
+    # hspec is a pytree *prefix* for the pools dict: every pool leaf
+    # (data or scale sidecar) is (P, page, Hkv, ·) with Hkv at axis 2.
     hspec = P(None, None, axis, None)
     fn = shard_map(
         local, mesh=mesh,
-        in_specs=(hspec, hspec, hspec, hspec, hspec, P(), P(), P()),
-        out_specs=(P(), hspec, hspec),
+        in_specs=(hspec, hspec, hspec, hspec, P(), P(), P()),
+        out_specs=(P(), hspec),
         check_vma=False)
-    return fn(q, k_new, v_new, k_pages, v_pages, page_table,
+    return fn(q, k_new, v_new, dict(pools), page_table,
               lens_a.astype(jnp.int32), lens_b.astype(jnp.int32))

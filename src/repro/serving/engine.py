@@ -72,6 +72,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import page_codec
 from repro.kernels import paged_prefill as paged_pf_k
 from repro.serving import sampler
 from repro.serving.paged_cache import PagedKVCache
@@ -85,18 +86,19 @@ from repro.serving.scheduler import (FinishedRequest, InvalidRequestError,
 _NO_PRESENCE = np.zeros((1, 1), bool)
 
 
-def _serving_jits(model, mesh=None):
+def _serving_jits(model, mesh=None, codec="fp"):
     """Jitted prefill/verify/sample/copy steps, cached on the model so
     every engine over the same model shares one compile cache
     (benchmarks and tests spin up several engines).  The cache is keyed
-    by the tensor-parallel mesh (None = single shard) - a TP engine and
-    a single-shard engine over the same model trace different attention
-    paths.  Cache donation is skipped on CPU, where it is unsupported
-    and only adds dispatch overhead."""
-    cache = getattr(model, "_serving_jits_v4", None)
+    by the tensor-parallel mesh (None = single shard) and the page
+    codec - a TP engine and a single-shard engine over the same model
+    trace different attention paths, and each codec bakes a different
+    encode/decode into the trace.  Cache donation is skipped on CPU,
+    where it is unsupported and only adds dispatch overhead."""
+    cache = getattr(model, "_serving_jits_v5", None)
     if cache is None:
-        cache = model._serving_jits_v4 = {}
-    jits = cache.get(mesh)
+        cache = model._serving_jits_v5 = {}
+    jits = cache.get((mesh, codec))
     if jits is not None:
         return jits
 
@@ -109,8 +111,29 @@ def _serving_jits(model, mesh=None):
     def prefill_fn(params, layers, tokens, page_table, start_pos, last_pos):
         logits, layers = model.paged_prefill(params, layers, tokens,
                                              page_table, last_pos=last_pos,
-                                             start_pos=start_pos, mesh=mesh)
+                                             start_pos=start_pos, mesh=mesh,
+                                             codec=codec)
         return logits[:, 0], layers
+
+    # Prompt-logprobs prefill: same KV writes, but the LM head runs at
+    # every chunk position (the cost ``Request.logprobs`` opts into)
+    # and each position's log p(next prompt token) comes back alongside
+    # the last-position logits.  ``targets[b, j]`` is the stream token
+    # at position start + j + 1 (0 where out of range; the host slices
+    # the valid prefix).
+    def prefill_lp_fn(params, layers, tokens, page_table, start_pos,
+                      last_pos, targets):
+        logits, layers = model.paged_prefill(params, layers, tokens,
+                                             page_table, last_pos=last_pos,
+                                             start_pos=start_pos, mesh=mesh,
+                                             codec=codec,
+                                             return_all_logits=True)
+        lsm = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        plp = jnp.take_along_axis(
+            lsm, targets[..., None].astype(jnp.int32), axis=-1)[..., 0]
+        last = jnp.take_along_axis(
+            logits, last_pos[:, None, None].astype(jnp.int32), axis=1)
+        return last[:, 0], plp, layers
 
     # ``greedy`` is a static (trace-time) flag: when every row this call
     # serves is argmax (temperature 0, no penalty), the whole sampling
@@ -162,7 +185,8 @@ def _serving_jits(model, mesh=None):
         # spec_k == 0 fast path: the single-token decode attention
         # (append + grouped decode) instead of the chunk-write verify.
         logits, layers = model.paged_decode_step(
-            params, layers, tokens, page_table, seq_lens, mesh=mesh)
+            params, layers, tokens, page_table, seq_lens, mesh=mesh,
+            codec=codec)
         if greedy:
             toks = jnp.argmax(logits[:, :1], axis=-1).astype(jnp.int32)
         else:
@@ -178,7 +202,7 @@ def _serving_jits(model, mesh=None):
                   beam_k, want_lp):
         logits, layers = model.paged_verify_step(
             params, layers, tokens, page_table, seq_lens, chunk_lens,
-            mesh=mesh)
+            mesh=mesh, codec=codec)
         b, kw, v = logits.shape
         if greedy:
             toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -210,8 +234,9 @@ def _serving_jits(model, mesh=None):
                     static_argnums=(12, 13, 14)),
             jax.jit(copy_fn, donate_argnums=() if cpu else (0,)),
             jax.jit(sample_fn, static_argnums=(8, 9)),
-            jax.jit(topk_fn, static_argnums=(1,)))
-    cache[mesh] = jits
+            jax.jit(topk_fn, static_argnums=(1,)),
+            jax.jit(prefill_lp_fn, donate_argnums=donate))
+    cache[(mesh, codec)] = jits
     return jits
 
 
@@ -225,9 +250,14 @@ class ServingEngine:
                  cached_frac: float = 0.5,
                  adaptive_floor: int | None = None,
                  adaptive_ceiling: int | None = None,
-                 mesh=None):
+                 mesh=None, kv_codec: str = "fp"):
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
+        # Page codec: how KV rows are stored in the device pools ("fp"
+        # = raw compute dtype, "int8" = per-row absmax quant + f32 scale
+        # sidecar, "log16" = 16-bit log-domain).  Validated here so a
+        # typo'd codec fails at engine construction, not first step.
+        self.kv_codec = page_codec.get_codec(kv_codec).name
         # prefill_budget: None = unbounded, int = fixed token budget per
         # step, "adaptive" = derived each step from the decode batch's
         # SLA headroom (see Scheduler.adaptive_prefill_budget), clamped
@@ -296,7 +326,8 @@ class ServingEngine:
                                   max_cached_pages=max_cached)
         self.sched = Scheduler(self.cache)
         self.layers = model.init_paged_cache(num_pages, page_size,
-                                             mesh=mesh)
+                                             mesh=mesh,
+                                             codec=self.kv_codec)
         # Per-slot sampling state (greedy defaults), mirrored to device
         # every step; presence is the repetition-penalty context bitmask.
         self._temp = np.zeros((max_batch,), np.float32)
@@ -313,14 +344,26 @@ class ServingEngine:
                       "draft_tokens": 0, "draft_accepted": 0,
                       "rollbacks": 0, "triplet_bytes": 0,
                       "groups": 0, "forks": 0, "beam_steps": 0,
+                      "beam_early_stops": 0,
                       "cancelled": 0, "adaptive_budget_last": 0}
         (self._prefill, self._decode, self._verify, self._copy,
-         self._sample, self._topk) = _serving_jits(model, mesh)
+         self._sample, self._topk,
+         self._prefill_lp) = _serving_jits(model, mesh, self.kv_codec)
 
     # ------------------------------------------------------------- TP info
     def pool_bytes(self) -> int:
         """Total logical KV pool bytes (across all shards)."""
         return sum(x.nbytes for x in jax.tree.leaves(self.layers))
+
+    def bytes_per_token(self) -> int:
+        """Pool bytes consumed per stored KV token-row (all layers, data
+        + scale sidecars).  Derived from the actual pool leaves, so it
+        is the number the equal-pool-bytes slot math in the benchmark
+        uses: at a fixed byte budget a codec admits
+        ``fp_bytes_per_token / codec_bytes_per_token`` times the
+        sequences."""
+        num_pages = self.cache.num_pages
+        return self.pool_bytes() // (num_pages * self.page_size)
 
     def pool_bytes_per_shard(self) -> int:
         """KV pool bytes actually resident on the fullest device,
@@ -524,9 +567,22 @@ class ServingEngine:
                 rows[i] = self.cache.page_table[ck.slot, :width]
                 start[i] = ck.start
                 last[i] = len(ck.tokens) - 1
-            logits, self.layers = self._prefill(
-                self.params, self.layers, jnp.asarray(toks),
-                jnp.asarray(rows), jnp.asarray(start), jnp.asarray(last))
+            # Any logprobs request in the batch routes the whole group
+            # through the prompt-logprobs prefill (full-position LM
+            # head); groups without one stay on the gathered fast path.
+            want_plp = any(self.sched.running[ck.slot].req.logprobs
+                           for ck in grp)
+            if want_plp:
+                logits, plp, self.layers = self._prefill_lp(
+                    self.params, self.layers, jnp.asarray(toks),
+                    jnp.asarray(rows), jnp.asarray(start),
+                    jnp.asarray(last), jnp.asarray(
+                        self._prompt_targets(grp, lpad)))
+                self._record_prompt_lps(grp, np.asarray(plp))
+            else:
+                logits, self.layers = self._prefill(
+                    self.params, self.layers, jnp.asarray(toks),
+                    jnp.asarray(rows), jnp.asarray(start), jnp.asarray(last))
             self.stats["prefills"] += 1
             self._count_triplets(bsz, lpad)
             finals = []
@@ -541,6 +597,37 @@ class ServingEngine:
                     finals.append((i, ck.slot))
             if finals:
                 self._finish_prefills(logits, finals, finished)
+
+    def _prompt_targets(self, grp, lpad: int) -> np.ndarray:
+        """Next-token target per chunk position: ``targets[i, j]`` is
+        chunk i's stream token at absolute position start + j + 1 (what
+        the logit at position j predicts), 0 where out of range."""
+        targets = np.zeros((len(grp), lpad), np.int32)
+        for i, ck in enumerate(grp):
+            stream = self.sched.running[ck.slot].tokens()
+            hi = min(len(ck.tokens), len(stream) - ck.start - 1)
+            if hi > 0:
+                targets[i, :hi] = stream[ck.start + 1:ck.start + 1 + hi]
+        return targets
+
+    def _record_prompt_lps(self, grp, plp: np.ndarray) -> None:
+        """Fill each logprobs request's prompt_lps from this group's
+        per-position logprobs: position j of a chunk scores the prompt
+        token at stream index start + j + 1.  Indices past the prompt
+        (replayed generated tokens) and the final chunk's last position
+        (it predicts the first *generated* token - the sampler's lp
+        path owns that) are skipped."""
+        for i, ck in enumerate(grp):
+            st = self.sched.running[ck.slot]
+            if not st.req.logprobs:
+                continue
+            plen = len(st.req.prompt)
+            n = len(ck.tokens)
+            valid = n - 1 if ck.is_final else n
+            for j in range(valid):
+                t = ck.start + j + 1
+                if 1 <= t < plen:
+                    st.prompt_lps[t] = float(plp[i, j])
 
     def _finish_prefills(self, logits, finals: list, finished: list):
         """First tokens for every sequence whose prefill just completed:
@@ -608,6 +695,8 @@ class ServingEngine:
             st = self.sched.running[slot]
             status = self.sched.record_token(slot, tok)
             st.cum_logprob += float(lps[j])
+            if st.req.logprobs:
+                st.token_logprobs.append(float(lps[j]))
             self._presence[slot, tok] = True
             if status != "running":
                 fr = self.sched.finish(slot, status)
@@ -651,11 +740,13 @@ class ServingEngine:
             self._set_branch_sampling(slot, sampler.GREEDY, 0)
 
     def _want_logprobs(self) -> bool:
-        """True when any parallel-sampling group is live: branches
+        """True when any parallel-sampling group is live (branches
         accumulate the chosen-token logprob so completions come back
-        scored (and best_of > n can rank on it).  Plain serving never
-        pays for the extra log_softmax."""
-        return any(st.group is not None and not st.group.beam
+        scored, and best_of > n can rank on it) or any live request
+        asked for per-token logprobs.  Plain serving never pays for the
+        extra log_softmax."""
+        return any((st.group is not None and not st.group.beam)
+                   or st.req.logprobs
                    for st in self.sched.running.values())
 
     # ------------------------------------------------------------ decode
@@ -754,6 +845,8 @@ class ServingEngine:
                 self.stats["decode_tokens"] += 1
                 status = self.sched.record_token(slot, tok)
                 st.cum_logprob += float(lps[slot, j])
+                if st.req.logprobs:
+                    st.token_logprobs.append(float(lps[slot, j]))
                 self._presence[slot, tok] = True
                 if status != "running":
                     break
@@ -788,10 +881,13 @@ class ServingEngine:
                     for s in group.slots}
                 before_tok = self.sched.tokens_emitted
                 before_forks = self.sched.forks
+                before_stops = self.sched.beam_early_stops
                 fr = self.sched.beam_reorder(group, per_slot)
                 self.stats["generated_tokens"] += \
                     self.sched.tokens_emitted - before_tok
                 self.stats["forks"] += self.sched.forks - before_forks
+                self.stats["beam_early_stops"] += \
+                    self.sched.beam_early_stops - before_stops
                 self.stats["beam_steps"] += 1
                 if fr is not None:
                     finished.append(fr)

@@ -97,6 +97,17 @@ class Request:
     best_of: int | None = None    # branches sampled (>= n); None = n
     beam_width: int = 0           # > 0: length-normalized beam search
     length_penalty: float = 1.0   # score = cum_logprob / len**length_penalty
+    # Return per-token logprobs: generated-token logprobs on every
+    # completion, prompt-token logprobs on the FinishedRequest (None at
+    # position 0 and at positions restored from the prefix cache, whose
+    # logits were never computed).
+    logprobs: bool = False
+    # Beam search only: stop expanding once ``n`` hypotheses are
+    # finished and no live branch's score upper bound can beat the
+    # n-th best finished score (results provably unchanged; saves the
+    # tail decode steps).  Off = run until ``beam_width`` hypotheses
+    # finish or every branch exhausts its budget.
+    beam_early_stop: bool = True
 
 
 @dataclasses.dataclass
@@ -106,6 +117,9 @@ class Completion:
     branch: int                # branch id (seed fold for parallel sampling)
     reason: str                # "eos" | "length"
     score: float = 0.0         # length-normalized cumulative logprob
+    # Per generated token log p(token | prefix); only when the request
+    # set ``logprobs`` (None otherwise - never an empty list).
+    token_logprobs: list[float] | None = None
 
 
 @dataclasses.dataclass
@@ -125,6 +139,13 @@ class FinishedRequest:
     # n-parallel sampling, by score (desc) when ranking applies
     # (best_of > n, or beam search).
     completions: list[Completion] | None = None
+    # ``Request.logprobs`` only (None otherwise): per-token logprobs.
+    # prompt_logprobs[i] = log p(prompt[i] | prompt[:i]); None at i = 0
+    # and at positions whose KV came from the prefix cache (their
+    # logits were never computed).  token_logprobs mirrors
+    # completions[0] for groups.
+    prompt_logprobs: list[float | None] | None = None
+    token_logprobs: list[float] | None = None
 
 
 @dataclasses.dataclass
@@ -148,6 +169,10 @@ class SequenceGroup:
     fanned_out: bool = False
     preemptions: int = 0
     next_branch: int = 0
+    # ``Request.logprobs``: the shared prompt's logprobs, stashed off
+    # the parent branch at fan-out (branch slots never recompute them).
+    prompt_lps: list[float | None] = dataclasses.field(
+        default_factory=list)
 
     @property
     def ranked(self) -> bool:
@@ -218,6 +243,13 @@ class _Running:
         # per-step scheduling/registration path, and rebuilding the
         # concatenation there would cost O(len) per call.
         self._stream = list(self.req.prompt) + list(self.generated)
+        # ``Request.logprobs`` bookkeeping.  token_logprobs survives
+        # preemption alongside ``generated`` (the replay prefill does
+        # not re-sample); prompt_lps fills in as prefill chunks compute
+        # each position's logits (cache-reused positions stay None).
+        self.token_logprobs: list[float] = []
+        self.prompt_lps: list[float | None] = \
+            [None] * len(self.req.prompt) if self.req.logprobs else []
 
     def tokens(self) -> list[int]:
         """Token stream whose KV backs this sequence: prompt plus any
@@ -277,6 +309,7 @@ class Scheduler:
         # inside the scheduler).
         self.tokens_emitted = 0
         self.forks = 0
+        self.beam_early_stops = 0
 
     # ------------------------------------------------------------ intake
     def submit(self, req: Request) -> None:
@@ -562,6 +595,7 @@ class Scheduler:
         group.finished.clear()
         group.fanned_out = False
         group.prefix_pages = ()
+        group.prompt_lps = []
         group.next_branch = 0
         group.preemptions += 1
         nst = _Running(group.req, [], group=group)
@@ -576,9 +610,13 @@ class Scheduler:
         ttft = None
         if st.first_token_time is not None:
             ttft = st.first_token_time - st.submit_time
+        lp = st.req.logprobs
         return FinishedRequest(rid=st.req.rid, prompt=st.req.prompt,
                                tokens=st.generated, reason=reason,
-                               preemptions=st.preemptions, ttft=ttft)
+                               preemptions=st.preemptions, ttft=ttft,
+                               prompt_logprobs=st.prompt_lps if lp else None,
+                               token_logprobs=list(st.token_logprobs)
+                               if lp else None)
 
     def finish(self, slot: int, reason: str) -> FinishedRequest | None:
         """Group-aware retirement: a plain sequence retires immediately;
@@ -709,7 +747,8 @@ class Scheduler:
         for cum, _, tok, _ in fin:
             self.tokens_emitted += 1
             group.finished.append(Completion(
-                [tok], group.next_branch, "eos", group.score(cum, 1)))
+                [tok], group.next_branch, "eos", group.score(cum, 1),
+                token_logprobs=[cum] if st.req.logprobs else None))
             group.next_branch += 1
         group.slots = {slot}
         if not live:
@@ -745,9 +784,18 @@ class Scheduler:
             self.tokens_emitted += 1
             group.finished.append(Completion(
                 st.generated + [tok], group.next_branch, "eos",
-                group.score(cum, len(st.generated) + 1)))
+                group.score(cum, len(st.generated) + 1),
+                token_logprobs=st.token_logprobs + [cum - st.cum_logprob]
+                if st.req.logprobs else None))
             group.next_branch += 1
         if len(group.finished) >= group.width:
+            live = []
+        elif live and self._beam_converged(group, states, live):
+            # Early stop: >= n hypotheses are in and no live branch's
+            # score upper bound can displace the n-th best - the
+            # remaining decode steps cannot change the returned
+            # completions, so drop every live branch now.
+            self.beam_early_stops += 1
             live = []
         # Reorder: drop childless parents first (frees slots), then fork
         # multi-child parents into them.
@@ -756,6 +804,35 @@ class Scheduler:
             self.drop_branch(s)
         self._beam_place(group, states, live)
         return self._maybe_retire_group(group)
+
+    def _beam_converged(self, group, states, live) -> bool:
+        """Beam early-stopping test (results provably unchanged): True
+        when the group already holds >= ``n`` finished hypotheses and
+        the best score any live continuation could *ever* reach is
+        strictly below the n-th best finished score.
+
+        Upper bound per live candidate: logprobs are <= 0, so a
+        branch's cumulative logprob never increases with length -
+        ``score(cum, L) = cum / L**length_penalty`` is therefore
+        monotone in L for fixed cum, and its supremum over the
+        remaining lengths is at one of the endpoints: the length after
+        this token, or the full ``max_new_tokens`` budget.  Strict
+        comparison keeps ties alive (a tying branch could still change
+        completion ordering), so early-stopped results are identical
+        to run-to-exhaustion results, which the regression test pins.
+        """
+        req = group.req
+        if not req.beam_early_stop or len(group.finished) < req.n:
+            return False
+        nth_best = sorted(
+            (c.score for c in group.finished), reverse=True)[req.n - 1]
+        for cum, _, tok, s in live:
+            length = len(states[s].generated) + 1
+            bound = max(group.score(cum, length),
+                        group.score(cum, req.max_new_tokens))
+            if bound >= nth_best:
+                return False
+        return True
 
     def _beam_select(self, group, cands, eos_id):
         """Split ranked candidates into up-to-width continuations and
@@ -786,6 +863,8 @@ class Scheduler:
         for s, children in sorted(by_parent.items()):
             st = states[s]
             base_gen = list(st.generated)
+            base_lps = list(st.token_logprobs)
+            want_lp = st.req.logprobs
             for cum, bid, tok in children[1:]:
                 ns = self.cache.fork(s)
                 self.forks += 1
@@ -794,12 +873,19 @@ class Scheduler:
                                seq_no=self._seq_no, computed=st.computed,
                                decoding=True, group=group, branch=bid,
                                cum_logprob=cum)
+                if want_lp:
+                    # The step's logprob is the candidate's cumulative
+                    # minus the shared parent's (st.cum_logprob is
+                    # still the pre-step value here).
+                    nst.token_logprobs = base_lps + [cum - st.cum_logprob]
                 self._seq_no += 1
                 self.running[ns] = nst
                 group.slots.add(ns)
                 if len(nst.generated) >= st.req.max_new_tokens:
                     self._retire_branch(ns, "length")
             cum, bid, tok = children[0]
+            if want_lp:
+                st.token_logprobs.append(cum - st.cum_logprob)
             st.cum_logprob = cum
             status = self.record_token(s, tok)
             if status != "running":
@@ -809,6 +895,7 @@ class Scheduler:
         plen = len(group.req.prompt)
         group.prefix_pages = self.cache.slot_pages(slot)[
             :plen // self.cache.page_size]
+        group.prompt_lps = self.running[slot].prompt_lps
 
     def _retire_branch(self, slot: int, reason: str) -> None:
         """Free a finished branch's slot and record its completion."""
@@ -818,7 +905,9 @@ class Scheduler:
         self.cache.free_slot(slot)
         group.finished.append(Completion(
             list(st.generated), st.branch, reason,
-            group.score(st.cum_logprob, len(st.generated))))
+            group.score(st.cum_logprob, len(st.generated)),
+            token_logprobs=list(st.token_logprobs)
+            if st.req.logprobs else None))
 
     def drop_branch(self, slot: int) -> None:
         """Free a branch that yields no completion (beam reorder left it
@@ -843,7 +932,10 @@ class Scheduler:
                        key=(lambda c: (-c.score, c.branch)) if group.ranked
                        else (lambda c: c.branch))
         comps = comps[:group.req.n]
+        lp = group.req.logprobs
         return FinishedRequest(
             rid=group.req.rid, prompt=group.req.prompt,
             tokens=comps[0].tokens, reason=comps[0].reason,
-            preemptions=group.preemptions, completions=comps)
+            preemptions=group.preemptions, completions=comps,
+            prompt_logprobs=group.prompt_lps if lp else None,
+            token_logprobs=comps[0].token_logprobs if lp else None)

@@ -400,3 +400,189 @@ def test_ops_paged_jnp_forked_table_bit_equal_materialized(impl):
     d_m = np.asarray(ops.paged_decode_attention(q4[:, :1], kp, vp, mat,
                                                 sl, impl=impl))
     np.testing.assert_array_equal(d_s, d_m)
+
+
+# ------------------------------------------- page codecs (quantized KV)
+PAGE_CODECS = ["fp", "int8", "log16"]
+
+
+@pytest.mark.parametrize("name", PAGE_CODECS)
+def test_page_codec_roundtrip(name):
+    """Per-codec encode/decode contract: fp is the identity (bit-exact);
+    int8 per-row absmax error is bounded by half a quantization step
+    and all-zero rows survive exactly; log16's stored uint16 IS the
+    BFloat16 bit pattern, so its roundtrip equals a bf16 cast exactly."""
+    from repro.kernels import page_codec
+    c = page_codec.get_codec(name)
+    x = _rand((3, 8, 2, 64), jnp.float32, 301)
+    x = x.at[1, 2].set(0.0)                       # an all-zero token row
+    data, scales = c.encode(x)
+    y = np.asarray(c.decode(data, scales))
+    if name == "fp":
+        assert scales is None
+        np.testing.assert_array_equal(y, np.asarray(x))
+    elif name == "int8":
+        assert data.dtype == jnp.int8
+        assert scales.shape == x.shape[:-1] + (1,)
+        err = np.abs(y - np.asarray(x))
+        bound = 0.5 * np.asarray(scales) * (1 + 1e-5) + 1e-7
+        assert (err <= bound).all(), float((err - bound).max())
+        np.testing.assert_array_equal(y[1, 2], 0.0)
+    else:
+        assert data.dtype == jnp.uint16 and scales is None
+        ref = np.asarray(x.astype(jnp.bfloat16).astype(jnp.float32))
+        np.testing.assert_array_equal(y, ref)
+
+
+@pytest.mark.parametrize("name", PAGE_CODECS)
+def test_page_codec_pool_byte_accounting(name):
+    """The pool arrays `stack_init_paged_cache` actually allocates (data
+    + scale sidecars) match the codec's declared `bytes_per_token`, the
+    single source of truth the engine and the benchmark scoreboard use
+    for slots-at-equal-pool-bytes."""
+    from repro.configs import get_config
+    from repro.kernels import page_codec
+    from repro.models import transformer
+    cfg = get_config("qwen3-1.7b").reduced()
+    num_pages, page = 6, 8
+    layers = transformer.stack_init_paged_cache(
+        cfg, num_pages, page, jnp.float32, codec=name)
+    total = sum(int(a.nbytes) for d in layers.values()
+                for a in d.values())
+    expect = (cfg.n_layers * num_pages * page *
+              page_codec.bytes_per_token(name, cfg.n_kv_heads,
+                                         cfg.d_head, jnp.float32))
+    assert total == expect
+    keys = set(next(iter(layers.values())))
+    want = {"k_pages", "v_pages"} | (
+        {"k_scale", "v_scale"} if name == "int8" else set())
+    assert keys == want
+
+
+def _codec_pools(name, kp, vp):
+    """Encode raw f32 pools; read rule: fp stays on codec=None (the
+    byte-identical pre-codec path), quantized codecs pass themselves."""
+    from repro.kernels import page_codec
+    c = page_codec.get_codec(name)
+    kd, ks = c.encode(kp)
+    vd, vs = c.encode(vp)
+    rc = None if c.name == "fp" else c
+    return kd, vd, dict(codec=rc, k_scales=ks, v_scales=vs)
+
+
+# Output drift vs the raw fp pool, both rails (fp must be bit-exact;
+# int8/log16 bounds are ~4x the drift measured on N(0,1) pools).
+PAGE_CODEC_ATOL = {"fp": 0.0, "int8": 5e-2, "log16": 5e-2}
+
+
+@pytest.mark.parametrize("impl,pal_atol", [("fa2_pallas", 1e-4),
+                                           ("hfa_pallas", 2e-2)])
+@pytest.mark.parametrize("name", PAGE_CODECS)
+def test_paged_codec_parity_matrix(name, impl, pal_atol):
+    """codec x rail x op parity matrix through the ops wrappers: for
+    each of paged decode/prefill/verify, (1) the codec path tracks the
+    raw fp pool within the documented atol (fp: bit-exact), and (2) the
+    Pallas kernel (dequant in the tile loop) matches the jnp gather
+    fallback (dequant on the gathered view) within rail tolerance."""
+    kw = 4
+    q, kp, vp, pt, sl, cl = _verify_setup(400, kw=kw)
+    b, hkv, g, _, d = q.shape
+    q4 = jnp.swapaxes(q.reshape(b, hkv * g, kw, d), 1, 2)  # (B,kw,H,d)
+    kd, vd, ck = _codec_pools(name, kp, vp)
+
+    def runs(tag, call):
+        ref = np.asarray(call(kp, vp, {}))               # raw fp pool
+        y_jnp = np.asarray(call(kd, vd, ck))
+        y_pal = np.asarray(call(kd, vd, {**ck, "force_pallas": True}))
+        if name == "fp":
+            np.testing.assert_array_equal(y_jnp, ref, err_msg=tag)
+        else:
+            np.testing.assert_allclose(y_jnp, ref, err_msg=tag,
+                                       atol=PAGE_CODEC_ATOL[name])
+        np.testing.assert_allclose(y_pal, y_jnp, atol=pal_atol,
+                                   err_msg=tag)
+
+    runs("decode", lambda k, v, e: ops.paged_decode_attention(
+        q4[:, :1], k, v, pt, sl + 1, impl=impl, **e))
+    runs("verify", lambda k, v, e: ops.paged_verify_attention(
+        q4, k, v, pt, sl, cl, impl=impl, **e))
+    runs("prefill", lambda k, v, e: ops.paged_prefill_attention(
+        q4, k, v, pt, sl, cl, impl=impl, **e))
+
+
+@pytest.mark.parametrize("impl", ["fa2_pallas", "hfa_pallas"])
+@pytest.mark.parametrize("name", ["int8", "log16"])
+def test_paged_codec_cow_fork_and_rollback(name, impl):
+    """Encoded pools honor the COW contracts: (1) a forked (page-
+    aliased) table is BIT-equal to a materialized copy when the scale
+    sidecars ride the same `copy_pages`; (2) rows past seq_len - the
+    stale encodings (and stale scales) a speculative rollback leaves
+    behind - never reach the output, so rollback stays a pure seq_len
+    decrement for every codec."""
+    from repro.kernels import page_codec
+    from repro.kernels import paged_prefill as paged_pf
+    rng = np.random.default_rng(501)
+    b, hkv, h, d, page, pages_each, kw = 2, 2, 4, 64, 8, 3, 2
+    num_pages = 2 * pages_each + 2
+    kp = _rand((num_pages, page, hkv, d), jnp.float32, 502)
+    vp = _rand((num_pages, page, hkv, d), jnp.float32, 503)
+    c = page_codec.get_codec(name)
+    kd, ks = c.encode(kp)
+    vd, vs = c.encode(vp)
+    src = rng.permutation(pages_each).astype(np.int32)
+    dst = (pages_each + rng.permutation(pages_each)).astype(np.int32)
+    sj, dj = jnp.asarray(src), jnp.asarray(dst)
+    kd = paged_pf.copy_pages(kd, sj, dj)
+    vd = paged_pf.copy_pages(vd, sj, dj)
+    if ks is not None:
+        ks = paged_pf.copy_pages(ks, sj, dj)
+        vs = paged_pf.copy_pages(vs, sj, dj)
+    shared = jnp.asarray(np.stack([src, src]))
+    mat = jnp.asarray(np.stack([src, dst]))
+    sl = jnp.asarray(rng.integers(1, pages_each * page - kw + 1,
+                                  b).astype(np.int32))
+    cl = jnp.full((b,), kw, jnp.int32)
+    q = _rand((b, kw, h, d), jnp.float32, 504)
+    ck = dict(impl=impl, codec=c, k_scales=ks, v_scales=vs,
+              force_pallas=True)
+    v_s = np.asarray(ops.paged_verify_attention(q, kd, vd, shared, sl,
+                                                cl, **ck))
+    v_m = np.asarray(ops.paged_verify_attention(q, kd, vd, mat, sl, cl,
+                                                **ck))
+    np.testing.assert_array_equal(v_s, v_m)
+    d_s = np.asarray(ops.paged_decode_attention(q[:, :1], kd, vd, shared,
+                                                sl, **ck))
+    d_m = np.asarray(ops.paged_decode_attention(q[:, :1], kd, vd, mat,
+                                                sl, **ck))
+    np.testing.assert_array_equal(d_s, d_m)
+    # Rollback half: trash every encoded row (and scale) at positions
+    # >= sl + kw; the reads above are bounded by seq/chunk lens, so the
+    # outputs must not move by a single bit.
+    keep = np.zeros(kd.shape[:2], bool)           # (P, row) rows read
+    mat_np = np.asarray(mat)
+    for i in range(b):
+        for pos in range(int(sl[i]) + kw):
+            keep[mat_np[i, pos // page], pos % page] = True
+    jr = np.random.default_rng(505)
+    pools = {"k": np.array(kd), "v": np.array(vd)}
+    for key, orig in (("k", kd), ("v", vd)):
+        a = pools[key]
+        a[...] = jr.integers(1, 120, a.shape).astype(a.dtype)
+        a[keep] = np.asarray(orig)[keep]
+    ksx, vsx = ks, vs
+    if ks is not None:
+        ksx, vsx = np.array(ks), np.array(vs)
+        for a, orig in ((ksx, ks), (vsx, vs)):
+            a[...] = jr.standard_normal(a.shape).astype(a.dtype)
+            a[keep] = np.asarray(orig)[keep]
+    ck2 = dict(impl=impl, codec=c, k_scales=None if ksx is None
+               else jnp.asarray(ksx),
+               v_scales=None if vsx is None else jnp.asarray(vsx),
+               force_pallas=True)
+    kdx, vdx = jnp.asarray(pools["k"]), jnp.asarray(pools["v"])
+    v_j = np.asarray(ops.paged_verify_attention(q, kdx, vdx, mat, sl, cl,
+                                                **ck2))
+    np.testing.assert_array_equal(v_j, v_m)
+    d_j = np.asarray(ops.paged_decode_attention(q[:, :1], kdx, vdx, mat,
+                                                sl, **ck2))
+    np.testing.assert_array_equal(d_j, d_m)

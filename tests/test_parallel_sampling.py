@@ -276,3 +276,65 @@ def test_parallel_sampling_token_identical_under_tp2():
                           capture_output=True, text=True, timeout=600)
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "TP-PARALLEL-OK" in proc.stdout
+
+
+# --------------------------------------------- beam early-stopping
+def _drive_beam(early_stop):
+    """Host-side beam run against a real Scheduler + PagedKVCache with a
+    deterministic candidate stream: the root expansion immediately
+    finishes two strong eos hypotheses, every later candidate is far
+    weaker, so with n=2 the best-live-vs-n-th-finished bound proves
+    convergence at the first reorder while the exhaustive run decodes
+    its branches to the length budget.  Returns (FinishedRequest,
+    reorder_steps, Scheduler)."""
+    from repro.serving import PagedKVCache, Scheduler
+    eos = 7
+    cache = PagedKVCache(64, 4, 8, 8)
+    s = Scheduler(cache)
+    s.submit(Request(rid=0, prompt=[1, 2, 3, 4, 5], max_new_tokens=4,
+                     eos_id=eos, beam_width=3, n=2,
+                     beam_early_stop=early_stop))
+    chunks, _ = s.schedule_prefill(None)
+    for ck in chunks:
+        s.complete_chunk(ck)
+        cache.register_pages(ck.slot, s.running[ck.slot].tokens())
+    (slot,) = list(s.running)
+    fr = s.fan_out_beam(slot, [(eos, -0.1), (eos, -0.15), (10, -4.0),
+                               (11, -4.2), (12, -4.4), (13, -4.6)])
+    steps = 0
+    while fr is None:
+        steps += 1
+        assert steps < 20
+        group = None
+        for step in s.schedule_decode(0):
+            st = s.running[step.slot]
+            assert cache.ensure_append_capacity(step.slot)
+            n = int(cache.seq_lens[step.slot])
+            cache.mark_prefilled(step.slot, n + len(step.tokens))
+            cache.register_pages(step.slot, st.tokens())
+            group = st.group
+        weak = [(20 + steps, -0.5), (21 + steps, -0.6), (22 + steps, -0.7),
+                (23 + steps, -0.8), (24 + steps, -0.9), (25 + steps, -1.0)]
+        fr = s.beam_reorder(group, {sl: list(weak) for sl in group.slots})
+    cache.check_invariants()
+    assert cache.available_page_count == cache.num_pages
+    return fr, steps, s
+
+
+def test_beam_early_stop_results_unchanged():
+    """Early stopping is an optimization, never a semantic change: the
+    early-stopped run returns the exact completions (tokens, reasons,
+    scores) of the run-to-exhaustion baseline, stops strictly sooner,
+    and is the only one to bump the `beam_early_stops` counter."""
+    fast, fast_steps, s_fast = _drive_beam(True)
+    slow, slow_steps, s_slow = _drive_beam(False)
+    assert s_fast.beam_early_stops == 1
+    assert s_slow.beam_early_stops == 0
+    assert fast_steps < slow_steps
+    assert fast.tokens == slow.tokens and fast.reason == slow.reason
+    assert [(c.tokens, c.reason) for c in fast.completions] == \
+        [(c.tokens, c.reason) for c in slow.completions]
+    for a, b in zip(fast.completions, slow.completions):
+        assert a.score == b.score
+    # the winning hypotheses are the two root eos candidates
+    assert [c.tokens for c in fast.completions] == [[7], [7]]

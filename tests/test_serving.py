@@ -919,3 +919,36 @@ def test_engine_hfa_free_slot_no_nan():
         assert np.all(out[1] == 0.0), "free slot row must be zero"
         np.testing.assert_allclose(out[[0, 2]], clean[impl][[0, 2]],
                                    atol=1e-6)
+
+
+def test_engine_logprobs_match_dense_recompute(qwen_smoke):
+    """`Request(logprobs=True)`: prompt logprobs (position 0 None, the
+    rest log p(prompt[t] | prompt[:t])) and per-generated-token
+    logprobs from the paged engine == log_softmax over one dense
+    `model.apply` forward of the full stream (teacher-forced)."""
+    cfg, model, params = qwen_smoke
+    engine = ServingEngine(model, params, max_batch=2, page_size=4,
+                           num_pages=12, max_seq=40)
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(1, cfg.vocab_size, 7).tolist()
+    (f,) = engine.run([(0, Request(rid=0, prompt=prompt,
+                                   max_new_tokens=5, logprobs=True))])
+    assert f.prompt_logprobs is not None
+    assert len(f.prompt_logprobs) == len(prompt)
+    assert f.prompt_logprobs[0] is None
+    assert all(lp is not None and lp <= 0.0
+               for lp in f.prompt_logprobs[1:])
+    assert len(f.token_logprobs) == len(f.tokens)
+
+    stream = prompt + f.tokens
+    lg, _ = model.apply(params, {"tokens": jnp.asarray([stream],
+                                                       jnp.int32)},
+                        train=False)
+    lsm = np.asarray(jax.nn.log_softmax(lg[0].astype(jnp.float32), -1))
+    for t in range(1, len(prompt)):
+        np.testing.assert_allclose(f.prompt_logprobs[t],
+                                   lsm[t - 1, prompt[t]], atol=5e-4)
+    for i, tok in enumerate(f.tokens):
+        np.testing.assert_allclose(f.token_logprobs[i],
+                                   lsm[len(prompt) - 1 + i, tok],
+                                   atol=5e-4)

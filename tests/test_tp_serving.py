@@ -178,15 +178,15 @@ kv_lens = jnp.where(sl > 0, sl + 1, 0)
 ref = ops.paged_decode_attention(q, kp1, vp1, pt, kv_lens, impl="fa2")
 
 sh = NamedSharding(mesh, P(None, None, "model", None))
-out, kp2, vp2 = jax.jit(lambda *a: collectives.shardmap_paged_attention(
+pools = {"k_pages": jax.device_put(kp, sh), "v_pages": jax.device_put(vp, sh)}
+out, pools2 = jax.jit(lambda *a: collectives.shardmap_paged_attention(
     *a, mesh=mesh, mode="decode", impl="fa2"))(
-    q, kn, vn, jax.device_put(kp, sh), jax.device_put(vp, sh), pt,
-    sl, jnp.zeros_like(sl))
+    q, kn, vn, pools, pt, sl, jnp.zeros_like(sl))
 err = float(jnp.abs(out - ref).max())
 print("ERR", err)
 assert err < 1e-6, err
-assert bool(jnp.all(jnp.asarray(kp2) == kp1))
-assert bool(jnp.all(jnp.asarray(vp2) == vp1))
+assert bool(jnp.all(jnp.asarray(pools2["k_pages"]) == kp1))
+assert bool(jnp.all(jnp.asarray(pools2["v_pages"]) == vp1))
 print("OK")
 """)
     assert "OK" in out
@@ -270,6 +270,52 @@ try:
     raise SystemExit("expected ValueError")
 except ValueError as e:
     assert "divide" in str(e), e
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_tp_engine_codec_token_parity():
+    """Quantized page codecs under 2-way TP: int8/log16 engines on a
+    simulated mesh emit the same greedy streams as their single-shard
+    counterparts, the scale sidecars shard with the pages (per-shard
+    pool bytes halve, every leaf split in two), and bytes_per_token is
+    a property of the codec, not of the mesh."""
+    out = _run("""
+import jax, numpy as np
+from repro.configs import get_config
+from repro.models.model import build_model
+from repro.serving import Request, ServingEngine
+from repro.launch.mesh import make_tp_mesh
+
+cfg = get_config("qwen3-1.7b").reduced()
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+rng = np.random.default_rng(3)
+prompts = [rng.integers(1, cfg.vocab_size, 10).tolist()
+           for _ in range(4)]
+
+def run(mesh, codec):
+    eng = ServingEngine(model, params, max_batch=3, page_size=8,
+                        max_seq=64, mesh=mesh, kv_codec=codec)
+    fin = eng.run([(i, Request(rid=i, prompt=list(p),
+                               max_new_tokens=6))
+                   for i, p in enumerate(prompts)])
+    eng.cache.check_invariants()
+    return {f.rid: tuple(f.tokens) for f in fin}, eng
+
+mesh = make_tp_mesh(2)
+for codec in ("int8", "log16"):
+    t1, e1 = run(None, codec)
+    t2, e2 = run(mesh, codec)
+    assert t1 == t2, (codec, t1, t2)
+    assert e2.bytes_per_token() == e1.bytes_per_token()
+    assert e2.pool_bytes_per_shard() * 2 == e1.pool_bytes_per_shard()
+    for leaf in jax.tree.leaves(e2.layers):
+        assert len(leaf.addressable_shards) == 2
+        assert all(s.data.nbytes == leaf.nbytes // 2
+                   for s in leaf.addressable_shards)
+    print(codec, "OK")
 print("OK")
 """)
     assert "OK" in out

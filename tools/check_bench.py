@@ -47,6 +47,7 @@ RUNS = [
     ("shared_prefix", []),
     ("spec_greedy", ["--spec-k", "4"]),
     ("parallel_sample", ["--workload", "parallel-sample", "--n", "4"]),
+    ("kv_int8", ["--kv-codec", "int8"]),
     ("open_loop", ["--workload", "open-loop"]),
 ]
 

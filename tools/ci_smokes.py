@@ -70,6 +70,9 @@ SMOKES = [
     ("bench-open-loop",
      "Open-loop SLA gate (streams resolve, cancels refcount-clean)",
      BENCH + ["--workload", "open-loop", "--smoke"]),
+    ("bench-kv-int8",
+     "int8 page-codec gate (>= 2x concurrent slots at equal pool bytes)",
+     BENCH + ["--kv-codec", "int8", "--smoke"]),
     ("serve-tp",
      "Tensor-parallel serve smoke (2-shard simulated mesh)",
      SERVE + ["--batch", "2", "--steps", "4", "--tp", "2"]),
