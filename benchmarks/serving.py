@@ -338,6 +338,14 @@ def main():
                     help="every k-th open-loop client abandons its "
                          "stream after --cancel-after tokens (0 = never)")
     ap.add_argument("--cancel-after", type=int, default=4)
+    ap.add_argument("--transport", choices=("inproc", "http"),
+                    default="inproc",
+                    help="open-loop only: 'inproc' consumes the "
+                         "AsyncFrontend generators directly; 'http' "
+                         "starts the SSE server on an ephemeral port "
+                         "and drives the identical workload through "
+                         "real sockets (client-side TTFT/TPOT include "
+                         "the wire; abandonment = socket close)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the run's headline metrics as JSON "
                          "(the tools/check_bench.py input)")
@@ -632,11 +640,73 @@ def _run_parallel_sample(model, params, args):
     return ok
 
 
+async def _http_open_loop(engine, arrivals, *, cancel_every, cancel_after):
+    """Open-loop traffic over the HTTP/SSE transport: an ephemeral-port
+    :class:`repro.serving.http.HttpServer` in-process, one raw-socket
+    SSE client per request (round-robined across four tenant headers).
+    Abandonment closes the socket mid-stream - the server's
+    disconnect-cancellation path, not the in-process generator one.
+    Records mirror :func:`repro.launch.serve_async.open_loop`; a client
+    that disconnects records reason="cancelled" (it never sees the
+    terminal event)."""
+    import asyncio
+    import time as _time
+
+    from repro.serving import AsyncFrontend
+    from repro.serving.http import HttpServer, stream_generate
+    frontend = AsyncFrontend(engine)
+    server = await HttpServer(frontend, port=0).start()
+    records: list[dict] = []
+
+    async def client(i: int, payload: dict, cls: str) -> None:
+        cancel_at = None
+        if cancel_every > 0 and i % cancel_every == cancel_every - 1:
+            cancel_at = cancel_after
+        t_submit = _time.perf_counter()
+        t_tokens: list[float] = []
+        reason = None
+        gen = stream_generate(server.host, server.port, payload,
+                              tenant=f"bench-{i % 4}")
+        try:
+            async for kind, data in gen:
+                if kind == "token":
+                    t_tokens.append(_time.perf_counter())
+                    if cancel_at is not None \
+                            and len(t_tokens) >= cancel_at:
+                        break          # socket close = disconnect
+                elif kind == "done":
+                    reason = data["reason"]
+                else:
+                    reason = f"http-{data['status']}"
+        finally:
+            await gen.aclose()
+        ttft = t_tokens[0] - t_submit if t_tokens else None
+        tpot = (t_tokens[-1] - t_tokens[0]) / (len(t_tokens) - 1) \
+            if len(t_tokens) > 1 else None
+        records.append({"rid": i, "cls": cls, "ttft": ttft,
+                        "tpot": tpot, "tokens": len(t_tokens),
+                        "reason": reason or "cancelled"})
+
+    tasks = []
+    for i, (gap, payload, cls) in enumerate(arrivals):
+        if gap:
+            await asyncio.sleep(gap)
+        tasks.append(asyncio.ensure_future(client(i, payload, cls)))
+    await asyncio.gather(*tasks)
+    await frontend.drain()        # disconnect cancels settle
+    await server.stop()
+    await frontend.close()
+    return sorted(records, key=lambda r: r["rid"])
+
+
 def _run_open_loop(model, params, args):
     """SLA scoreboard: Poisson open-loop traffic through the asyncio
     streaming front-end, mixed across latency classes, with optional
     mid-stream abandonment.  Client-side p50/p99 TTFT and TPOT per
     class are the committed-baseline metrics (BENCH_serving.json).
+    ``--transport http`` routes the identical workload through the
+    HTTP/SSE server over real sockets instead of in-process
+    generators.
 
     Runs the identical workload twice on the same model (jit compile
     cache is shared across engines), timing only the second run, so the
@@ -676,16 +746,38 @@ def _run_open_loop(model, params, args):
             latency_class=LATENCY_CLASSES[names[int(picks[i])]]))
             for i in range(n)]
 
+    def build_http_arrivals():
+        # Same workload as build_arrivals(), expressed as wire payloads
+        # (the server assigns rids; records are keyed by client index).
+        arrivals = []
+        for i in range(n):
+            cls = names[int(picks[i])]
+            payload = {"prompt": [int(t) for t in prompts[i]],
+                       "max_new_tokens": int(budgets[i]),
+                       "latency_class": cls, "id": i}
+            if args.temperature > 0:
+                payload.update(temperature=args.temperature,
+                               top_k=args.top_k, top_p=args.top_p,
+                               seed=args.seed + i)
+            arrivals.append((gaps[i], payload, cls))
+        return arrivals
+
     def run_once():
         engine = ServingEngine(
             model, params, max_batch=args.batch, page_size=args.page_size,
             max_seq=args.max_seq, prefill_budget="adaptive",
             spec_k=args.spec_k, kv_codec=args.kv_codec)
         t0 = time.perf_counter()
-        records = asyncio.run(open_loop(
-            AsyncFrontend(engine), build_arrivals(),
-            cancel_every=args.cancel_every,
-            cancel_after=args.cancel_after))
+        if args.transport == "http":
+            records = asyncio.run(_http_open_loop(
+                engine, build_http_arrivals(),
+                cancel_every=args.cancel_every,
+                cancel_after=args.cancel_after))
+        else:
+            records = asyncio.run(open_loop(
+                AsyncFrontend(engine), build_arrivals(),
+                cancel_every=args.cancel_every,
+                cancel_after=args.cancel_after))
         dt = time.perf_counter() - t0
         engine.cache.check_invariants()
         return records, dt, engine
@@ -695,12 +787,14 @@ def _run_open_loop(model, params, args):
     summary = summarize(records)
     st = engine.stats
 
-    print(f"open-loop: {n} requests at {args.rate}/s over {dt:.2f}s "
+    print(f"open-loop[{args.transport}]: {n} requests at {args.rate}/s "
+          f"over {dt:.2f}s "
           f"({st['steps']} steps, {st['cancelled']} cancelled, "
           f"{st['preemptions']} preemptions, adaptive budget last "
           f"{st['adaptive_budget_last']} in [{engine.adaptive_floor}, "
           f"{engine.adaptive_ceiling}])")
-    metrics = {"workload": "open-loop", "requests": n,
+    metrics = {"workload": "open-loop", "transport": args.transport,
+               "requests": n,
                "cancelled": st["cancelled"],
                "steps": st["steps"],
                "adaptive_budget_last": st["adaptive_budget_last"],

@@ -59,8 +59,10 @@ async def open_loop(frontend, arrivals, *, cancel_every: int = 0,
     (0 = never), exercising mid-prefill and mid-decode cancellation.
 
     Returns one record per request:
-    {rid, cls, ttft, tpot, tokens, reason}; ttft/tpot are None when no
-    token arrived (cancelled pre-first-token / rejected)."""
+    {rid, cls, ttft, tpot, tokens, reason, fr}; ttft/tpot are None when
+    no token arrived (cancelled pre-first-token / rejected); fr is the
+    claimed FinishedRequest (result() removes it from the frontend's
+    bounded LRU, so the record carries it for later inspection)."""
     records: list[dict] = []
 
     async def client(i: int, req) -> None:
@@ -78,16 +80,19 @@ async def open_loop(frontend, arrivals, *, cancel_every: int = 0,
         finally:
             await gen.aclose()
         # aclose() files the cancel intent; the result lands once the
-        # drive loop applies it.
-        while frontend.result(req.rid) is None:
-            await asyncio.sleep(0.001)
-        fr = frontend.result(req.rid)
+        # drive loop applies it.  result() claims (removes) it.
+        fr = None
+        while fr is None:
+            fr = frontend.result(req.rid)
+            if fr is None:
+                await asyncio.sleep(0.001)
         ttft = t_tokens[0] - t_submit if t_tokens else None
         tpot = (t_tokens[-1] - t_tokens[0]) / (len(t_tokens) - 1) \
             if len(t_tokens) > 1 else None
         records.append({"rid": req.rid, "cls": req.latency_class.name,
                         "ttft": ttft, "tpot": tpot,
-                        "tokens": len(t_tokens), "reason": fr.reason})
+                        "tokens": len(t_tokens), "reason": fr.reason,
+                        "fr": fr})
 
     tasks = []
     for i, (gap, req) in enumerate(arrivals):
@@ -240,8 +245,7 @@ def main():
               f"cancelled={ent['cancelled']}")
     done = [r for r in records if r["reason"] in ("eos", "length")]
     if done:
-        fr = frontend.result(done[0]["rid"])
-        print("sample:", fr.tokens[:12])
+        print("sample:", done[0]["fr"].tokens[:12])
 
 
 if __name__ == "__main__":

@@ -6,6 +6,7 @@ sampler.py       device-side temperature/top-k/top-p/penalty sampling
 spec.py          prompt-lookup draft proposer (self-speculation)
 engine.py        ServingEngine: jitted paged prefill/verify over the model
 frontend.py      AsyncFrontend: asyncio token streaming + cancellation
+http.py          HttpServer: dependency-free HTTP/1.1 + SSE transport
 
 Device-side pieces live next to the kernels they pair with
 (:mod:`repro.kernels.paged_decode`, :mod:`repro.kernels.paged_verify`)
@@ -13,6 +14,8 @@ and in the model facade (:meth:`repro.models.model.LM.paged_verify_step`).
 """
 from repro.serving.engine import ServingEngine
 from repro.serving.frontend import AsyncFrontend
+from repro.serving.http import (HttpError, HttpServer, http_json,
+                                stream_generate)
 from repro.serving.paged_cache import PagedKVCache
 from repro.serving.sampler import SamplingParams, branch_seed
 from repro.serving.scheduler import (BATCH, INTERACTIVE, LATENCY_CLASSES,
@@ -23,8 +26,9 @@ from repro.serving.scheduler import (BATCH, INTERACTIVE, LATENCY_CLASSES,
 from repro.serving.spec import propose_draft
 
 __all__ = ["AsyncFrontend", "BATCH", "Completion", "DecodeStep",
+           "HttpError", "HttpServer",
            "INTERACTIVE", "InvalidRequestError", "LATENCY_CLASSES",
            "LatencyClass", "PagedKVCache", "PrefillChunk", "Request",
            "FinishedRequest", "STANDARD", "SamplingParams", "Scheduler",
-           "SequenceGroup", "ServingEngine", "branch_seed",
-           "propose_draft"]
+           "SequenceGroup", "ServingEngine", "branch_seed", "http_json",
+           "propose_draft", "stream_generate"]

@@ -345,7 +345,16 @@ class ServingEngine:
                       "rollbacks": 0, "triplet_bytes": 0,
                       "groups": 0, "forks": 0, "beam_steps": 0,
                       "beam_early_stops": 0,
-                      "cancelled": 0, "adaptive_budget_last": 0}
+                      "cancelled": 0, "adaptive_budget_last": 0,
+                      # AsyncFrontend bookkeeping (kept here so every
+                      # serving counter surfaces through one dict, e.g.
+                      # the HTTP transport's GET /stats):
+                      "results_evicted": 0,    # unclaimed finished
+                      #                          results aged out of the
+                      #                          bounded LRU
+                      "stream_overflows": 0}   # bounded per-stream
+        #                                        queues hitting capacity
+        #                                        (stalled readers)
         (self._prefill, self._decode, self._verify, self._copy,
          self._sample, self._topk,
          self._prefill_lp) = _serving_jits(model, mesh, self.kv_codec)

@@ -108,6 +108,12 @@ class Request:
     # tail decode steps).  Off = run until ``beam_width`` hypotheses
     # finish or every branch exhausts its budget.
     beam_early_stop: bool = True
+    # Multi-tenant fairness: waiting requests of the same latency class
+    # are round-robined across tenants (see Scheduler._waiting_key);
+    # the default "" (everything one tenant) degrades to plain FCFS
+    # within the class.  The HTTP transport fills this from the
+    # ``x-tenant`` request header.
+    tenant: str = ""
 
 
 @dataclasses.dataclass
@@ -237,6 +243,8 @@ class _Running:
     first_token_time: float | None = None
     last_token_time: float = 0.0      # base of the next-token deadline
     queue_seq: int = 0                # waiting order within a class
+    fair_round: int = 0               # tenant round-robin round (see
+    #                                   Scheduler._waiting_key)
 
     def __post_init__(self):
         # Maintained incrementally by record_token: tokens() is on the
@@ -304,6 +312,16 @@ class Scheduler:
         # resumes ahead of every later arrival of its class.
         self._queue_seq_next = 0
         self._queue_seq_front = -1
+        # Per-tenant fairness within a class: start-time fair queuing
+        # with unit service times.  A submission's fair_round is
+        # max(the tenant's own next round, the class's virtual time =
+        # the highest round already admitted), so a bursting tenant
+        # runs its rounds up while a freshly-arriving tenant enters at
+        # the current virtual time: admission round-robins across
+        # tenants and stays FCFS within one (a single tenant's rounds
+        # are monotone, so the key degrades to (priority, queue_seq)).
+        self._tenant_round: dict[tuple[int, str], int] = {}
+        self._class_vt: dict[int, int] = {}
         # Monotone accounting the engine reads as deltas around group
         # operations (beam reorders emit tokens and fork slots deep
         # inside the scheduler).
@@ -320,11 +338,32 @@ class Scheduler:
         st.submit_time = st.last_token_time = now
         st.queue_seq = self._queue_seq_next
         self._queue_seq_next += 1
+        ckey = req.latency_class.priority
+        st.fair_round = max(self._tenant_round.get((ckey, req.tenant), 0),
+                            self._class_vt.get(ckey, 0))
+        self._tenant_round[(ckey, req.tenant)] = st.fair_round + 1
         self.waiting.append(st)
 
     @staticmethod
-    def _waiting_key(st: _Running) -> tuple[int, int]:
-        return (st.req.latency_class.priority, st.queue_seq)
+    def _waiting_key(st: _Running) -> tuple[int, int, int]:
+        # Class priority first, then the tenant round-robin round, then
+        # arrival order: within a class, tenants take turns; within a
+        # tenant (and with a single tenant), FCFS by queue_seq.
+        # Preempted work carries fair_round = -1 (see _requeue_front),
+        # so it resumes ahead of every fresh arrival of its class.
+        return (st.req.latency_class.priority, st.fair_round, st.queue_seq)
+
+    def _advance_vt(self, st: _Running) -> None:
+        """Advance the class's virtual time to an admitted request's
+        round, and drop tenant entries at/below it (max(round, vt)
+        makes them indistinguishable from absent - pruning keeps the
+        table bounded by the number of *backlogged* tenants)."""
+        ckey = st.req.latency_class.priority
+        if st.fair_round > self._class_vt.get(ckey, 0):
+            self._class_vt[ckey] = vt = st.fair_round
+            for k in [k for k, r in self._tenant_round.items()
+                      if k[0] == ckey and r <= vt]:
+                del self._tenant_round[k]
 
     def _next_waiting(self) -> _Running | None:
         """Best waiting candidate: most urgent class first, FCFS within
@@ -411,6 +450,7 @@ class Scheduler:
                     < need_slots:
                 break
             self.waiting.remove(st)
+            self._advance_vt(st)
             slot = self.cache.alloc_slot(len(toks), shared, lazy=True)
             st.computed = len(shared) * self.cache.page_size
             st.decoding = False
@@ -478,6 +518,7 @@ class Scheduler:
                     < need_slots:
                 break
             self.waiting.remove(st)
+            self._advance_vt(st)
             slot = self.cache.alloc_slot(len(toks))
             st.computed = st.target
             st.decoding = True
@@ -574,6 +615,9 @@ class Scheduler:
     def _requeue_front(self, st: _Running) -> None:
         st.queue_seq = self._queue_seq_front
         self._queue_seq_front -= 1
+        # Preempted work outranks every fresh arrival of its class, no
+        # matter which tenant it belongs to (it already held pages).
+        st.fair_round = -1
         self.waiting.append(st)
 
     def preempt_group(self, group: SequenceGroup) -> None:

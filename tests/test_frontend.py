@@ -9,6 +9,11 @@ Covers, per the streaming/SLA subsystem spec:
     pool fully free with check_invariants clean (no leaked refcounts);
   * drain()/close(drain=False) semantics, per-request resource
     rejection and loud InvalidRequestError propagation;
+  * long-running-server regressions: bounded results LRU with claiming
+    result(), crashed drive task failing loudly (streams raise, submits
+    reject) instead of silent restart, group-cancel snapshotting the
+    primary branch's tokens, bounded stream queues cancelling a stalled
+    reader;
   * launch-layer CLI plumbing: merge_xla_flags preserves/raises a
     pre-existing XLA_FLAGS (the ensure_host_devices bugfix) and
     parse_prefill_budget accepts none/int/adaptive.
@@ -250,6 +255,122 @@ def test_resource_rejection_and_invalid_request(qwen_smoke):
     assert fe.result(0).reason == "rejected"
     assert fe.engine.stats["rejected"] == 1
     assert len(good) == 3 or fe.result(2).reason == "stop"
+    _pool_clean(fe.engine)
+
+
+# ------------------------------------- long-running-server regressions
+def test_results_bounded_lru_and_claim(qwen_smoke):
+    """``results`` used to grow without bound on a long-running server.
+    Now result() claims (removes) its entry and unclaimed entries age
+    out oldest-first past ``max_results``, counted in engine.stats."""
+    cfg, model, params = qwen_smoke
+
+    async def main():
+        fe = AsyncFrontend(_engine(model, params), max_results=2)
+        for i in range(3):
+            async for _ in fe.submit(Request(rid=i,
+                                             prompt=_prompt(cfg, 70 + i, 4),
+                                             max_new_tokens=3)):
+                pass
+        await fe.close()
+        return fe
+
+    fe = asyncio.run(main())
+    assert fe.engine.stats["results_evicted"] == 1
+    assert fe.result(0) is None          # oldest entry aged out
+    fr = fe.result(1)
+    assert fr is not None and fr.rid == 1
+    assert fe.result(1) is None          # claimed: removed on first read
+    assert fe.result(2) is not None
+    _pool_clean(fe.engine)
+
+
+def test_drive_crash_fails_loudly(qwen_smoke):
+    """A crashed drive task used to be silently restarted by the next
+    submit, discarding the exception and hammering a broken engine.
+    Now the failure raises out of every live stream and later submits
+    reject with the original failure chained."""
+    cfg, model, params = qwen_smoke
+
+    async def main():
+        eng = _engine(model, params)
+        fe = AsyncFrontend(eng)
+
+        def bad_step():
+            raise RuntimeError("device fell over")
+
+        eng.step = bad_step
+        gen = fe.submit(Request(rid=0, prompt=_prompt(cfg, 80, 4),
+                                max_new_tokens=8))
+        with pytest.raises(RuntimeError, match="device fell over"):
+            async for _ in gen:
+                pass
+        assert fe.failed
+        with pytest.raises(RuntimeError, match="frontend failed"):
+            fe.submit(Request(rid=1, prompt=_prompt(cfg, 81, 4),
+                              max_new_tokens=4))
+        await fe.close()          # still clean to close
+        return fe
+
+    asyncio.run(main())
+
+
+def test_group_cancel_snapshots_primary_tokens(qwen_smoke):
+    """Cancelling a fanned-out group mid-decode used to record
+    tokens=[] (the snapshot only looked at plain requests).  Now the
+    primary live branch's generated-so-far rides the cancel result."""
+    cfg, model, params = qwen_smoke
+
+    async def main():
+        eng = _engine(model, params, max_batch=6)
+        fe = AsyncFrontend(eng)
+        gen = fe.submit(Request(
+            rid=0, prompt=_prompt(cfg, 90, 5), max_new_tokens=40,
+            sampling=SamplingParams(temperature=0.8, top_k=8, seed=3),
+            n=3))
+        nxt = asyncio.ensure_future(gen.__anext__())
+        # A group streams nothing until retirement: wait until some
+        # branch has generated, then disconnect.
+        while not any(r.generated
+                      for r in eng.sched.running.values()):
+            await asyncio.sleep(0.001)
+        nxt.cancel()
+        with contextlib.suppress(asyncio.CancelledError,
+                                 StopAsyncIteration):
+            await nxt
+        await gen.aclose()
+        await fe.close()
+        return fe
+
+    fe = asyncio.run(main())
+    fr = fe.result(0)
+    assert fr.reason == "cancelled"
+    assert len(fr.tokens) > 0            # the regression: was []
+    _pool_clean(fe.engine)
+
+
+def test_stream_overflow_cancels_stalled_reader(qwen_smoke):
+    """Per-stream queues used to be unbounded: a reader that never
+    drained its stream buffered every token forever while holding its
+    slot and pages.  Now a full queue cancels the request (the reader
+    is presumed disconnected) and the full token list still rides the
+    FinishedRequest."""
+    cfg, model, params = qwen_smoke
+
+    async def main():
+        fe = AsyncFrontend(_engine(model, params), stream_buffer=2)
+        fe.submit(Request(rid=0, prompt=_prompt(cfg, 95, 4),
+                          max_new_tokens=40))   # generator never read
+        await fe.drain()
+        await fe.close()
+        return fe
+
+    fe = asyncio.run(main())
+    fr = fe.result(0)
+    assert fr.reason == "cancelled"
+    assert fe.engine.stats["stream_overflows"] >= 1
+    assert len(fr.tokens) >= 2           # snapshot kept generated-so-far
+    assert len(fr.tokens) < 40           # and it really was cut short
     _pool_clean(fe.engine)
 
 

@@ -1,0 +1,473 @@
+"""HTTP/SSE transport tests: HttpServer over AsyncFrontend, driven
+through real loopback sockets with the module's own stdlib client.
+
+Covers, per the serving-transport spec:
+  * request_from_json validation (unknown fields, bad types, class and
+    ceiling checks -> HttpError 400);
+  * SSE token streams are token-identical to ServingEngine.run - greedy
+    and seeded-sampled - and the terminal ``event: done`` carries the
+    full FinishedRequest payload ("stream": false returns it as one
+    JSON response; sequence groups include completions);
+  * admission control: a latency class at its queue cap answers 429
+    without touching in-flight streams; engine down (frontend closed)
+    answers 503; misuse over the wire (contradictory knobs, over-
+    ceiling prompts) answers 400;
+  * per-tenant fairness: waiting requests of one class round-robin
+    across ``x-tenant`` values instead of strict FCFS;
+  * disconnect-driven cancellation: an abruptly closed socket cancels
+    the request and the paged pool comes back refcount-clean;
+  * slow-reader backpressure: a client that stops reading trips the
+    frontend's bounded stream queue (cancel-on-overflow) instead of
+    buffering without limit.
+"""
+import asyncio
+import contextlib
+import json
+import socket
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.serving import (AsyncFrontend, Request, SamplingParams,
+                           ServingEngine)
+from repro.serving.http import (HttpError, HttpServer, http_json,
+                                request_from_json, stream_generate)
+
+
+@pytest.fixture(scope="module")
+def qwen_smoke():
+    from repro.configs import get_config
+    from repro.models.model import build_model
+    cfg = get_config("qwen3-1.7b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_seq", 64)
+    return ServingEngine(model, params, **kw)
+
+
+def _prompt(cfg, seed, n):
+    rng = np.random.default_rng(seed)
+    return rng.integers(1, cfg.vocab_size, n).tolist()
+
+
+def _pool_clean(engine):
+    engine.cache.check_invariants()
+    assert engine.cache.available_page_count == engine.cache.num_pages
+    assert not engine.sched.has_work
+
+
+# --------------------------------------------------- request validation
+def test_request_from_json_validation():
+    ok = request_from_json({"prompt": [1, 2], "max_new_tokens": 4},
+                           rid=7, tenant="alice")
+    assert ok.rid == 7 and ok.tenant == "alice"
+    assert ok.sampling is None           # no sampling fields -> greedy
+    sp = request_from_json({"prompt": [1], "temperature": 0.5, "seed": 3},
+                           rid=0)
+    assert sp.sampling is not None and sp.sampling.seed == 3
+    for bad in ([1, 2],                          # not an object
+                {"prompt": []},
+                {"prompt": "hi"},
+                {"prompt": [1, -2]},
+                {"prompt": [1, True]},
+                {"prompt": [1], "latency_class": "warp"},
+                {"prompt": [1], "max_new_tokens": 0},
+                {"prompt": [1], "frobnicate": 1},
+                {"prompt": [1], "temperature": "hot"},
+                {"prompt": [1], "top_k": -1},
+                {"prompt": [1], "logprobs": 1}):
+        with pytest.raises(HttpError) as ei:
+            request_from_json(bad, rid=0)
+        assert ei.value.status == 400
+
+
+# ------------------------------------------------------ streaming parity
+def test_sse_stream_parity_with_engine_run(qwen_smoke):
+    """Tokens streamed over the socket == the synchronous batch loop's,
+    request by request, with per-event indices and the FinishedRequest
+    payload on the terminal event."""
+    cfg, model, params = qwen_smoke
+    reqs = [Request(rid=i, prompt=_prompt(cfg, 20 + i, 3 + i),
+                    max_new_tokens=6 + i) for i in range(3)]
+    gold = {f.rid: f.tokens for f in _engine(model, params).run(
+        [(0, r) for r in reqs])}
+
+    async def main():
+        fe = AsyncFrontend(_engine(model, params))
+        server = await HttpServer(fe).start()
+        out = {}
+
+        async def client(i, req):
+            toks, done = [], None
+            async for kind, data in stream_generate(
+                    server.host, server.port,
+                    {"prompt": req.prompt,
+                     "max_new_tokens": req.max_new_tokens, "id": i}):
+                if kind == "token":
+                    assert data["index"] == len(toks)
+                    toks.append(data["token"])
+                else:
+                    assert kind == "done"
+                    done = data
+            out[i] = (toks, done)
+
+        await asyncio.gather(*(client(r.rid, r) for r in reqs))
+        await server.stop()
+        await fe.close()
+        return fe, out
+
+    fe, out = asyncio.run(main())
+    for r in reqs:
+        toks, done = out[r.rid]
+        assert toks == gold[r.rid]
+        assert done["tokens"] == toks
+        assert done["id"] == r.rid
+        assert done["reason"] in ("stop", "length")
+        assert done["ttft"] is not None
+    _pool_clean(fe.engine)
+
+
+def test_sse_sampled_parity(qwen_smoke):
+    """A seeded-sampled stream over the wire matches the engine's."""
+    cfg, model, params = qwen_smoke
+    req = Request(rid=0, prompt=_prompt(cfg, 33, 5), max_new_tokens=6,
+                  sampling=SamplingParams(temperature=0.8, top_k=8,
+                                          seed=11))
+    gold = _engine(model, params).run([(0, req)])[0].tokens
+
+    async def main():
+        fe = AsyncFrontend(_engine(model, params))
+        server = await HttpServer(fe).start()
+        toks, done = [], None
+        async for kind, data in stream_generate(
+                server.host, server.port,
+                {"prompt": req.prompt, "max_new_tokens": 6,
+                 "temperature": 0.8, "top_k": 8, "seed": 11}):
+            if kind == "token":
+                toks.append(data["token"])
+            else:
+                done = data
+        await server.stop()
+        await fe.close()
+        return fe, toks, done
+
+    fe, toks, done = asyncio.run(main())
+    assert toks == gold
+    assert done["tokens"] == gold
+    _pool_clean(fe.engine)
+
+
+def test_stream_false_single_json(qwen_smoke):
+    cfg, model, params = qwen_smoke
+    req = Request(rid=0, prompt=_prompt(cfg, 25, 4), max_new_tokens=5)
+    gold = _engine(model, params).run([(0, req)])[0].tokens
+
+    async def main():
+        fe = AsyncFrontend(_engine(model, params))
+        server = await HttpServer(fe).start()
+        events = [ev async for ev in stream_generate(
+            server.host, server.port,
+            {"prompt": req.prompt, "max_new_tokens": 5,
+             "stream": False})]
+        await server.stop()
+        await fe.close()
+        return fe, events
+
+    fe, events = asyncio.run(main())
+    (kind, data), = events
+    assert kind == "done"
+    assert data["tokens"] == gold
+    _pool_clean(fe.engine)
+
+
+def test_group_request_completions_payload(qwen_smoke):
+    """n > 1 over the wire: the done payload carries every completion,
+    tokens == the primary completion's."""
+    cfg, model, params = qwen_smoke
+
+    async def main():
+        fe = AsyncFrontend(_engine(model, params, max_batch=6))
+        server = await HttpServer(fe).start()
+        done = None
+        async for kind, data in stream_generate(
+                server.host, server.port,
+                {"prompt": _prompt(cfg, 31, 5), "max_new_tokens": 5,
+                 "temperature": 0.8, "top_k": 8, "seed": 7, "n": 3}):
+            if kind == "done":
+                done = data
+        await server.stop()
+        await fe.close()
+        return fe, done
+
+    fe, done = asyncio.run(main())
+    assert len(done["completions"]) == 3
+    assert done["tokens"] == done["completions"][0]["tokens"]
+    _pool_clean(fe.engine)
+
+
+# ------------------------------------------------- endpoints / plumbing
+def test_healthz_stats_and_404(qwen_smoke):
+    cfg, model, params = qwen_smoke
+
+    async def main():
+        fe = AsyncFrontend(_engine(model, params))
+        server = await HttpServer(fe).start()
+        host, port = server.host, server.port
+        status, health = await http_json(host, port, "GET", "/healthz")
+        assert status == 200 and health["status"] == "ok"
+        status, _ = await http_json(host, port, "GET", "/nope")
+        assert status == 404
+        async for _ in stream_generate(host, port,
+                                       {"prompt": _prompt(cfg, 26, 3),
+                                        "max_new_tokens": 2}):
+            pass
+        status, st = await http_json(host, port, "GET", "/stats")
+        assert status == 200
+        assert st["engine"]["steps"] > 0
+        assert st["http"]["streams"] == 1
+        assert set(st["queues"]) == set(st["caps"])
+        assert st["pool"]["free_pages"] == st["pool"]["num_pages"]
+        await server.stop()
+        await fe.close()
+        return fe
+
+    fe = asyncio.run(main())
+    _pool_clean(fe.engine)
+
+
+# ----------------------------------------------------- admission control
+def test_429_without_killing_in_flight(qwen_smoke):
+    """A class at its queue cap answers 429; the running stream and the
+    already-waiting one complete untouched."""
+    cfg, model, params = qwen_smoke
+
+    async def main():
+        fe = AsyncFrontend(_engine(model, params, max_batch=1))
+        server = await HttpServer(fe,
+                                  queue_caps={"standard": 1}).start()
+
+        async def run_client(tag, ntok):
+            toks, done = [], None
+            async for kind, data in stream_generate(
+                    server.host, server.port,
+                    {"prompt": _prompt(cfg, 100 + tag, 4),
+                     "max_new_tokens": ntok, "id": tag}):
+                if kind == "token":
+                    toks.append(data["token"])
+                elif kind == "done":
+                    done = data
+            return toks, done
+
+        a = asyncio.ensure_future(run_client(0, 24))
+        while not fe.engine.sched.running:      # A holds the one slot
+            await asyncio.sleep(0.005)
+        b = asyncio.ensure_future(run_client(1, 4))
+        while fe.queue_depth("standard") < 1:   # B parked in waiting
+            await asyncio.sleep(0.005)
+        events = [ev async for ev in stream_generate(
+            server.host, server.port,
+            {"prompt": _prompt(cfg, 102, 4), "max_new_tokens": 4})]
+        (kind, data), = events
+        assert kind == "error" and data["status"] == 429
+        assert data["body"]["class"] == "standard"
+        toks_a, done_a = await a
+        toks_b, done_b = await b
+        assert done_a is not None and done_a["tokens"] == toks_a
+        assert done_b is not None and done_b["tokens"] == toks_b
+        assert toks_a and toks_b
+        assert server.http_stats["rejected_429"] == 1
+        await server.stop()
+        await fe.close()
+        return fe
+
+    fe = asyncio.run(main())
+    _pool_clean(fe.engine)
+
+
+def test_503_when_engine_down(qwen_smoke):
+    cfg, model, params = qwen_smoke
+
+    async def main():
+        fe = AsyncFrontend(_engine(model, params))
+        server = await HttpServer(fe).start()
+        await fe.close()
+        status, health = await http_json(server.host, server.port,
+                                         "GET", "/healthz")
+        events = [ev async for ev in stream_generate(
+            server.host, server.port,
+            {"prompt": [1, 2], "max_new_tokens": 2})]
+        await server.stop()
+        return server, status, health, events
+
+    server, status, health, events = asyncio.run(main())
+    assert status == 503 and health["status"] == "closed"
+    (kind, data), = events
+    assert kind == "error" and data["status"] == 503
+    assert server.http_stats["unavailable_503"] == 1
+
+
+def test_400_over_the_wire(qwen_smoke):
+    """Misuse maps to 400 whether caught at the door (unknown field,
+    over-ceiling prompt) or by the engine (contradictory knobs raising
+    InvalidRequestError before the first token)."""
+    cfg, model, params = qwen_smoke
+
+    async def main():
+        fe = AsyncFrontend(_engine(model, params))
+        server = await HttpServer(fe).start()
+        statuses = []
+        for payload in ({"prompt": [1], "bogus": 1},
+                        {"prompt": _prompt(cfg, 27, 4),
+                         "max_new_tokens": 4096},
+                        {"prompt": _prompt(cfg, 28, 4),
+                         "max_new_tokens": 4, "n": 4, "best_of": 2}):
+            events = [ev async for ev in stream_generate(
+                server.host, server.port, payload)]
+            (kind, data), = events
+            statuses.append((kind, data["status"]))
+        assert server.http_stats["bad_request_400"] == 3
+        await server.stop()
+        await fe.close()
+        return fe, statuses
+
+    fe, statuses = asyncio.run(main())
+    assert statuses == [("error", 400)] * 3
+    _pool_clean(fe.engine)
+
+
+# ------------------------------------------------------ tenant fairness
+def test_tenant_fairness_within_class(qwen_smoke):
+    """Three waiting requests from tenant alice and one from tenant bob
+    (same class, one slot): bob's goes next after the running one, not
+    last - round-robin across tenants, FCFS within one."""
+    cfg, model, params = qwen_smoke
+
+    async def main():
+        fe = AsyncFrontend(_engine(model, params, max_batch=1))
+        server = await HttpServer(fe).start()
+        order = []
+
+        async def run_client(tag, tenant, ntok):
+            done = None
+            async for kind, data in stream_generate(
+                    server.host, server.port,
+                    {"prompt": _prompt(cfg, 120 + ntok, 4),
+                     "max_new_tokens": ntok, "id": tag},
+                    tenant=tenant):
+                if kind == "done":
+                    done = data
+            assert done is not None and done["id"] == tag
+            order.append(tag)
+
+        tasks = [asyncio.ensure_future(run_client("A1", "alice", 24))]
+        while not fe.engine.sched.running:      # A1 admitted first
+            await asyncio.sleep(0.005)
+        for depth, tag in enumerate(("A2", "A3"), start=1):
+            tasks.append(asyncio.ensure_future(
+                run_client(tag, "alice", 6)))
+            while fe.queue_depth("standard") < depth:
+                await asyncio.sleep(0.005)
+        tasks.append(asyncio.ensure_future(run_client("B1", "bob", 6)))
+        while fe.queue_depth("standard") < 3:
+            await asyncio.sleep(0.005)
+        await asyncio.gather(*tasks)
+        await server.stop()
+        await fe.close()
+        return fe, order
+
+    fe, order = asyncio.run(main())
+    assert order == ["A1", "B1", "A2", "A3"]
+    _pool_clean(fe.engine)
+
+
+# ------------------------------------------------ disconnect / slow read
+def test_disconnect_cancels_and_frees(qwen_smoke):
+    """Abruptly closing the socket mid-stream cancels the request;
+    slot and pages come back refcount-clean."""
+    cfg, model, params = qwen_smoke
+
+    async def main():
+        fe = AsyncFrontend(_engine(model, params))
+        server = await HttpServer(fe).start()
+        gen = stream_generate(server.host, server.port,
+                              {"prompt": _prompt(cfg, 130, 5),
+                               "max_new_tokens": 48})
+        got = 0
+        async for kind, _data in gen:
+            if kind == "token":
+                got += 1
+                if got >= 2:
+                    break
+        await gen.aclose()                # socket closed mid-stream
+        for _ in range(1000):
+            if fe.engine.stats["cancelled"] >= 1:
+                break
+            await asyncio.sleep(0.005)
+        await fe.drain()
+        assert server.http_stats["disconnects"] >= 1
+        await server.stop()
+        await fe.close()
+        return fe
+
+    fe = asyncio.run(main())
+    assert fe.engine.stats["cancelled"] == 1
+    fr = fe.result(0)
+    assert fr is not None and fr.reason == "cancelled"
+    _pool_clean(fe.engine)
+
+
+def test_slow_reader_backpressure_cancels(qwen_smoke):
+    """A client that sends its request and then never reads: SSE
+    padding + a tiny server send buffer make TCP fill at test scale,
+    the pump's drain() blocks, the frontend's bounded stream queue
+    overflows, and the request is cancelled instead of buffering
+    forever."""
+    cfg, model, params = qwen_smoke
+
+    async def main():
+        eng = _engine(model, params, max_seq=128)
+        fe = AsyncFrontend(eng, stream_buffer=4)
+        server = await HttpServer(fe, event_pad=2048, sndbuf=4608,
+                                  drain_timeout=1.0).start()
+        sock = socket.socket()
+        # A small receive window on the client side makes the server's
+        # writes back up after a handful of padded events.
+        sock.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, 4096)
+        sock.setblocking(False)
+        await asyncio.get_running_loop().sock_connect(
+            sock, (server.host, server.port))
+        reader, writer = await asyncio.open_connection(sock=sock)
+        body = json.dumps({"prompt": _prompt(cfg, 140, 4),
+                           "max_new_tokens": 96}).encode()
+        writer.write((f"POST /v1/generate HTTP/1.1\r\nhost: t\r\n"
+                      f"content-length: {len(body)}\r\n\r\n").encode()
+                     + body)
+        await writer.drain()
+        # ... and never read a byte of the response.
+        for _ in range(2000):
+            if eng.stats["stream_overflows"] >= 1:
+                break
+            await asyncio.sleep(0.005)
+        assert eng.stats["stream_overflows"] >= 1
+        writer.close()
+        with contextlib.suppress(Exception):
+            await writer.wait_closed()
+        await fe.drain()
+        await server.stop()
+        await fe.close()
+        return fe
+
+    fe = asyncio.run(main())
+    assert fe.engine.stats["cancelled"] >= 1
+    fr = fe.result(0)
+    assert fr is not None and fr.reason == "cancelled"
+    assert len(fr.tokens) < 96
+    _pool_clean(fe.engine)

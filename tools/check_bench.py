@@ -49,6 +49,7 @@ RUNS = [
     ("parallel_sample", ["--workload", "parallel-sample", "--n", "4"]),
     ("kv_int8", ["--kv-codec", "int8"]),
     ("open_loop", ["--workload", "open-loop"]),
+    ("http_open_loop", ["--workload", "open-loop", "--transport", "http"]),
 ]
 
 # Wall-clock factor: a metric may be this many times worse than the
@@ -57,6 +58,12 @@ RUNS = [
 # accidental recompile-per-step, a lost fast path).
 TIME_FACTOR = 5.0
 ABS_SLACK = 0.5          # seconds, absorbs scheduler jitter on tiny runs
+# Open-loop TTFT/TPOT percentiles are tens of ms at smoke scale, so a
+# single jit retrace (~1-2s; adaptive-prefill chunk shapes depend on
+# wall-clock timing, so the warm run cannot cover them all) landing in
+# one request dominates a percentile.  A recompile-per-step cliff still
+# trips this comfortably.
+OPEN_LOOP_SLACK = 3.0
 
 
 def rule_for(section: str, key: str):
@@ -67,11 +74,14 @@ def rule_for(section: str, key: str):
     if key == "smoke_ok":
         return ("true",)
     if key.startswith(("ttft_", "tpot_")):
-        return ("latency", TIME_FACTOR, ABS_SLACK)
+        slack = OPEN_LOOP_SLACK \
+            if section in ("open_loop", "http_open_loop") else ABS_SLACK
+        return ("latency", TIME_FACTOR, slack)
     if key.endswith("_tok_s"):
         return ("throughput", TIME_FACTOR)
-    if section == "open_loop" and key in ("steps", "adaptive_budget_last",
-                                          "preemptions", "cancelled"):
+    if section in ("open_loop", "http_open_loop") \
+            and key in ("steps", "adaptive_budget_last",
+                        "preemptions", "cancelled"):
         # Step/cancel interleaving depends on wall-clock arrival timing.
         return ("latency", TIME_FACTOR, ABS_SLACK) if key == "steps" \
             else ("any",)

@@ -51,6 +51,10 @@ SMOKES = [
     ("serve-async",
      "Async streaming smoke (Poisson open loop + mid-stream cancels)",
      ASYNC + ["--smoke", "--cancel-every", "3"]),
+    ("serve-http",
+     "HTTP/SSE transport smoke (real-socket streams + disconnect cancel)",
+     ["-m", "repro.launch.serve_http", "--arch", "qwen3-1.7b",
+      "--reduced", "--smoke"]),
     ("bench-shared-prefix",
      "Shared-prefix + chunked-prefill benchmark smoke",
      BENCH + ["--smoke"]),
