@@ -57,10 +57,23 @@ jax must see N devices before it initializes, so this module imports
 jax only after argument parsing and sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` itself.
 
+``--dp N`` composes a data axis onto the mesh (``make_tp_dp_mesh``):
+the decode batch is sharded over N data shards on top of any KV-head
+sharding, and the scoreboard asserts the composed mesh stays
+token-identical to the tp-only (or single-shard) run.
+
+``--disagg`` switches to the disaggregated-serving scoreboard: the
+same paged workload runs on a single engine and through a
+:class:`repro.serving.disagg.DisaggPair` (prefill worker + decode
+worker, prompt KV pages shipped across pools), asserting the two
+streams are token-identical and reporting handoff page/dedup/fallback
+counts.
+
   PYTHONPATH=src python benchmarks/serving.py [--arch qwen3-1.7b] [--n 16]
   PYTHONPATH=src python benchmarks/serving.py --workload shared-prefix
   PYTHONPATH=src python benchmarks/serving.py --smoke       # CI gate
   PYTHONPATH=src python benchmarks/serving.py --tp 2 --smoke   # TP gate
+  PYTHONPATH=src python benchmarks/serving.py --disagg --smoke # PD gate
 """
 from __future__ import annotations
 
@@ -356,6 +369,17 @@ def main():
                          "asserting token-identical output (simulated "
                          "CPU mesh via XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel degree composed with --tp: the "
+                         "decode batch shards over a 'data' mesh axis "
+                         "(must divide --batch; simulated CPU devices "
+                         "as with --tp)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated-serving scoreboard: run the "
+                         "workload on a single engine AND through a "
+                         "prefill-worker/decode-worker pair with KV "
+                         "page handoff, asserting token-identical "
+                         "streams and reporting handoff counts")
     ap.add_argument("--smoke", action="store_true",
                     help="CI gate: reduced shared-prefix run asserting "
                          "zero decode stalls + prefix-cache reuse (and, "
@@ -365,7 +389,13 @@ def main():
     args = ap.parse_args()
     if args.tp < 1:
         ap.error("--tp must be >= 1")
-    ensure_host_devices(args.tp)
+    if args.dp < 1:
+        ap.error("--dp must be >= 1")
+    if args.dp > 1 and args.batch % args.dp:
+        ap.error(f"--dp {args.dp} must divide --batch {args.batch}")
+    if args.disagg and (args.tp > 1 or args.dp > 1):
+        ap.error("--disagg is a single-mesh scoreboard; drop --tp/--dp")
+    ensure_host_devices(args.tp * args.dp)
     if isinstance(args.class_mix, str):      # argparse skips the default
         args.class_mix = parse_class_mix(args.class_mix)
     if args.workload == "open-loop" and args.smoke:
@@ -437,7 +467,10 @@ def main():
         sampling = {"temperature": args.temperature, "top_k": args.top_k,
                     "top_p": args.top_p, "seed": args.seed}
 
-    if args.tp > 1:
+    if args.disagg:
+        return _run_disagg(model, params, prompts, budgets, sampling,
+                           args)
+    if args.tp > 1 or args.dp > 1:
         return _run_tp(model, params, prompts, budgets, sampling, args)
 
     # Warm both paths with the identical workload so every jit shape
@@ -845,13 +878,15 @@ def _run_open_loop(model, params, args):
 
 
 def _run_tp(model, params, prompts, budgets, sampling, args):
-    """Tensor-parallel scoreboard: single-shard vs tp-sharded paged
-    serving on the identical workload.  The TP run must be *token-
-    identical* (the ACC merge with the neutral triplet is an fp identity
-    per head), with per-shard pool bytes cut by tp and only the tiny
-    (m, l, o~) triplets crossing the shard axis."""
-    from repro.launch.mesh import make_tp_mesh
-    mesh = make_tp_mesh(args.tp)
+    """Tensor/data-parallel scoreboard: single-shard vs mesh-sharded
+    paged serving on the identical workload.  The sharded run must be
+    *token-identical* (the ACC merge with the neutral triplet is an fp
+    identity per head; data shards apply the full batch's KV scatter),
+    with per-shard pool bytes cut by tp (the pool replicates over the
+    data axis) and only the tiny (m, l, o~) triplets crossing the
+    model axis."""
+    from repro.launch.mesh import make_tp_dp_mesh
+    mesh = make_tp_dp_mesh(args.tp, args.dp)
     common = (model, params, prompts, budgets, args.batch, args.max_seq,
               args.page_size, args.prefill_budget, args.spec_k, sampling)
     codec = dict(kv_codec=args.kv_codec)
@@ -869,7 +904,8 @@ def _run_tp(model, params, prompts, budgets, sampling, args):
     print(f"single shard:  {s_tok} tok in {s_dt:.2f}s -> "
           f"{s_tok / s_dt:.1f} tok/s "
           f"(pool {s_eng.pool_bytes_per_shard()} B/shard)")
-    print(f"tp={args.tp} sharded: {p_tok} tok in {p_dt:.2f}s -> "
+    print(f"tp={args.tp} dp={args.dp} sharded: "
+          f"{p_tok} tok in {p_dt:.2f}s -> "
           f"{p_tok / p_dt:.1f} tok/s "
           f"(pool {p_eng.pool_bytes_per_shard()} B/shard, "
           f"{stats['steps']} steps)")
@@ -885,7 +921,7 @@ def _run_tp(model, params, prompts, budgets, sampling, args):
               f"({s_eng.pool_bytes_per_shard()} -> "
               f"{p_eng.pool_bytes_per_shard()})")
         ok = False
-    if stats["triplet_bytes"] == 0:
+    if args.tp > 1 and stats["triplet_bytes"] == 0:
         print("TP FAIL: no triplet traffic accounted")
         ok = False
     if not identical:
@@ -895,6 +931,119 @@ def _run_tp(model, params, prompts, budgets, sampling, args):
             print("SMOKE FAIL: decode stalled during chunked prefill")
             ok = False
         print("smoke:", "OK" if ok else "FAIL")
+    return ok
+
+
+def _run_disagg(model, params, prompts, budgets, sampling, args):
+    """Disaggregated-serving scoreboard: the identical paged workload
+    on a single engine vs a :class:`repro.serving.disagg.DisaggPair`
+    (prompts prefilled on worker A, generation on worker B, the prompt
+    KV pages device-copied across pools through the chain-hash
+    manifest).  The two token streams must be identical per request;
+    both pools must come back invariant-clean and leak-free.
+
+    ``--smoke`` is the CI gate: full token parity, every request
+    handed off (no silent fallback on this workload), at least one
+    page shipped, zero refcount violations (``check_invariants``
+    raises on any), both pools fully available afterwards."""
+    from repro.serving import (DisaggPair, Request, SamplingParams,
+                               ServingEngine)
+
+    def samp(i):
+        if sampling is None:
+            return None
+        return SamplingParams(temperature=sampling["temperature"],
+                              top_k=sampling["top_k"],
+                              top_p=sampling["top_p"],
+                              seed=sampling["seed"] + i)
+
+    def arrivals():
+        return [(i, Request(rid=i, prompt=list(prompts[i]),
+                            max_new_tokens=int(budgets[i]),
+                            sampling=samp(i)))
+                for i in range(len(prompts))]
+
+    def engine():
+        return ServingEngine(model, params, max_batch=args.batch,
+                             page_size=args.page_size,
+                             max_seq=args.max_seq,
+                             prefill_budget=args.prefill_budget,
+                             spec_k=args.spec_k, kv_codec=args.kv_codec)
+
+    # warm the jit shapes on both paths (shared compile cache)
+    engine().run(arrivals())
+    DisaggPair(engine(), engine()).run(arrivals())
+
+    single = engine()
+    t0 = time.perf_counter()
+    s_fin = single.run(arrivals())
+    s_dt = time.perf_counter() - t0
+    single.cache.check_invariants()
+
+    pair = DisaggPair(engine(), engine())
+    t0 = time.perf_counter()
+    d_fin = pair.run(arrivals())
+    d_dt = time.perf_counter() - t0
+    pair.check_invariants()
+
+    s_out = {f.rid: f.tokens for f in s_fin}
+    d_out = {f.rid: f.tokens for f in d_fin}
+    identical = s_out == d_out
+    mism = sum(1 for r in s_out if d_out.get(r) != s_out[r])
+    hs = pair.stats
+    d_tok = pair.decode.stats["generated_tokens"]
+    leaks = sum(1 for c in (pair.prefill.cache, pair.decode.cache)
+                if c.available_page_count != c.num_pages)
+    print(f"single engine: {single.stats['generated_tokens']} tok in "
+          f"{s_dt:.2f}s -> "
+          f"{single.stats['generated_tokens'] / s_dt:.1f} tok/s")
+    print(f"disaggregated: {d_tok} tok in {d_dt:.2f}s -> "
+          f"{d_tok / d_dt:.1f} tok/s "
+          f"(prefill worker {pair.prefill.stats['steps']} steps, "
+          f"decode worker {pair.decode.stats['steps']} steps)")
+    print(f"token parity:  {'IDENTICAL' if identical else 'MISMATCH'} "
+          f"({len(s_out) - mism}/{len(s_out)} requests match)")
+    print(f"handoffs:      {hs['handoffs']} committed, "
+          f"{hs['handoff_pages']} pages shipped, "
+          f"{hs['handoff_dupes']} dupes shared in place, "
+          f"{hs['handoff_fallbacks']} fallbacks, "
+          f"{hs['handoff_aborts']} aborts")
+    print(f"decode-worker prefill: "
+          f"{pair.decode.stats['prefill_tokens']} tokens computed "
+          f"({pair.decode.stats['cached_prefill_tokens']} claimed from "
+          f"imported pages)")
+
+    ok = identical and leaks == 0
+    if not identical:
+        print("DISAGG FAIL: streams diverged from the single engine")
+    if leaks:
+        print("DISAGG FAIL: a worker pool leaked pages")
+    if args.smoke:
+        if hs["handoffs"] != len(prompts):
+            print(f"SMOKE FAIL: {hs['handoffs']}/{len(prompts)} "
+                  f"requests handed off")
+            ok = False
+        if hs["handoff_pages"] == 0:
+            print("SMOKE FAIL: no page ever shipped")
+            ok = False
+        if pair.decode.stats["cached_prefill_tokens"] == 0:
+            print("SMOKE FAIL: decode worker never claimed an "
+                  "imported page")
+            ok = False
+        print("smoke:", "OK" if ok else "FAIL")
+    _write_json(args.json, {
+        "workload": "disagg",
+        "handoffs": hs["handoffs"],
+        "handoff_pages": hs["handoff_pages"],
+        "handoff_dupes": hs["handoff_dupes"],
+        "handoff_fallbacks": hs["handoff_fallbacks"],
+        "token_parity": bool(identical),
+        "cached_prefill_tokens": pair.decode.stats[
+            "cached_prefill_tokens"],
+        "paged_tok_s": d_tok / d_dt,
+        "steps": pair.decode.stats["steps"],
+        "smoke_ok": bool(ok),
+    })
     return ok
 
 

@@ -41,3 +41,29 @@ def make_tp_mesh(tp: int):
             f"tp={tp} needs {tp} devices, found {len(devs)}; on CPU set "
             f"XLA_FLAGS=--xla_force_host_platform_device_count={tp}")
     return Mesh(np.asarray(devs[:tp]).reshape(1, tp), ("data", "model"))
+
+
+def make_tp_dp_mesh(tp: int, dp: int):
+    """Composed serving mesh: ("data"=dp, "model"=tp) over the first
+    ``dp * tp`` devices.  The "model" axis KV-head-shards the paged
+    pools (tensor parallelism, PR 4); the "data" axis batch-shards the
+    *slot* dimension of every paged attention call, so a step's compute
+    splits across data shards while the pools (replicated over "data")
+    and the host page tables stay bit-identical on every shard.  On
+    CPU, simulate ``dp * tp`` devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before jax
+    initializes (the entry points do this when ``--tp``/``--dp`` are
+    passed)."""
+    import numpy as np
+    from jax.sharding import Mesh
+    if tp < 1 or dp < 1:
+        raise ValueError(f"tp and dp must be >= 1, got tp={tp} dp={dp}")
+    devs = jax.devices()
+    need = dp * tp
+    if len(devs) < need:
+        raise RuntimeError(
+            f"tp={tp} x dp={dp} needs {need} devices, found {len(devs)}; "
+            f"on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need}")
+    return Mesh(np.asarray(devs[:need]).reshape(dp, tp),
+                ("data", "model"))

@@ -52,6 +52,71 @@ def parse_queue_caps(s: str):
     return caps
 
 
+async def _smoke_router(server) -> list[str]:
+    """--replicas N --smoke extension: spread two concurrent streams
+    across replicas (least-loaded fallback), then repeat the first
+    prompt and require a prefix-hit route plus token-identical output -
+    the multi-replica parity + placement gate.  Every replica's pool
+    must come back invariant-clean."""
+    from repro.serving.http import stream_generate
+    fails = []
+    host, port = server.host, server.port
+    router = server.frontend
+
+    async def collect(payload):
+        toks, done = [], None
+        async for kind, data in stream_generate(host, port, payload):
+            if kind == "token":
+                toks.append(data["token"])
+            elif kind == "done":
+                done = data
+            else:
+                fails.append(f"router stream error: {data}")
+        return toks, done
+
+    pa = {"prompt": list(range(1, 33)), "max_new_tokens": 12}
+    pb = {"prompt": list(range(40, 56)), "max_new_tokens": 8}
+    # Hold stream A open past its first token so B's placement sees a
+    # loaded replica 0 and falls back to replica 1.
+    gen_a = stream_generate(host, port, pa)
+    toks_a = []
+    async for kind, data in gen_a:
+        if kind == "token":
+            toks_a.append(data["token"])
+            break
+    _toks_b, done_b = await collect(pb)
+    async for kind, data in gen_a:
+        if kind == "token":
+            toks_a.append(data["token"])
+        elif kind == "done":
+            if data["tokens"] != toks_a:
+                fails.append(f"stream A tokens {toks_a} != {data['tokens']}")
+    await gen_a.aclose()
+    if done_b is None or done_b["reason"] not in ("eos", "length"):
+        fails.append(f"stream B: done={done_b}")
+    # Repeat prompt A: must prefix-route to A's replica and reproduce
+    # A's token stream exactly (per-request determinism + shared KV).
+    toks_a2, done_a2 = await collect(pa)
+    if done_a2 is None or toks_a2 != toks_a:
+        fails.append(f"repeat of A not token-identical: "
+                     f"{toks_a2} != {toks_a}")
+    await router.drain()
+    if router.stats["prefix_routed"] < 1:
+        fails.append(f"no prefix-hit route: {router.stats}")
+    stepped = [fe.engine.stats["steps"] > 0 for fe in router.frontends]
+    if not all(stepped):
+        fails.append(f"replica(s) never stepped: {stepped}")
+    if router.core.placement or any(router.core.load):
+        fails.append(f"router leaked placements: {router.core.placement} "
+                     f"load={router.core.load}")
+    for i, fe in enumerate(router.frontends):
+        fe.engine.cache.check_invariants()
+        if fe.engine.cache.available_page_count != \
+                fe.engine.cache.num_pages:
+            fails.append(f"replica {i} leaked pages")
+    return fails
+
+
 async def _smoke_client(server, cfg) -> list[str]:
     """The --smoke self-test: drive the server over real sockets the
     way the conformance tests do; returns a list of failures."""
@@ -116,6 +181,10 @@ async def _smoke_client(server, cfg) -> list[str]:
         fails.append(f"stats: {status} {stats}")
     if stats.get("http", {}).get("disconnects", 0) < 1:
         fails.append(f"stats missed the disconnect: {stats.get('http')}")
+
+    from repro.serving.router import Router
+    if isinstance(server.frontend, Router):
+        fails.extend(await _smoke_router(server))
     return fails
 
 
@@ -134,6 +203,14 @@ def main():
     ap.add_argument("--kv-codec", choices=("fp", "int8", "log16"),
                     default="fp", help="paged KV page codec")
     ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel degree: batch-shard every paged "
+                         "attention call over a 'data' mesh axis "
+                         "(simulated on CPU via "
+                         "xla_force_host_platform_device_count)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve N independent engine replicas behind a "
+                         "prefix-cache-aware router")
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8100,
                     help="listen port (0 = kernel-assigned)")
@@ -157,7 +234,9 @@ def main():
     args = ap.parse_args()
     if isinstance(args.queue_cap, str):
         args.queue_cap = parse_queue_caps(args.queue_cap)
-    ensure_host_devices(args.tp)
+    if args.replicas < 1:
+        raise SystemExit(f"--replicas must be >= 1, got {args.replicas}")
+    ensure_host_devices(args.tp * args.dp)
 
     import jax
 
@@ -165,6 +244,7 @@ def main():
     from repro.models.model import build_model
     from repro.serving import AsyncFrontend, ServingEngine
     from repro.serving.http import HttpServer
+    from repro.serving.router import Router
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -175,19 +255,25 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     mesh = None
-    if args.tp > 1:
-        from repro.launch.mesh import make_tp_mesh
-        mesh = make_tp_mesh(args.tp)
-    engine = ServingEngine(model, params, max_batch=args.batch,
-                           page_size=args.page_size, max_seq=args.max_seq,
-                           prefill_budget=args.prefill_budget,
-                           spec_k=args.spec_k, mesh=mesh,
-                           kv_codec=args.kv_codec)
+    if args.tp > 1 or args.dp > 1:
+        from repro.launch.mesh import make_tp_dp_mesh
+        mesh = make_tp_dp_mesh(args.tp, args.dp)
+    engines = [ServingEngine(model, params, max_batch=args.batch,
+                             page_size=args.page_size,
+                             max_seq=args.max_seq,
+                             prefill_budget=args.prefill_budget,
+                             spec_k=args.spec_k, mesh=mesh,
+                             kv_codec=args.kv_codec)
+               for _ in range(args.replicas)]
+    engine = engines[0]
 
     async def run() -> int:
-        frontend = AsyncFrontend(engine,
-                                 stream_buffer=args.stream_buffer,
-                                 max_results=args.max_results)
+        frontends = [AsyncFrontend(e,
+                                   stream_buffer=args.stream_buffer,
+                                   max_results=args.max_results)
+                     for e in engines]
+        frontend = frontends[0] if args.replicas == 1 \
+            else Router(frontends)
         server = HttpServer(frontend, host=args.host,
                             port=0 if args.smoke else args.port,
                             queue_caps=args.queue_cap,
@@ -195,7 +281,8 @@ def main():
         await server.start()
         print(f"serving {cfg.name} on http://{server.host}:{server.port} "
               f"(batch {args.batch}, page {args.page_size}, codec "
-              f"{engine.kv_codec}, caps {server.queue_caps})")
+              f"{engine.kv_codec}, replicas {args.replicas}, "
+              f"tp {args.tp} dp {args.dp}, caps {server.queue_caps})")
         try:
             if args.smoke:
                 fails = await _smoke_client(server, cfg)
@@ -212,7 +299,9 @@ def main():
             return 0
         finally:
             await server.stop()
-            await frontend.close()
+            for fe in frontends:
+                if not fe.closed:
+                    await fe.close()
 
     try:
         raise SystemExit(asyncio.run(run()))

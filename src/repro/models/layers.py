@@ -257,7 +257,8 @@ def _paged_attention(p, q, k, v, cfg, cache, page_state, *, impl, causal,
     # kernels/fallbacks run byte-for-byte unchanged (fp stays bit-exact
     # to the pre-codec pool); encode_write is already the identity.
     rcodec = None if codec.name == "fp" else codec
-    if mesh is not None and mesh.shape.get("model", 1) > 1:
+    if mesh is not None and (mesh.shape.get("model", 1) > 1
+                             or mesh.shape.get("data", 1) > 1):
         from repro.parallel import collectives
         if page_state.get("verify", False):
             mode, la, lb = ("verify", page_state["seq_lens"],

@@ -141,6 +141,7 @@ def shardmap_paged_attention(
     mode: str,           # "decode" | "verify" | "prefill"
     impl: str = "fa2",
     axis: str = "model",
+    data_axis: str = "data",
     scale: float | None = None,
     codec=None,          # page codec (name or PageCodec); None/"fp" = raw
 ):
@@ -180,8 +181,22 @@ def shardmap_paged_attention(
     the shard-local partials, so the sharded rail quantizes exactly like
     the single-shard one.
 
+    Data parallelism (a ``data_axis`` of size dp > 1 on the mesh): the
+    *slot* (batch) dim of q is additionally sharded over the data axis
+    whenever ``B % dp == 0``, so a step's attention compute splits dp
+    ways with ZERO new collectives.  The trick that keeps it bit-exact:
+    every data shard applies the FULL batch's K/V scatter (k_new /
+    page_table / lens stay replicated over "data"), so the pool
+    replicas on each data shard evolve bit-identically - only the
+    partials + merge run on the local batch slice (selected with
+    ``axis_index(data_axis)``), and the outputs are reassembled on the
+    batch dim.  A batch that dp does not divide (an odd chunked-prefill
+    group) falls back to fully replicated compute for that call, which
+    is the same arithmetic on every shard - still bit-exact, just not
+    parallel.
+
     Returns (out (B, L, H, dh), new_pools) with the pools (and any scale
-    sidecars) still KV-head-sharded.
+    sidecars) still KV-head-sharded (and replicated over the data axis).
     """
     from repro.kernels import ops as kops
     from repro.kernels import page_codec
@@ -199,18 +214,35 @@ def shardmap_paged_attention(
     use_hfa = impl.startswith("hfa")
     cod = page_codec.get_codec(codec)
     rcodec = None if cod.name == "fp" else cod
+    dp = tp_shards(mesh, data_axis)
+    # Batch-shard q over the data axis when it divides evenly; otherwise
+    # every data shard runs the full batch (identical arithmetic - the
+    # bit-exact fallback for odd prefill group sizes).
+    shard_b = dp > 1 and b % dp == 0
 
     def local(q, k_new, v_new, pools, pt, la, lb):
-        # q arrives head-sharded: (B, L, H/n, dh) - heads are kv-major,
-        # so the slice is exactly this shard's hkv_l KV-head groups.
+        # q arrives head-sharded (and, with shard_b, batch-sharded):
+        # (B/dp, L, H/n, dh) - heads are kv-major, so the head slice is
+        # exactly this shard's hkv_l KV-head groups.
         idx = jax.lax.axis_index(axis)
+        bl = q.shape[0]
+        if shard_b:
+            # Every data shard scatters the FULL batch (pool replicas
+            # stay bit-identical - no collective needed to reconcile
+            # them), but attends only its own batch slice.
+            didx = jax.lax.axis_index(data_axis)
+            pt_l = jax.lax.dynamic_slice_in_dim(pt, didx * bl, bl, 0)
+            la_l = jax.lax.dynamic_slice_in_dim(la, didx * bl, bl, 0)
+            lb_l = jax.lax.dynamic_slice_in_dim(lb, didx * bl, bl, 0)
+        else:
+            pt_l, la_l, lb_l = pt, la, lb
         if mode == "decode":
             pools = page_codec.encode_write(
                 paged_k.append_kv, cod, pools, k_new, v_new, pt, la)
-            kv_lens = jnp.where(la > 0, la + 1, 0)
-            qg = q.reshape(b, hkv_l, g, dh)
+            kv_lens = jnp.where(la_l > 0, la_l + 1, 0)
+            qg = q.reshape(bl, hkv_l, g, dh)
             o, m, l = kops.paged_decode_partials(
-                qg, pools["k_pages"], pools["v_pages"], pt, kv_lens,
+                qg, pools["k_pages"], pools["v_pages"], pt_l, kv_lens,
                 impl=impl, scale=scale, codec=rcodec,
                 k_scales=pools.get("k_scale"),
                 v_scales=pools.get("v_scale"))
@@ -218,9 +250,9 @@ def shardmap_paged_attention(
             pools = page_codec.encode_write(
                 paged_pf_k.write_chunk_kv, cod, pools, k_new, v_new, pt,
                 la, lb)
-            qg = jnp.swapaxes(q, 1, 2).reshape(b, hkv_l, g, l_q, dh)
+            qg = jnp.swapaxes(q, 1, 2).reshape(bl, hkv_l, g, l_q, dh)
             o, m, l = kops.paged_verify_partials(
-                qg, pools["k_pages"], pools["v_pages"], pt, la, lb,
+                qg, pools["k_pages"], pools["v_pages"], pt_l, la_l, lb_l,
                 impl=impl, scale=scale, codec=rcodec,
                 k_scales=pools.get("k_scale"),
                 v_scales=pools.get("v_scale"))
@@ -228,44 +260,52 @@ def shardmap_paged_attention(
             pools = page_codec.encode_write(
                 paged_pf_k.write_chunk_kv, cod, pools, k_new, v_new, pt,
                 la, lb)
-            kv_lens = (la + lb).astype(jnp.int32)
-            qg = jnp.swapaxes(q, 1, 2).reshape(b, hkv_l, g, l_q, dh)
+            kv_lens = (la_l + lb_l).astype(jnp.int32)
+            qg = jnp.swapaxes(q, 1, 2).reshape(bl, hkv_l, g, l_q, dh)
             o, m, l = kops.paged_prefill_partials(
-                qg, pools["k_pages"], pools["v_pages"], pt, la, kv_lens,
+                qg, pools["k_pages"], pools["v_pages"], pt_l, la_l,
+                kv_lens,
                 impl=impl, scale=scale, codec=rcodec,
                 k_scales=pools.get("k_scale"),
                 v_scales=pools.get("v_scale"))
 
         # Pad the local triplet to full head width with the neutral
         # element, so the gathered merge reconstitutes every head.
-        o_f = jnp.zeros((b, hkv) + o.shape[2:], o.dtype)
-        m_f = jnp.full((b, hkv) + m.shape[2:], dk.NEG_INF, m.dtype)
-        l_f = jnp.zeros((b, hkv) + l.shape[2:], l.dtype)
+        o_f = jnp.zeros((bl, hkv) + o.shape[2:], o.dtype)
+        m_f = jnp.full((bl, hkv) + m.shape[2:], dk.NEG_INF, m.dtype)
+        l_f = jnp.zeros((bl, hkv) + l.shape[2:], l.dtype)
         off = idx * hkv_l
         o_f = jax.lax.dynamic_update_slice_in_dim(o_f, o, off, axis=1)
         m_f = jax.lax.dynamic_update_slice_in_dim(m_f, m, off, axis=1)
         l_f = jax.lax.dynamic_update_slice_in_dim(l_f, l, off, axis=1)
 
-        # ACC merge across shards (Eq. 16): gather only the triplets.
+        # ACC merge across shards (Eq. 16): gather only the triplets
+        # (over the model axis alone - data shards own disjoint batch
+        # rows, so nothing crosses the data axis here).
         og = jax.lax.all_gather(o_f, axis)
         mg = jax.lax.all_gather(m_f, axis)
         lg = jax.lax.all_gather(l_f, axis)
         om, mm, lm = dk.merge_partials(og, mg, lg, use_hfa=use_hfa)
         out = dk.finalize_decode(om, lm, use_hfa=use_hfa)
         if mode == "decode":
-            out = out.reshape(b, 1, h, dh)
+            out = out.reshape(bl, 1, h, dh)
         else:
             # (B, Hkv, G, L, dh) -> (B, L, H, dh)
-            out = jnp.swapaxes(out.reshape(b, h, l_q, dh), 1, 2)
+            out = jnp.swapaxes(out.reshape(bl, h, l_q, dh), 1, 2)
         return out.astype(q.dtype), pools
 
     # hspec is a pytree *prefix* for the pools dict: every pool leaf
     # (data or scale sidecar) is (P, page, Hkv, ·) with Hkv at axis 2.
+    # Nothing names the data axis except q/out's batch dim: the pools
+    # and the scatter operands stay replicated over "data" so every
+    # data shard's pool replica evolves identically.
     hspec = P(None, None, axis, None)
+    dspec = data_axis if shard_b else None
+    qspec = P(dspec, None, axis, None)
     fn = shard_map(
         local, mesh=mesh,
-        in_specs=(hspec, hspec, hspec, hspec, P(), P(), P()),
-        out_specs=(P(), hspec),
+        in_specs=(qspec, hspec, hspec, hspec, P(), P(), P()),
+        out_specs=(P(dspec), hspec),
         check_vma=False)
     return fn(q, k_new, v_new, dict(pools), page_table,
               lens_a.astype(jnp.int32), lens_b.astype(jnp.int32))

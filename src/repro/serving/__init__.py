@@ -7,11 +7,14 @@ spec.py          prompt-lookup draft proposer (self-speculation)
 engine.py        ServingEngine: jitted paged prefill/verify over the model
 frontend.py      AsyncFrontend: asyncio token streaming + cancellation
 http.py          HttpServer: dependency-free HTTP/1.1 + SSE transport
+disagg.py        DisaggPair: prefill/decode workers + KV page handoff
+router.py        Router: prefix-cache-aware multi-replica placement
 
 Device-side pieces live next to the kernels they pair with
 (:mod:`repro.kernels.paged_decode`, :mod:`repro.kernels.paged_verify`)
 and in the model facade (:meth:`repro.models.model.LM.paged_verify_step`).
 """
+from repro.serving.disagg import DisaggPair, Handoff
 from repro.serving.engine import ServingEngine
 from repro.serving.frontend import AsyncFrontend
 from repro.serving.http import (HttpError, HttpServer, http_json,
@@ -23,12 +26,14 @@ from repro.serving.scheduler import (BATCH, INTERACTIVE, LATENCY_CLASSES,
                                      FinishedRequest, InvalidRequestError,
                                      LatencyClass, PrefillChunk, Request,
                                      Scheduler, SequenceGroup)
+from repro.serving.router import Router, RouterCore
 from repro.serving.spec import propose_draft
 
 __all__ = ["AsyncFrontend", "BATCH", "Completion", "DecodeStep",
-           "HttpError", "HttpServer",
+           "DisaggPair", "Handoff", "HttpError", "HttpServer",
            "INTERACTIVE", "InvalidRequestError", "LATENCY_CLASSES",
            "LatencyClass", "PagedKVCache", "PrefillChunk", "Request",
-           "FinishedRequest", "STANDARD", "SamplingParams", "Scheduler",
+           "FinishedRequest", "Router", "RouterCore", "STANDARD",
+           "SamplingParams", "Scheduler",
            "SequenceGroup", "ServingEngine", "branch_seed", "http_json",
            "propose_draft", "stream_generate"]

@@ -241,12 +241,16 @@ def _serving_jits(model, mesh=None, codec="fp"):
 
 
 class ServingEngine:
+    # spec_k="auto" draft ceiling: bounds both the per-step draft count
+    # and the number of distinct (kw) trace shapes jit ever sees.
+    AUTO_SPEC_KMAX = 4
+
     def __init__(self, model, params, *, max_batch: int = 8,
                  page_size: int = 16, num_pages: int | None = None,
                  max_seq: int | None = None,
                  prefill_budget: int | str | None = None,
                  prefix_caching: bool = True,
-                 spec_k: int = 0,
+                 spec_k: int | str = 0,
                  cached_frac: float = 0.5,
                  adaptive_floor: int | None = None,
                  adaptive_ceiling: int | None = None,
@@ -271,6 +275,16 @@ class ServingEngine:
                 and prefill_budget < 1:
             raise ValueError(
                 f"prefill_budget must be >= 1, got {prefill_budget}")
+        # spec_k = "auto": speculate up to AUTO_SPEC_KMAX drafts and let
+        # the measured accept-rate EMA choose each step's draft count
+        # (exact acceptance is lossless at any k, so the token stream is
+        # identical to every fixed spec_k - only the step count moves).
+        self.auto_spec = spec_k == "auto"
+        if self.auto_spec:
+            spec_k = self.AUTO_SPEC_KMAX
+        elif isinstance(spec_k, str):
+            raise ValueError(
+                f"spec_k must be an int or 'auto', got {spec_k!r}")
         if spec_k < 0:
             raise ValueError(f"spec_k must be >= 0, got {spec_k}")
         if not 0.0 <= cached_frac <= 1.0:
@@ -278,20 +292,33 @@ class ServingEngine:
                 f"cached_frac must be in [0, 1], got {cached_frac}")
         # Tensor parallelism: a mesh with a "model" axis of size tp > 1
         # shards the KV pools by head; everything host-side (page
-        # tables, refcounts, scheduler) is oblivious to it.
+        # tables, refcounts, scheduler) is oblivious to it.  A "data"
+        # axis of size dp > 1 additionally batch-shards every paged
+        # attention call on the slot dim (pools and host state stay
+        # replicated across data shards - see
+        # repro.parallel.collectives).
         self.mesh = mesh
         self.tp = 1 if mesh is None else int(mesh.shape.get("model", 1))
-        if self.tp > 1:
+        self.dp = 1 if mesh is None else int(mesh.shape.get("data", 1))
+        if self.tp > 1 or self.dp > 1:
             if len(mesh.devices.flat) > len(jax.devices()):
                 raise ValueError(
                     f"mesh needs {len(mesh.devices.flat)} devices, have "
                     f"{len(jax.devices())}")
+        if self.tp > 1:
             if model.cfg.n_kv_heads % self.tp or \
                     model.cfg.n_heads % self.tp:
                 raise ValueError(
                     f"tp={self.tp} must divide n_kv_heads="
                     f"{model.cfg.n_kv_heads} and n_heads="
                     f"{model.cfg.n_heads}")
+        if self.dp > 1 and max_batch % self.dp:
+            # Decode/verify steps are always max_batch-shaped, so the
+            # slot dim must divide evenly for the data axis to shard it
+            # (odd prefill groups fall back to replicated compute).
+            raise ValueError(
+                f"data-parallel degree dp={self.dp} must divide "
+                f"max_batch={max_batch}")
         self.model = model
         self.params = params
         self.page_size = page_size
@@ -342,6 +369,10 @@ class ServingEngine:
                       "cow_copies": 0, "rejected": 0, "decode_steps": 0,
                       "decode_slot_steps": 0, "decode_tokens": 0,
                       "draft_tokens": 0, "draft_accepted": 0,
+                      # Draft-quality EMA (alpha 0.2 over verify steps
+                      # that proposed >= 1 draft) and the per-step draft
+                      # count it chose when spec_k="auto":
+                      "accept_rate_ema": 0.0, "spec_k_last": 0,
                       "rollbacks": 0, "triplet_bytes": 0,
                       "groups": 0, "forks": 0, "beam_steps": 0,
                       "beam_early_stops": 0,
@@ -768,10 +799,18 @@ class ServingEngine:
         ride along with a single carry column: their next tokens come
         from the per-group top-2k reorder after the call, never from
         the sampler."""
-        steps = self.sched.schedule_decode(self.spec_k)
+        k = self.spec_k
+        if self.auto_spec:
+            # Draft-count auto-tune: spend draft compute proportional to
+            # the measured accept rate (floor 1 keeps measuring after a
+            # cold start or a workload shift kills the EMA).
+            ema = self.stats["accept_rate_ema"]
+            k = max(1, min(self.spec_k, round(ema * (self.spec_k + 1))))
+        self.stats["spec_k_last"] = k
+        steps = self.sched.schedule_decode(k)
         if not steps:
             return
-        kw = self.spec_k + 1
+        kw = k + 1
         toks = np.zeros((self.max_batch, kw), np.int32)
         dl = np.zeros((self.max_batch,), np.int32)
         cl = np.zeros((self.max_batch,), np.int32)
@@ -817,6 +856,7 @@ class ServingEngine:
         self.stats["decode_steps"] += 1
         self.stats["decode_slot_steps"] += len(steps)
         self._count_triplets(self.max_batch, kw)
+        step_drafted = step_accepted = 0
         for step in steps:
             slot = step.slot
             st = self.sched.running[slot]
@@ -846,6 +886,10 @@ class ServingEngine:
                 a += 1
             self.stats["draft_tokens"] += c - 1
             self.stats["draft_accepted"] += a - 1
+            st.drafted += c - 1
+            st.accepted += a - 1
+            step_drafted += c - 1
+            step_accepted += a - 1
             status, used = "running", 0
             for j in range(a):
                 tok = int(t[j])
@@ -874,6 +918,11 @@ class ServingEngine:
             if self.prefix_caching:
                 self.cache.register_pages(
                     slot, self.sched.running[slot].tokens())
+        if step_drafted:
+            rate = step_accepted / step_drafted
+            ema = self.stats["accept_rate_ema"]
+            self.stats["accept_rate_ema"] = rate if ema == 0.0 \
+                else 0.8 * ema + 0.2 * rate
         if beam_groups:
             tkv = np.asarray(tkv)
             tki = np.asarray(tki)

@@ -128,6 +128,19 @@ class PagedKVCache:
         # fill stay O(new pages) instead of rehashing from position 0
         # (quadratic over a long sequence's lifetime).
         self._slot_chain: dict[int, list[int]] = {}
+        # -- disaggregated handoff state ----------------------------------
+        # Export pins (source side): pages whose contents are being
+        # device-copied to another worker's pools.  A pinned page must
+        # keep its bytes until the copy lands, so eviction (LRU take,
+        # park age-out) skips it and an in-place COW of a refcount-1
+        # published page is forced onto the copy path.  Pins are a
+        # *content* guard, not table references - the refcount ==
+        # table-refs conservation law is untouched.
+        self._export_pins = np.zeros((num_pages,), np.int32)
+        # Staged pages (destination side): taken out of the pool for an
+        # in-flight import but not yet published.  They are neither
+        # free, cached nor owned until publish_staged/abort_staged.
+        self._staged: set[int] = set()
 
     # ------------------------------------------------------------ queries
     @property
@@ -137,8 +150,10 @@ class PagedKVCache:
 
     @property
     def available_page_count(self) -> int:
-        """Pages the allocator can hand out: free + evictable cached."""
-        return len(self._free_pages) + len(self._cached)
+        """Pages the allocator can hand out: free + evictable cached
+        (export-pinned cached pages are claimable but not evictable)."""
+        return len(self._free_pages) + sum(
+            1 for p in self._cached if not self._export_pins[p])
 
     @property
     def free_slot_count(self) -> int:
@@ -189,8 +204,9 @@ class PagedKVCache:
         """
         need_total = self.pages_for(n_tokens + 1)
         need_new = need_total - len(shared)
-        shared_cached = sum(1 for p in shared if p in self._cached)
-        avail = len(self._free_pages) + len(self._cached) - shared_cached
+        shared_cached = sum(1 for p in shared if p in self._cached
+                            and not self._export_pins[p])
+        avail = self.available_page_count - shared_cached
         return bool(self._free_slots and need_total <= self.pages_per_seq
                     and need_new <= avail)
 
@@ -256,25 +272,32 @@ class PagedKVCache:
 
     # ----------------------------------------------------------- allocator
     def _take_page(self) -> int:
-        """Pop a strictly-free page, else evict the LRU cached page."""
+        """Pop a strictly-free page, else evict the LRU (unpinned)
+        cached page."""
         if self._free_pages:
             return self._free_pages.pop()
-        if self._cached:
-            page, _ = self._cached.popitem(last=False)
-            self._unregister(page)
-            return page
+        for page in self._cached:                    # LRU order
+            if not self._export_pins[page]:
+                del self._cached[page]
+                self._unregister(page)
+                return page
         raise RuntimeError("page pool exhausted")
 
     def _park(self, page: int) -> None:
         """Drop a published page whose last reference just fell: park it
         in the cached LRU (still claimable by an identical prefix),
-        aging out the oldest entries beyond ``max_cached_pages``."""
+        aging out the oldest unpinned entries beyond
+        ``max_cached_pages``."""
         self._cached[page] = None                    # most-recently used
         if self.max_cached_pages is not None:
-            while len(self._cached) > self.max_cached_pages:
-                old, _ = self._cached.popitem(last=False)
-                self._unregister(old)
-                self._free_pages.append(old)
+            over = len(self._cached) - self.max_cached_pages
+            if over > 0:
+                aged = [p for p in self._cached
+                        if not self._export_pins[p]][:over]
+                for old in aged:
+                    del self._cached[old]
+                    self._unregister(old)
+                    self._free_pages.append(old)
 
     def _claim(self, page: int) -> None:
         """Take one reference on a shared/cached page."""
@@ -380,9 +403,10 @@ class PagedKVCache:
         Returns False when no page can be allocated for the copy."""
         pages = self._slot_pages[slot]
         old = pages[idx]
-        if self._refcount[old] == 1 and old not in self._page_hash:
-            return True
-        if self._refcount[old] == 1:
+        pinned = bool(self._export_pins[old])
+        if self._refcount[old] == 1 and not pinned:
+            if old not in self._page_hash:
+                return True
             # Sole owner but published: writes would corrupt the cached
             # prefix other requests may claim, so retract it instead of
             # copying (content diverges from the registered hash).
@@ -392,11 +416,18 @@ class PagedKVCache:
             new = self._take_page()
         except RuntimeError:
             return False
-        self._refcount[old] -= 1
         self._refcount[new] = 1
         self._pending_copies.append((old, new))
         pages[idx] = new
         self.page_table[slot, idx] = new
+        if pinned and self._refcount[old] == 1:
+            # Export-pinned sole owner: the bytes must survive until the
+            # cross-worker copy lands, so even the refcount-1 case goes
+            # through a real copy and the original parks/frees via the
+            # normal last-reference path (still pinned, never evicted).
+            self._drop_ref(old)
+        else:
+            self._refcount[old] -= 1
         return True
 
     def ensure_capacity(self, slot: int, n_tokens: int) -> bool:
@@ -507,6 +538,93 @@ class PagedKVCache:
             del chain[n_tokens // self.page_size:]
         self.seq_lens[slot] = n_tokens
 
+    # ------------------------------------------------- disaggregated handoff
+    def export_prefix(self, tokens: list[int]) -> tuple[list[int],
+                                                        list[int]]:
+        """Source side of a prefill->decode handoff: the longest
+        already-materialized run of full pages covering ``tokens``, as
+        parallel ``(pages, hashes)`` lists, with every returned page
+        *export-pinned*.
+
+        Unlike :meth:`lookup_prefix` the match is NOT capped at
+        ``(len - 1) // page_size``: the importer claims through its own
+        admission path, which re-applies the one-token-to-compute cap -
+        shipping the final full page too lets the decode worker prefill
+        only the partial tail.  Pins nest (a page may back several
+        in-flight exports) and must be released with
+        :meth:`release_export` once the device copy has landed (or the
+        handoff is abandoned).  Pinned pages are never evicted, never
+        age out of the LRU, and never have their bytes overwritten by an
+        in-place COW - the content stays valid for the whole window.
+        """
+        pages: list[int] = []
+        hashes: list[int] = []
+        for h in self._chain_hashes(tokens):
+            page = self._hash_page.get(h)
+            if page is None:
+                break
+            pages.append(page)
+            hashes.append(h)
+        for p in pages:
+            self._export_pins[p] += 1
+        return pages, hashes
+
+    def release_export(self, pages: list[int]) -> None:
+        """Drop one export pin from each page (copy landed / abandoned)."""
+        for p in pages:
+            assert self._export_pins[p] > 0, \
+                f"release_export of unpinned page {p}"
+            self._export_pins[p] -= 1
+
+    def stage_pages(self, n: int) -> list[int]:
+        """Destination side: take ``n`` pages out of the pool for an
+        in-flight import.  Staged pages are neither free, cached nor
+        owned (refcount 0, unpublished) until :meth:`publish_staged`
+        inserts them into the prefix table or :meth:`abort_staged`
+        returns them.  Raises RuntimeError when the pool cannot supply
+        ``n`` pages (the caller falls back to a plain submit)."""
+        if n < 0:
+            raise ValueError(f"n must be >= 0, got {n}")
+        if n > self.available_page_count:
+            raise RuntimeError(
+                f"cannot stage {n} pages "
+                f"(available {self.available_page_count})")
+        out = [self._take_page() for _ in range(n)]
+        self._staged.update(out)
+        return out
+
+    def publish_staged(self, pages: list[int],
+                       hashes: list[int]) -> list[int]:
+        """Commit an import: the device copy into ``pages`` has landed
+        and ``hashes`` are their chain hashes (from the exporter's
+        :meth:`export_prefix`).  Each page is published into the prefix
+        table and parked in the cached LRU - claimable by the very next
+        admission exactly like a locally-retired prefix.  A hash this
+        pool already holds keeps its canonical page; the duplicate
+        staged page is freed.  Returns the pages actually published.
+        """
+        assert len(pages) == len(hashes)
+        published = []
+        for page, h in zip(pages, hashes):
+            assert page in self._staged, f"publish of unstaged page {page}"
+            self._staged.discard(page)
+            if h in self._hash_page:
+                self._free_pages.append(page)
+                continue
+            self._page_hash[page] = h
+            self._hash_page[h] = page
+            self._park(page)
+            published.append(page)
+        return published
+
+    def abort_staged(self, pages: list[int]) -> None:
+        """Mid-handoff cancellation: return staged pages to the free
+        list without publishing (their contents are garbage)."""
+        for page in pages:
+            assert page in self._staged, f"abort of unstaged page {page}"
+            self._staged.discard(page)
+            self._free_pages.append(page)
+
     # ---------------------------------------------------------- integrity
     def check_invariants(self) -> None:
         """Raises AssertionError if the pool bookkeeping is inconsistent."""
@@ -522,20 +640,32 @@ class PagedKVCache:
         free = set(self._free_pages)
         cached = set(self._cached)
         owned = set(refs)
+        staged = set(self._staged)
         assert len(free) == len(self._free_pages), "duplicate free page"
         assert not (free & owned), "page both free and owned"
         assert not (cached & owned), "page both cached and owned"
         assert not (free & cached), "page both free and cached"
-        assert len(free) + len(cached) + len(owned) == self.num_pages, \
-            "page leak"
+        assert not (staged & (free | cached | owned)), \
+            "staged page also free/cached/owned"
+        assert len(free) + len(cached) + len(owned) + len(staged) == \
+            self.num_pages, "page leak"
         for p in cached:
             assert p in self._page_hash, "cached page without a hash"
         if self.max_cached_pages is not None:
-            assert len(cached) <= self.max_cached_pages, \
+            pinned_cached = sum(1 for p in cached if self._export_pins[p])
+            assert len(cached) - pinned_cached <= self.max_cached_pages, \
                 f"cached LRU over its cap: {len(cached)} > " \
-                f"{self.max_cached_pages}"
+                f"{self.max_cached_pages} (+{pinned_cached} pinned)"
         for p in free:
             assert p not in self._page_hash, "free page still published"
+        for p in staged:
+            assert p not in self._page_hash, "staged page published"
+            assert int(self._refcount[p]) == 0, "staged page referenced"
+        assert (self._export_pins >= 0).all(), "negative export pin"
+        for p in np.nonzero(self._export_pins)[0].tolist():
+            assert p not in free, f"export-pinned page {p} on free list"
+            assert p in self._page_hash, \
+                f"export-pinned page {p} unpublished"
         assert {p: h for h, p in self._hash_page.items()} == \
             self._page_hash, "hash table not a bijection"
         assert not (set(self._free_slots) & set(self._slot_pages)), \

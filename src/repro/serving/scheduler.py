@@ -152,6 +152,11 @@ class FinishedRequest:
     # completions[0] for groups.
     prompt_logprobs: list[float | None] | None = None
     token_logprobs: list[float] | None = None
+    # Speculative-decode draft quality for THIS request: accepted /
+    # proposed over its lifetime (survives preemption replay).  None
+    # when no draft was ever proposed for it (spec_k == 0, groups,
+    # too-short streams) - never NaN.
+    accept_rate: float | None = None
 
 
 @dataclasses.dataclass
@@ -245,6 +250,9 @@ class _Running:
     queue_seq: int = 0                # waiting order within a class
     fair_round: int = 0               # tenant round-robin round (see
     #                                   Scheduler._waiting_key)
+    # Speculative-draft quality (engine fills these in its accept loop):
+    drafted: int = 0                  # draft tokens proposed for this slot
+    accepted: int = 0                 # ... of which the sampler confirmed
 
     def __post_init__(self):
         # Maintained incrementally by record_token: tokens() is on the
@@ -655,12 +663,14 @@ class Scheduler:
         if st.first_token_time is not None:
             ttft = st.first_token_time - st.submit_time
         lp = st.req.logprobs
+        rate = st.accepted / st.drafted if st.drafted else None
         return FinishedRequest(rid=st.req.rid, prompt=st.req.prompt,
                                tokens=st.generated, reason=reason,
                                preemptions=st.preemptions, ttft=ttft,
                                prompt_logprobs=st.prompt_lps if lp else None,
                                token_logprobs=list(st.token_logprobs)
-                               if lp else None)
+                               if lp else None,
+                               accept_rate=rate)
 
     def finish(self, slot: int, reason: str) -> FinishedRequest | None:
         """Group-aware retirement: a plain sequence retires immediately;

@@ -1,0 +1,240 @@
+"""Conformance suite: prefill/decode disaggregated serving.
+
+The contract (:mod:`repro.serving.disagg`): running a request's prompt
+on a *prefill worker* and its generation on a *decode worker* - with
+the prompt's KV pages shipped across pools through the chain-hash
+manifest - must stream **token-identical** output to the same request
+on a single engine.  Pinned here as a matrix:
+
+  * decode mode: greedy x seeded-sampled x speculative x beam search;
+  * attention rail: fp (fa2) x hfa (FIX16/PWL log-domain);
+  * page codec: fp x int8 x log16 (quantized pages are copied raw -
+    codec sidecars ride the same layer tree).
+
+Plus the lifecycle edges: mid-handoff cancellation (abort returns
+staged pages, releases export pins, both pools invariant-clean),
+duplicate-prefix handoffs (staged dupes freed, pages shared), and the
+staging-fallback path (decode pool too small: the request is served by
+plain recompute, still token-exact).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.serving import (DisaggPair, Request, SamplingParams,
+                           ServingEngine)
+
+
+@pytest.fixture(scope="module")
+def qwen_smoke():
+    from repro.configs import get_config
+    from repro.models.model import build_model
+    cfg = get_config("qwen3-1.7b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def qwen_hfa(qwen_smoke):
+    from repro.models.model import build_model
+    cfg, _, params = qwen_smoke
+    cfg = dataclasses.replace(cfg, attn_impl="hfa")
+    return cfg, build_model(cfg), params
+
+
+def _rail(rail, qwen_smoke, qwen_hfa):
+    return qwen_smoke if rail == "fp" else qwen_hfa
+
+
+def _requests(cfg, mode, n=3, seed=211):
+    """A small arrival trace for ``mode``; prompts long enough that at
+    least one full page (page_size=4) is handed off per request."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        prompt = rng.integers(1, cfg.vocab_size,
+                              int(rng.integers(6, 14))).tolist()
+        mnt = int(rng.integers(4, 8))
+        if mode == "sampled":
+            reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=mnt,
+                                sampling=SamplingParams(temperature=0.8,
+                                                        top_k=16,
+                                                        seed=500 + i)))
+        elif mode == "beam":
+            reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=mnt,
+                                beam_width=2, n=2))
+        else:                              # greedy / spec share requests
+            reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=mnt))
+    return reqs
+
+
+def _clone(reqs):
+    """Fresh Request objects so the two runs share no mutable state."""
+    return [dataclasses.replace(r, prompt=list(r.prompt)) for r in reqs]
+
+
+def _result_key(fin):
+    """Everything a client can observe, per rid."""
+    out = {}
+    for f in fin:
+        comps = None if f.completions is None else \
+            [(c.tokens, c.branch, c.reason) for c in f.completions]
+        out[f.rid] = (f.tokens, f.reason, comps)
+    return out
+
+
+def _run_matrix(model, params, reqs, *, codec="fp", spec_k=0,
+                pool_kw=None):
+    """Single-engine gold run vs DisaggPair run on cloned requests;
+    returns (gold, got, pair)."""
+    kw = dict(max_batch=3, page_size=4, max_seq=64, spec_k=spec_k,
+              kv_codec=codec)
+    kw.update(pool_kw or {})
+    arrivals = lambda rs: [(i, r) for i, r in enumerate(rs)]
+    single = ServingEngine(model, params, **kw)
+    gold = _result_key(single.run(arrivals(_clone(reqs))))
+    pair = DisaggPair(ServingEngine(model, params, **kw),
+                      ServingEngine(model, params, **kw))
+    got = _result_key(pair.run(arrivals(_clone(reqs))))
+    return gold, got, pair
+
+
+# ------------------------------------------------- token-parity matrix
+@pytest.mark.parametrize("rail", ["fp", "hfa"])
+@pytest.mark.parametrize("mode", ["greedy", "sampled", "spec", "beam"])
+def test_disagg_token_parity(qwen_smoke, qwen_hfa, rail, mode):
+    """Prefill-on-A / decode-on-B == single engine, token for token,
+    across decode modes and both attention rails."""
+    cfg, model, params = _rail(rail, qwen_smoke, qwen_hfa)
+    reqs = _requests(cfg, mode)
+    spec_k = 2 if mode == "spec" else 0
+    gold, got, pair = _run_matrix(model, params, reqs, spec_k=spec_k)
+    assert got == gold, (rail, mode)
+    assert pair.stats["handoffs"] == len(reqs)
+    assert pair.stats["handoff_pages"] > 0, "nothing was ever handed off"
+    pair.check_invariants()
+    for cache in (pair.prefill.cache, pair.decode.cache):
+        assert cache.available_page_count == cache.num_pages
+
+
+@pytest.mark.parametrize("rail", ["fp", "hfa"])
+@pytest.mark.parametrize("codec", ["int8", "log16"])
+def test_disagg_token_parity_quantized_pages(qwen_smoke, qwen_hfa, rail,
+                                             codec):
+    """Quantized page pools hand off raw coded bytes (plus codec
+    sidecars): the disaggregated stream must still equal the
+    single-engine stream bit for bit."""
+    cfg, model, params = _rail(rail, qwen_smoke, qwen_hfa)
+    reqs = _requests(cfg, "greedy", seed=223)
+    gold, got, pair = _run_matrix(model, params, reqs, codec=codec)
+    assert got == gold, (rail, codec)
+    assert pair.stats["handoffs"] == len(reqs)
+    pair.check_invariants()
+
+
+def test_disagg_shared_prefix_dedup(qwen_smoke):
+    """Two requests sharing a system prompt: the second handoff's
+    staged pages for the shared pages are duplicates (freed, table
+    entry shared) and output stays token-exact."""
+    cfg, model, params = qwen_smoke
+    rng = np.random.default_rng(227)
+    sysp = rng.integers(1, cfg.vocab_size, 12).tolist()     # 3 full pages
+    reqs = [Request(rid=i,
+                    prompt=sysp + rng.integers(1, cfg.vocab_size,
+                                               3).tolist(),
+                    max_new_tokens=4)
+            for i in range(2)]
+    gold, got, pair = _run_matrix(model, params, reqs)
+    assert got == gold
+    assert pair.stats["handoff_dupes"] >= 3, pair.stats
+    pair.check_invariants()
+
+
+# ------------------------------------------------- lifecycle edges
+def test_disagg_mid_handoff_cancel(qwen_smoke):
+    """Cancellation between stage and commit: abort must return every
+    staged page to the decode worker's free list and release the
+    exporter's pins - no refcount violation, no leaked page, and both
+    workers still serve afterwards."""
+    cfg, model, params = qwen_smoke
+    mk = lambda: ServingEngine(model, params, max_batch=2, page_size=4,
+                               max_seq=48)
+    pair = DisaggPair(mk(), mk())
+    req = Request(rid=0, prompt=list(range(1, 14)), max_new_tokens=4)
+    h = pair.start_handoff(req)
+    assert h is not None and len(h.src_pages) == 3
+    # mid-handoff: staged pages are neither free nor owned, exporter
+    # pinned - and the books still balance
+    pair.check_invariants()
+    assert pair.decode.cache.available_page_count == \
+        pair.decode.cache.num_pages - len(h.dst_pages)
+    pair.abort(h)
+    assert h.state == "aborted"
+    pair.check_invariants()
+    assert pair.decode.cache.available_page_count == \
+        pair.decode.cache.num_pages
+    assert not np.any(pair.prefill.cache._export_pins)
+    assert pair.stats["handoff_aborts"] == 1
+    # both workers still serve; the prefill worker's parked prefix is
+    # claimable again (pins gone), so a retried handoff succeeds
+    h2 = pair.start_handoff(req)
+    assert h2 is not None and h2.hashes == h.hashes
+    pair.commit(h2)
+    [fin] = pair.decode.run([(0, req)])
+    assert fin.reason in ("eos", "length")
+    pair.check_invariants()
+
+
+def test_disagg_stage_fallback_when_pool_busy(qwen_smoke):
+    """A decode pool with too few claimable pages to stage the
+    transfer (the rest pinned under a live sequence): start_handoff
+    returns None (fallback counted), the exporter's pins are released,
+    and plain submission still serves the request token-exactly (the
+    decode worker recomputes the prompt)."""
+    cfg, model, params = qwen_smoke
+    req = Request(rid=0, prompt=list(range(1, 14)), max_new_tokens=4)
+    gold_engine = ServingEngine(model, params, max_batch=2, page_size=4,
+                                max_seq=32)
+    [gold] = gold_engine.run([(0, dataclasses.replace(
+        req, prompt=list(req.prompt)))])
+    pair = DisaggPair(
+        ServingEngine(model, params, max_batch=2, page_size=4,
+                      max_seq=32),
+        ServingEngine(model, params, max_batch=2, page_size=4,
+                      num_pages=8, max_seq=32))
+    # a live sequence holds 6 of the decode worker's 8 pages: staging
+    # the 3-page transfer must fail over, not evict live KV
+    busy = pair.decode.cache.alloc_slot(21)
+    h = pair.start_handoff(dataclasses.replace(req,
+                                               prompt=list(req.prompt)))
+    assert h is None
+    assert pair.stats["handoff_fallbacks"] == 1
+    assert not np.any(pair.prefill.cache._export_pins)
+    pair.check_invariants()
+    pair.decode.cache.free_slot(busy)
+    [fin] = pair.decode.run([(0, dataclasses.replace(
+        req, prompt=list(req.prompt)))])
+    assert fin.tokens == gold.tokens
+    pair.check_invariants()
+
+
+def test_disagg_validation():
+    """Mismatched page geometry / codec / prefix caching is refused up
+    front - silently copying pages between incompatible pools would
+    corrupt KV."""
+    class _Stub:
+        def __init__(self, page_size=4, kv_codec="fp",
+                     prefix_caching=True):
+            self.page_size = page_size
+            self.kv_codec = kv_codec
+            self.prefix_caching = prefix_caching
+    with pytest.raises(ValueError, match="page_size"):
+        DisaggPair(_Stub(page_size=4), _Stub(page_size=8))
+    with pytest.raises(ValueError, match="kv_codec"):
+        DisaggPair(_Stub(kv_codec="fp"), _Stub(kv_codec="int8"))
+    with pytest.raises(ValueError, match="prefix_caching"):
+        DisaggPair(_Stub(), _Stub(prefix_caching=False))

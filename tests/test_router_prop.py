@@ -1,0 +1,237 @@
+"""Property-based tests for the multi-replica router placement core.
+
+Random traces of admit / finish / replica-down / replica-up /
+publish-prefix events flow through :class:`repro.serving.router.
+RouterCore`, with the replica chain-hash tables modeled as plain sets
+(exactly the ``in``-only surface the live system's ``_hash_page``
+dicts expose).  After every event:
+
+  * *no request lost or double-placed*: the placement map covers
+    exactly the admitted-minus-finished-minus-lost rids, each on one
+    live replica, and per-replica load equals the number of placements
+    it carries (zero for dead replicas);
+  * *prefix-hit placement*: whenever any live replica's table holds a
+    (longest) chain-hash prefix of the request, the chosen replica ties
+    that maximum - a request never recomputes KV a live replica
+    already holds;
+  * *least-loaded fallback bounds*: with no prefix hit anywhere, the
+    chosen replica carried the minimum load among live replicas at
+    placement time (ties to the lowest index);
+  * ``down`` returns exactly the in-flight rids that were placed on
+    the dead replica (the caller's re-place set), and is idempotent;
+  * placement on an empty live set raises, double-placement raises.
+
+Runs through hypothesis when installed, through a numpy manual-trace
+battery otherwise.  Pure host logic, no jax.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # manual traces only
+    HAVE_HYPOTHESIS = False
+
+from repro.serving.router import RouterCore
+
+N_REPLICAS = 4
+N_CHAINS = 6          # distinct prompt families in a trace
+MAX_DEPTH = 5         # chain-hash pages per family
+
+N_OPS = 6
+
+
+def manual_traces(n_traces, max_len, n_ops, seed=0):
+    rng = np.random.default_rng(seed)
+    for _ in range(n_traces):
+        length = int(rng.integers(1, max_len + 1))
+        yield [(int(rng.integers(0, n_ops)), int(rng.integers(0, 10 ** 6)))
+               for _ in range(length)]
+
+
+def _chain(base: int, depth: int) -> list[tuple[int, int]]:
+    """Chain hashes of a prompt family: hash i covers pages 0..i, so a
+    table holding ``_chain(b, k)`` holds every shorter prefix too."""
+    return [(base, i) for i in range(depth)]
+
+
+class _Driver:
+    """Drives RouterCore the way Router does, with oracle bookkeeping
+    (expected placement/load recomputed independently) checked after
+    every event."""
+
+    def __init__(self):
+        self.tables = [set() for _ in range(N_REPLICAS)]
+        self.core = RouterCore(self.tables)
+        self.rid = 0
+        self.in_flight: dict[int, tuple[int, list]] = {}  # rid -> (rep, h)
+        self.finished: set[int] = set()
+        self.lost: set[int] = set()
+
+    # ------------------------------------------------------------ checks
+    def check(self):
+        core = self.core
+        assert core.live <= set(range(N_REPLICAS))
+        assert set(core.placement) == set(self.in_flight), \
+            "placement map lost or kept the wrong rids"
+        for rid, (replica, _h) in self.in_flight.items():
+            assert core.placement[rid] == replica, "request moved"
+        for i in range(N_REPLICAS):
+            expect = sum(1 for r in core.placement.values() if r == i)
+            if i in core.live:
+                assert core.load[i] == expect, (i, core.load, expect)
+            else:
+                assert core.load[i] == 0, "dead replica carries load"
+        # disjoint request lifecycles
+        assert not (set(self.in_flight) & self.finished)
+        assert not (set(self.in_flight) & self.lost)
+
+    # --------------------------------------------------------------- ops
+    def _hashes(self, rng):
+        base = int(rng.integers(0, N_CHAINS))
+        depth = int(rng.integers(0, MAX_DEPTH + 1))
+        return _chain(base, depth)
+
+    def place(self, rng):
+        hashes = self._hashes(rng)
+        if not self.core.live:
+            with pytest.raises(RuntimeError):
+                self.core.place(self.rid, hashes)
+            return
+        # oracle: best (-hits, load, index) over live replicas
+        want = min(sorted(self.core.live),
+                   key=lambda i: (-self.core.prefix_hits(i, hashes),
+                                  self.core.load[i], i))
+        want_load = self.core.load[want]
+        min_load = min(self.core.load[i] for i in self.core.live)
+        got = self.core.place(self.rid, hashes)
+        assert got == want, (got, want)
+        got_hits = self.core.prefix_hits(got, hashes)
+        max_hits = max(self.core.prefix_hits(i, hashes)
+                       for i in self.core.live)
+        assert got_hits == max_hits, "a better prefix replica was live"
+        if max_hits == 0:
+            # pure load-balance fallback: minimal load, lowest index tie
+            assert want_load == min_load
+        self.in_flight[self.rid] = (got, hashes)
+        # double-placement is refused
+        with pytest.raises(ValueError):
+            self.core.place(self.rid, hashes)
+        self.rid += 1
+
+    def finish(self, rng):
+        if not self.in_flight:
+            return
+        rids = sorted(self.in_flight)
+        rid = rids[int(rng.integers(len(rids)))]
+        replica, _ = self.in_flight.pop(rid)
+        got = self.core.finish(rid)
+        assert got == replica
+        self.finished.add(rid)
+
+    def down(self, rng):
+        replica = int(rng.integers(0, N_REPLICAS))
+        expect = sorted(rid for rid, (r, _) in self.in_flight.items()
+                        if r == replica and replica in self.core.live)
+        lost = self.core.down(replica)
+        assert lost == expect, "down() must return exactly the dead "\
+            "replica's in-flight rids"
+        for rid in lost:
+            del self.in_flight[rid]
+            self.lost.add(rid)
+        assert self.core.down(replica) == []          # idempotent
+        assert replica not in self.core.live
+
+    def up(self, rng):
+        replica = int(rng.integers(0, N_REPLICAS))
+        self.core.up(replica)
+        assert replica in self.core.live
+        self.core.up(replica)                          # idempotent
+
+    def publish(self, rng):
+        """A replica retires (or imports, via disagg handoff) a prompt
+        prefix: its table gains the chain - future placements of that
+        family must prefer it."""
+        replica = int(rng.integers(0, N_REPLICAS))
+        base = int(rng.integers(0, N_CHAINS))
+        depth = int(rng.integers(1, MAX_DEPTH + 1))
+        self.tables[replica].update(_chain(base, depth))
+
+    def evict(self, rng):
+        """LRU aging on a replica: its table shrinks from the *tail* of
+        a chain (the head hash ages out last in the real cache only in
+        adversarial orders - the router must not assume either)."""
+        replica = int(rng.integers(0, N_REPLICAS))
+        if self.tables[replica]:
+            drop = sorted(self.tables[replica])
+            k = int(rng.integers(1, len(drop) + 1))
+            for h in drop[:k]:
+                self.tables[replica].discard(h)
+
+
+def _run_trace(ops):
+    d = _Driver()
+    dispatch = [d.place, d.place, d.finish, d.down, d.up, d.publish]
+    assert len(dispatch) == N_OPS
+    for code, seed in ops:
+        rng = np.random.default_rng(seed)
+        dispatch[code](rng)
+        if rng.random() < 0.2:
+            d.evict(rng)
+        d.check()
+    # teardown: finish everything in flight; the router is empty
+    for rid in sorted(d.in_flight):
+        d.core.finish(rid)
+    assert not d.core.placement
+    for i in d.core.live:
+        assert d.core.load[i] == sum(
+            1 for r in d.core.placement.values() if r == i) == 0
+
+
+if HAVE_HYPOTHESIS:
+    op_strategy = st.lists(
+        st.tuples(st.integers(0, N_OPS - 1), st.integers(0, 10 ** 6)),
+        min_size=1, max_size=120)
+
+    @settings(max_examples=80, deadline=None)
+    @given(ops=op_strategy)
+    def test_router_random_trace(ops):
+        _run_trace(ops)
+
+
+def test_router_trace_manual():
+    """No-hypothesis fallback: the same driver over numpy traces."""
+    for i in range(5):
+        for ops in manual_traces(60, 120, N_OPS, seed=300 + i):
+            _run_trace(ops)
+
+
+# ----------------------------------------------------- directed checks
+def test_router_prefers_longest_prefix():
+    tables = [set(_chain(0, 1)), set(_chain(0, 3)), set()]
+    core = RouterCore(tables)
+    assert core.place(0, _chain(0, 4)) == 1        # 3 hits beat 1
+    assert core.place(1, _chain(5, 2)) == 0        # no hits: least loaded
+    # replica 1 down: the shorter prefix still beats a cold replica
+    assert core.down(1) == [0]
+    assert core.place(2, _chain(0, 4)) == 0
+
+
+def test_router_tie_breaks_load_then_index():
+    core = RouterCore([set(), set(), set()])
+    assert core.place(0, []) == 0
+    assert core.place(1, []) == 1
+    assert core.place(2, []) == 2
+    core.finish(1)
+    assert core.place(3, []) == 1                  # least loaded wins
+    assert core.place(4, []) == 0                  # tie: lowest index
+
+
+def test_router_needs_a_replica():
+    with pytest.raises(ValueError):
+        RouterCore([])
+    core = RouterCore([set()])
+    core.down(0)
+    with pytest.raises(RuntimeError):
+        core.place(0, [])

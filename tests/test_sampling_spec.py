@@ -303,3 +303,68 @@ def test_propose_draft_prompt_lookup():
     assert propose_draft([1, 2, 1, 2], 0) == []
     assert propose_draft([], 4) == []
     assert propose_draft([5], 4) == []
+
+
+# ------------------------------------------- (d) draft-quality autotune
+def test_spec_auto_token_exact_and_stats(qwen_smoke):
+    """spec_k="auto": the engine tunes its per-step draft depth from
+    the accept-rate EMA.  The stream stays token-exact (speculation is
+    lossless at every depth), the EMA/spec_k_last stats populate, and
+    every finished request reports its lifetime accept_rate in [0, 1].
+    Deterministic: greedy decode, fixed prompts."""
+    cfg, model, params = qwen_smoke
+    rng = np.random.default_rng(113)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        int(rng.integers(4, 10))).tolist(),
+                    max_new_tokens=12)
+            for i in range(3)]
+    gold = {r.rid: _reference_stream(model, params, r, 64) for r in reqs}
+    engine = ServingEngine(model, params, max_batch=3, page_size=4,
+                           max_seq=64, spec_k="auto")
+    assert engine.auto_spec and engine.spec_k == engine.AUTO_SPEC_KMAX
+    finished = engine.run([(i, r) for i, r in enumerate(reqs)])
+    engine.cache.check_invariants()
+    for f in finished:
+        assert f.tokens == gold[f.rid], f.rid
+        assert f.accept_rate is not None and 0.0 <= f.accept_rate <= 1.0
+    assert engine.stats["draft_tokens"] > 0
+    assert 0.0 < engine.stats["accept_rate_ema"] <= 1.0
+    assert 1 <= engine.stats["spec_k_last"] <= engine.AUTO_SPEC_KMAX
+
+
+def test_spec_auto_depth_tracks_accept_rate(qwen_smoke):
+    """The depth schedule is a pure function of the EMA:
+    k = clamp(round(ema * (kmax + 1)), 1, kmax).  Pin it at the
+    boundary EMAs by priming the stat before a single step."""
+    cfg, model, params = qwen_smoke
+    rng = np.random.default_rng(127)
+    prompt = rng.integers(1, cfg.vocab_size, 6).tolist()
+    for ema, want in ((0.0, 1), (0.6, 3), (1.0, 4)):
+        engine = ServingEngine(model, params, max_batch=2, page_size=4,
+                               max_seq=48, spec_k="auto")
+        engine.stats["accept_rate_ema"] = ema
+        engine.submit(Request(rid=0, prompt=list(prompt),
+                              max_new_tokens=4))
+        engine.step()               # prefill
+        engine.step()               # first auto-depth decode step
+        assert engine.stats["spec_k_last"] == want, \
+            (ema, engine.stats["spec_k_last"])
+
+
+def test_spec_accept_rate_none_without_drafts(qwen_smoke):
+    """spec_k=0 never drafts: accept_rate must be None (never NaN) and
+    the EMA stays at its 0.0 init."""
+    cfg, model, params = qwen_smoke
+    rng = np.random.default_rng(131)
+    engine = ServingEngine(model, params, max_batch=2, page_size=4,
+                           max_seq=48)
+    [f] = engine.run([(0, Request(
+        rid=0, prompt=rng.integers(1, cfg.vocab_size, 5).tolist(),
+        max_new_tokens=5))])
+    assert f.accept_rate is None
+    assert engine.stats["accept_rate_ema"] == 0.0
+    assert engine.stats["spec_k_last"] == 0
+    with pytest.raises(ValueError, match="spec_k"):
+        ServingEngine(model, params, max_batch=2, page_size=4,
+                      max_seq=48, spec_k="fast")

@@ -29,9 +29,10 @@ from repro.kernels import paged_decode as paged_k  # noqa: E402
 REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
-def _run(code: str) -> str:
+def _run(code: str, devices: int = 2) -> str:
     env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = REPO_SRC
     proc = subprocess.run([sys.executable, "-c", code], env=env,
                           capture_output=True, text=True, timeout=600)
@@ -316,6 +317,119 @@ for codec in ("int8", "log16"):
         assert all(s.data.nbytes == leaf.nbytes // 2
                    for s in leaf.addressable_shards)
     print(codec, "OK")
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_tp_dp_engine_token_exact_vs_tp_only():
+    """Composed tp x dp mesh (4 simulated devices, batch sharded over
+    the "data" axis) must be *token-identical* to the tp-only engine on
+    the same batch - across plain greedy decode, chunked prefill, and
+    speculative verify - because every data shard applies the full
+    batch's KV scatter and its local partials merge through the same
+    neutral-element ACC algebra.  The pool replicates over "data": each
+    of the 4 shards holds total/tp bytes."""
+    out = _run("""
+import jax, numpy as np
+from repro.configs import get_config
+from repro.models.model import build_model
+from repro.serving import Request, SamplingParams, ServingEngine
+from repro.launch.mesh import make_tp_dp_mesh, make_tp_mesh
+
+cfg = get_config("qwen3-1.7b").reduced()
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+prompts = [rng.integers(1, cfg.vocab_size, 12).tolist() for _ in range(6)]
+
+def run(mesh, spec_k, sampling, budget=16):
+    eng = ServingEngine(model, params, max_batch=4, page_size=8,
+                        max_seq=64, prefill_budget=budget, spec_k=spec_k,
+                        mesh=mesh)
+    arrivals = [(i, Request(rid=i, prompt=list(p), max_new_tokens=8,
+                            sampling=sampling)) for i, p in
+                enumerate(prompts)]
+    fin = eng.run(arrivals)
+    eng.cache.check_invariants()
+    return {f.rid: tuple(f.tokens) for f in fin}, eng
+
+tp = make_tp_mesh(2)
+tpdp = make_tp_dp_mesh(2, 2)
+sp = SamplingParams(temperature=0.8, top_k=4, seed=7)
+for spec_k, sampling in ((0, None), (2, None), (0, sp)):
+    t1, e1 = run(tp, spec_k, sampling)
+    t2, e2 = run(tpdp, spec_k, sampling)
+    assert t1 == t2, (spec_k, sampling, t1, t2)
+    assert e2.tp == 2 and e2.dp == 2
+    # pool bytes: sharded over tp, REPLICATED over dp
+    assert e2.pool_bytes_per_shard() == e1.pool_bytes_per_shard()
+    for leaf in jax.tree.leaves(e2.layers):
+        shards = leaf.addressable_shards
+        assert len(shards) == 4
+        assert all(s.data.nbytes == leaf.nbytes // 2 for s in shards)
+    print("case", spec_k, sampling is not None, "OK")
+print("OK")
+""", devices=4)
+    assert "OK" in out
+
+
+def test_dp_engine_rejects_indivisible_batch():
+    """dp must divide max_batch (the slot dim is sharded evenly);
+    anything else is an early explicit error, not a silent wrong
+    shard - and a non-divisible *runtime* batch falls back to the
+    replicated compute path rather than failing."""
+    out = _run("""
+import jax, numpy as np
+from repro.configs import get_config
+from repro.models.model import build_model
+from repro.serving import Request, ServingEngine
+from repro.launch.mesh import make_tp_dp_mesh
+
+cfg = get_config("qwen3-1.7b").reduced()
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+mesh = make_tp_dp_mesh(1, 2)
+try:
+    ServingEngine(model, params, max_batch=3, page_size=8, max_seq=32,
+                  mesh=mesh)
+    raise SystemExit("expected ValueError")
+except ValueError as e:
+    assert "dp=2" in str(e) and "divide" in str(e), e
+# divisible batch works end to end on a dp-only mesh
+eng = ServingEngine(model, params, max_batch=2, page_size=8, max_seq=32,
+                    mesh=mesh)
+assert eng.tp == 1 and eng.dp == 2
+rng = np.random.default_rng(5)
+fin = eng.run([(i, Request(rid=i,
+                           prompt=rng.integers(1, cfg.vocab_size,
+                                               9).tolist(),
+                           max_new_tokens=5)) for i in range(3)])
+assert sorted(f.rid for f in fin) == [0, 1, 2]
+eng.cache.check_invariants()
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_make_tp_dp_mesh_validation():
+    """Mesh construction errors early and by name when the simulated
+    device pool cannot cover dp * tp."""
+    out = _run("""
+from repro.launch.mesh import make_tp_dp_mesh
+mesh = make_tp_dp_mesh(2, 1)
+assert dict(mesh.shape) == {"data": 1, "model": 2}, dict(mesh.shape)
+try:
+    make_tp_dp_mesh(2, 2)           # needs 4, only 2 simulated
+    raise SystemExit("expected RuntimeError")
+except RuntimeError as e:
+    assert "xla_force_host_platform_device_count" in str(e), e
+for bad in ((0, 1), (1, 0)):
+    try:
+        make_tp_dp_mesh(*bad)
+        raise SystemExit("expected ValueError")
+    except ValueError:
+        pass
 print("OK")
 """)
     assert "OK" in out

@@ -50,6 +50,7 @@ RUNS = [
     ("kv_int8", ["--kv-codec", "int8"]),
     ("open_loop", ["--workload", "open-loop"]),
     ("http_open_loop", ["--workload", "open-loop", "--transport", "http"]),
+    ("disagg", ["--disagg"]),
 ]
 
 # Wall-clock factor: a metric may be this many times worse than the

@@ -86,6 +86,16 @@ SMOKES = [
     ("bench-tp-spec",
      "Tensor-parallel speculative gate (spec-k parity under TP)",
      BENCH + ["--tp", "2", "--spec-k", "4", "--smoke"]),
+    ("serve-disagg",
+     "Disaggregated 2-replica router smoke (tp x dp mesh, prefix-aware "
+     "placement, refcount-clean)",
+     ["-m", "repro.launch.serve_http", "--arch", "qwen3-1.7b",
+      "--reduced", "--replicas", "2", "--dp", "2", "--batch", "4",
+      "--smoke"]),
+    ("bench-disagg",
+     "Prefill/decode disaggregation gate (token parity, zero page "
+     "leaks, handoffs committed)",
+     BENCH + ["--disagg", "--smoke"]),
 ]
 
 
